@@ -1,0 +1,155 @@
+"""Shared benchmark harness: tiny-teacher pretraining (stands in for the
+paper's downloaded checkpoints), router distillation, timing, CSV output.
+
+Every bench prints `name,us_per_call,derived` rows (harness contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ElasticConfig, get_config
+from repro.data import LMDataPipeline, procedural_images
+from repro.models import forward, model_init, router_init
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.training import init_train_state, lm_loss, make_loss_fn, make_train_step
+
+CACHE = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+CACHE_VERSION = 3   # bump when model/init code changes to invalidate pickles
+SEQ, BATCH = 64, 8
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, iters: int = 3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters * 1e6
+
+
+def toy_cfg(**kw):
+    cfg = get_config("toy-lm")
+    return dataclasses.replace(cfg, dtype="float32", **kw)
+
+
+@functools.lru_cache(maxsize=4)
+def pretrained_teacher(steps: int = 300, seed: int = 0, vocab: int = 512):
+    """Train a small LM on the Zipf-Markov corpus until it clearly beats
+    chance; cache to disk (teachers are reused across benches)."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE,
+                        f"teacher_v{CACHE_VERSION}_{steps}_{seed}_{vocab}.pkl")
+    cfg = toy_cfg(vocab_size=vocab)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            params = pickle.load(f)
+        return cfg, jax.tree.map(jnp.asarray, params)
+    key = jax.random.PRNGKey(seed)
+    params = model_init(key, cfg, None)
+    opt = adamw_init(params)
+    pipe = LMDataPipeline(vocab=cfg.vocab_size, seq_len=SEQ,
+                          global_batch=BATCH, seed=seed)
+
+    @jax.jit
+    def step(params, opt, tokens):
+        def loss_fn(p):
+            logits, _ = forward(p, None, {"tokens": tokens}, cfg, None,
+                                mode="base")
+            return lm_loss(logits, tokens)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(g, opt, params,
+                                      lr=cosine_schedule(3e-3, steps))
+        return params, opt, loss
+
+    for i in range(steps):
+        params, opt, loss = step(params, opt, jnp.asarray(pipe.batch_at(i)))
+    with open(path, "wb") as f:
+        pickle.dump(jax.device_get(params), f)
+    return cfg, params
+
+
+@functools.lru_cache(maxsize=2)
+def pretrained_vit_teacher(steps: int = 300, seed: int = 0):
+    """MAE-style pretrained toy ViT encoder (stands in for ViT-MAE-L):
+    mask 25% of patch embeddings, train the encoder so masked positions
+    reconstruct (cosine) their unmasked input projections. Router
+    robustness (paper Fig. 8) is a property of STRUCTURED representations;
+    a random encoder gives chance-level router overlap."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"vit_v{CACHE_VERSION}_{steps}_{seed}.pkl")
+    cfg = dataclasses.replace(get_config("toy-vit"), dtype="float32")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return cfg, jax.tree.map(jnp.asarray, pickle.load(f))
+    key = jax.random.PRNGKey(seed)
+    params = model_init(key, cfg, None)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, emb, mask):
+        def loss_fn(p):
+            x0 = emb @ p["in_proj"]
+            out, _ = forward(p, None, {"embeds": emb * (1 - mask)},
+                             cfg, None, mode="base")
+            num = jnp.sum(out * x0, -1)
+            den = (jnp.linalg.norm(out, axis=-1)
+                   * jnp.linalg.norm(x0, axis=-1) + 1e-6)
+            return jnp.mean(mask[..., 0] * (1.0 - num / den))
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(g, opt, params,
+                                      lr=cosine_schedule(3e-3, steps))
+        return params, opt, loss
+
+    for i in range(steps):
+        emb, _ = procedural_images(BATCH, cfg.n_image_tokens,
+                                   cfg.d_frontend, seed=i)
+        mrng = np.random.default_rng(i)
+        mask = (mrng.random((BATCH, cfg.n_image_tokens, 1)) < 0.25)
+        params, opt, loss = step(params, opt, jnp.asarray(emb),
+                                 jnp.asarray(mask, jnp.float32))
+    with open(path, "wb") as f:
+        pickle.dump(jax.device_get(params), f)
+    return cfg, params
+
+
+def eval_lm_loss(params, rparams, cfg, ecfg, mode: str, seed: int = 123,
+                 batches: int = 4):
+    pipe = LMDataPipeline(vocab=cfg.vocab_size, seq_len=SEQ,
+                          global_batch=BATCH, seed=seed)
+
+    @jax.jit
+    def ev(rp, tokens):
+        logits, _ = forward(params, rp, {"tokens": tokens}, cfg, ecfg,
+                            mode=mode)
+        return lm_loss(logits, tokens)
+
+    losses = [float(ev(rparams, jnp.asarray(pipe.batch_at(1000 + i))))
+              for i in range(batches)]
+    return float(np.mean(losses))
+
+
+def distill_routers(params, cfg, ecfg, steps: int = 60, lr: float = 3e-3,
+                    seed: int = 7, data_seed: int = 0):
+    """Train ONLY the ElastiFormer routers by self-distillation."""
+    rp = router_init(jax.random.PRNGKey(seed), cfg, ecfg)
+    state = init_train_state(rp)
+    step_fn = jax.jit(make_train_step(cfg, ecfg, lr=cosine_schedule(lr, steps),
+                                      chunked=True))
+    pipe = LMDataPipeline(vocab=cfg.vocab_size, seq_len=SEQ,
+                          global_batch=BATCH, seed=data_seed)
+    m = {}
+    for i in range(steps):
+        state, m = step_fn(state, params, {"tokens": jnp.asarray(pipe.batch_at(i))})
+    return state.router_params, {k: float(v) for k, v in m.items()}

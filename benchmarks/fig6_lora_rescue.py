@@ -1,0 +1,39 @@
+"""Paper Fig. 6: LoRA adapters (q/v projections) rescue MHA input-subset
+selection. Sweep LoRA rank {0, 1, 4} at token capacity {0.6, 0.8} with
+token routing on BOTH MHA and MLP + expert selection (the paper's combined
+Gemma-2 setting)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (distill_routers, emit, eval_lm_loss,
+                               pretrained_teacher)
+from repro.configs import ElasticConfig
+
+
+def main(steps: int = 40):
+    cfg, params = pretrained_teacher()
+    teacher = eval_lm_loss(params, None, cfg, None, "base")
+    emit("fig6_teacher", 0.0, f"lm_loss={teacher:.4f}")
+    res = {}
+    for cap in (0.6, 0.8):
+        for rank in (0, 1, 4):
+            ecfg = ElasticConfig(
+                mlp_token_capacity=cap, mha_token_capacity=cap,
+                mha_head_topk=None, mlp_n_experts=4, mlp_expert_topk=2,
+                lora_rank=rank)
+            t0 = time.perf_counter()
+            rp, _ = distill_routers(params, cfg, ecfg, steps=steps)
+            dt = (time.perf_counter() - t0) / steps * 1e6
+            loss = eval_lm_loss(params, rp, cfg, ecfg, "train")
+            res[(cap, rank)] = loss
+            emit(f"fig6_cap{cap}_rank{rank}", dt,
+                 f"eval_lm_loss={loss:.4f};gap={loss - teacher:+.4f}")
+    for cap in (0.6, 0.8):
+        emit(f"fig6_lora_gain_cap{cap}", 0.0,
+             f"rank0={res[(cap, 0)]:.4f};rank1={res[(cap, 1)]:.4f};"
+             f"rank4={res[(cap, 4)]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Fig. 7 / §5.2: Elasti-ViT — routing on ALL layers vs EVEN layers
+only, compared at matched compute saving.
+
+Even-layer routing at capacity c' saves (1-c')/2 of block compute; all-layer
+at capacity c saves (1-c). Matched pairs: all@c vs even@(2c-1).
+Metric: cosine similarity between student and teacher encoder outputs on
+held-out procedural images (paper threshold: > 0.95)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, pretrained_vit_teacher
+from repro.configs import ElasticConfig, get_config
+from repro.data import procedural_images
+from repro.models import forward, model_init, router_init
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.training import init_train_state, make_train_step
+
+BATCH = 8
+
+
+def _vit():
+    return pretrained_vit_teacher()
+
+
+def _batch(cfg, seed, cls=None):
+    emb, _ = procedural_images(BATCH, cfg.n_image_tokens, cfg.d_frontend,
+                               seed, class_id=cls)
+    return {"embeds": jnp.asarray(emb)}
+
+
+def train_and_eval(cfg, params, ecfg, steps=40, seed=0):
+    # layer stacking depends on the routing period (all=1, even=2); restack
+    # the SAME weights (model_init is key-deterministic per layer) to match.
+    params = model_init(jax.random.PRNGKey(0), cfg, ecfg)
+    rp = router_init(jax.random.PRNGKey(7 + seed), cfg, ecfg)
+    state = init_train_state(rp)
+    step_fn = jax.jit(make_train_step(cfg, ecfg,
+                                      lr=cosine_schedule(3e-3, steps)))
+    for i in range(steps):
+        state, m = step_fn(state, params, _batch(cfg, i))
+    # eval: cosine similarity to teacher on held-out images
+    sims = []
+    for i in range(4):
+        b = _batch(cfg, 10_000 + i)
+        t_out, _ = forward(params, None, b, cfg, ecfg, mode="base")
+        s_out, _ = forward(params, state.router_params, b, cfg, ecfg,
+                           mode="train")
+        t, s = np.asarray(t_out, np.float64), np.asarray(s_out, np.float64)
+        num = (t * s).sum(-1)
+        den = np.linalg.norm(t, axis=-1) * np.linalg.norm(s, axis=-1) + 1e-9
+        sims.append(float((num / den).mean()))
+    return float(np.mean(sims)), state.router_params
+
+
+def _ecfg(cap, layers):
+    return ElasticConfig(
+        mlp_token_capacity=cap, mha_token_capacity=cap,
+        mha_head_topk=None, mlp_n_experts=None, mlp_expert_topk=None,
+        lora_rank=0, layers=layers, distill_loss="cosine")
+
+
+def main(steps: int = 40):
+    cfg, params = _vit()
+    for c_all, c_even in ((0.75, 0.5), (0.9, 0.8)):
+        t0 = time.perf_counter()
+        sim_all, _ = train_and_eval(cfg, params, _ecfg(c_all, "all"), steps)
+        sim_even, _ = train_and_eval(cfg, params, _ecfg(c_even, "even"), steps)
+        dt = (time.perf_counter() - t0) / (2 * steps) * 1e6
+        emit(f"fig7_matched_saving_{1 - c_all:.2f}", dt,
+             f"all@{c_all}={sim_all:.4f};even@{c_even}={sim_even:.4f};"
+             f"even_better={sim_even > sim_all}")
+
+
+if __name__ == "__main__":
+    main()

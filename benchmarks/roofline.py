@@ -1,0 +1,115 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md SSRoofline table.
+
+Reads experiments/dryrun/<mesh>/<arch>__<shape>__<variant>.json produced by
+``python -m repro.launch.dryrun`` and prints a markdown table of the three
+roofline terms per (arch x shape), the dominant term, MODEL_FLOPS/HLO_FLOPs
+ratio, and the roofline fraction.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+       [--mesh pod16x16] [--variant baseline] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def load(dirname: str, mesh: str, variant: str, recompute: bool = False):
+    recs = []
+    for path in sorted(glob.glob(
+            os.path.join(dirname, mesh, f"*__{variant}.json"))):
+        r = json.load(open(path))
+        if recompute and r.get("roofline"):
+            # refresh analytic useful-FLOPs with the current model_flops
+            # (e.g. after adding the quadratic attention term)
+            from repro.configs import SHAPES, get_config
+            from repro.launch.dryrun import PEAK_FLOPS, model_flops
+            rf = r["roofline"]
+            n_chips = 512 if "2x16" in mesh else 256
+            mf = model_flops(get_config(r["arch"]), SHAPES[r["shape"]],
+                             r["kind"])
+            rf["model_flops_total"] = mf
+            rf["model_flops_per_dev"] = mf / n_chips
+            rf["useful_flop_ratio"] = (mf / n_chips) / max(
+                rf["hlo_flops_per_dev"], 1.0)
+            rf["roofline_fraction"] = min(1.0, (mf / n_chips / PEAK_FLOPS)
+                / max(rf["t_compute_s"], rf["t_memory_s"],
+                      rf["t_collective_s"], 1e-12))
+        recs.append(r)
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--recompute-useful", action="store_true",
+                    help="recompute model_flops/useful ratio/fraction with "
+                    "the current analytic formula")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh, args.variant,
+                recompute=args.recompute_useful)
+    if not recs:
+        raise SystemExit(f"no records in {args.dir}/{args.mesh}")
+
+    if args.csv:
+        print("arch,shape,status,t_compute_s,t_memory_s,t_collective_s,"
+              "dominant,useful_flop_ratio,roofline_fraction,mem_gb_dev")
+    else:
+        print(f"### Roofline — mesh {args.mesh}, variant {args.variant}\n")
+        print("| arch | shape | status | t_comp | t_mem | t_coll | dominant "
+              "| useful FLOP ratio | roofline frac | GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        arch, shape, st = r["arch"], r["shape"], r["status"]
+        if st == "skipped":
+            n_skip += 1
+            if not args.csv:
+                print(f"| {arch} | {shape} | SKIP (full-attn @500k) "
+                      f"| — | — | — | — | — | — | — |")
+            continue
+        if st != "ok":
+            n_err += 1
+            err = r.get("error", "?")[:60]
+            print(f"| {arch} | {shape} | ERROR {err} | | | | | | | |"
+                  if not args.csv else f"{arch},{shape},error,,,,,,,")
+            continue
+        n_ok += 1
+        rf = r.get("roofline", {})
+        mem = r.get("memory", {}).get("total_gb", 0.0)
+        if not rf:
+            if not args.csv:
+                print(f"| {arch} | {shape} | ok (no roofline) | | | | | | "
+                      f"| {mem:.2f} |")
+            continue
+        row = (arch, shape, "ok", rf["t_compute_s"], rf["t_memory_s"],
+               rf["t_collective_s"], rf["dominant"],
+               rf["useful_flop_ratio"], rf["roofline_fraction"], mem)
+        if args.csv:
+            print(",".join(str(x) for x in row))
+        else:
+            print(f"| {arch} | {shape} | ok | {_fmt_s(rf['t_compute_s'])} "
+                  f"| {_fmt_s(rf['t_memory_s'])} "
+                  f"| {_fmt_s(rf['t_collective_s'])} | **{rf['dominant']}** "
+                  f"| {rf['useful_flop_ratio']:.2f} "
+                  f"| {rf['roofline_fraction']:.3f} | {mem:.2f} |")
+    if not args.csv:
+        print(f"\nok={n_ok} skipped={n_skip} errors={n_err} "
+              f"total={len(recs)}")
+
+
+if __name__ == "__main__":
+    main()

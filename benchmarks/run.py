@@ -1,0 +1,62 @@
+"""Benchmark runner: one bench per paper table/figure (deliverable d).
+
+Each bench prints ``name,us_per_call,derived`` CSV rows. Figure benches
+pretrain a small teacher from scratch (cached under REPRO_BENCH_CACHE),
+then apply ElastiFormer post-training exactly as the paper does.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig5,table1] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = [
+    ("table1", "benchmarks.table1_params", {}),
+    ("fig2", "benchmarks.fig2_pruning", {}),
+    ("fig4", "benchmarks.fig4_distill_losses", {}),
+    ("fig5", "benchmarks.fig5_capacity_scaling", {}),
+    ("fig6", "benchmarks.fig6_lora_rescue", {}),
+    ("fig7", "benchmarks.fig7_vit_even_layers", {}),
+    ("fig8", "benchmarks.fig8_router_robustness", {}),
+    ("fig9", "benchmarks.fig9_vlm", {}),
+]
+
+FAST_KW = {  # reduced step counts for smoke runs
+    "fig2": {"fast": True},
+    "fig4": {"steps": 12}, "fig5": {"steps": 10}, "fig6": {"steps": 10},
+    "fig7": {"steps": 10}, "fig8": {"steps": 10}, "fig9": {"steps": 10},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (default: all)")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived", flush=True)
+    failures = []
+    for name, module, kw in BENCHES:
+        if only and name not in only:
+            continue
+        if args.fast:
+            kw = {**kw, **FAST_KW.get(name, {})}
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main(**kw)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep sweeping
+            failures.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benches failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 1: number of trainable parameters introduced by ElastiFormer
+routers as a fraction of the frozen base model, per (module x selection) and
+per assigned architecture.
+
+Router param formulas (paper Table 1): input selection = L x (D + 2) approx
+(we count exactly what router_init allocates); parameter selection =
+L x (D x M). Verifies the paper's headline ".00006%-0.3% additional
+trainable parameters" on the production configs without allocating them
+(eval_shape only)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import ASSIGNED, get_config, get_elastic
+from repro.models import model_init, router_init
+
+
+def _count(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def main():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        ecfg = get_elastic(arch, cfg)
+        params = jax.eval_shape(
+            lambda cfg=cfg, ecfg=ecfg: model_init(
+                jax.random.PRNGKey(0), cfg, ecfg))
+        rp = jax.eval_shape(
+            lambda cfg=cfg, ecfg=ecfg: router_init(
+                jax.random.PRNGKey(0), cfg, ecfg))
+        n_base, n_router = _count(params), _count(rp)
+        frac = 100.0 * n_router / max(n_base, 1)
+        emit(f"table1_{arch}", 0.0,
+             f"base={n_base};router={n_router};pct={frac:.5f}%;"
+             f"within_paper_range={frac <= 0.3}")
+
+
+if __name__ == "__main__":
+    main()

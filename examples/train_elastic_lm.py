@@ -1,0 +1,51 @@
+"""End-to-end driver: fault-tolerant distributed ElastiFormer distillation.
+
+Uses the production training stack (launch/train.py): sharded frozen base,
+distillation train step with chunked top-50 KL, async atomic checkpointing,
+straggler watchdog, and *injected failures* to demonstrate restart-from-
+checkpoint mid-run. Trains a ~langauge model for a few hundred steps on the
+synthetic Zipf-Markov corpus.
+
+Run:   PYTHONPATH=src python examples/train_elastic_lm.py
+Flags: --arch phi3-medium-14b --variant smoke --steps 300 --batch 8
+       (any registered arch; `smoke` variants fit CPU, `full` needs a pod)
+"""
+import argparse
+import logging
+import shutil
+
+from repro.launch.train import train
+
+
+def main():
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-lm")
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    ap.add_argument("--fresh", action="store_true",
+                    help="clear checkpoint dir first")
+    ap.add_argument("--inject-failure", action="store_true",
+                    help="kill the loop at 40%% to demo restart")
+    args = ap.parse_args()
+    if args.fresh:
+        shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    inject = (int(args.steps * 0.4),) if args.inject_failure else ()
+    state, metrics, restarts, watchdog = train(
+        args.arch, variant=args.variant, total_steps=args.steps,
+        seq_len=args.seq_len, global_batch=args.batch,
+        ckpt_dir=args.ckpt, save_every=max(10, args.steps // 10),
+        inject_failures=inject)
+    print(f"\nfinal metrics: {metrics}")
+    print(f"restarts survived: {restarts}")
+    print(f"straggler watchdog: {len(watchdog.flagged)} slow steps flagged "
+          f"{watchdog.flagged[:5]}")
+
+
+if __name__ == "__main__":
+    main()

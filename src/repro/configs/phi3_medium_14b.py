@@ -1,0 +1,26 @@
+"""phi3-medium-14b [dense] — 40L d=5120 40H (GQA kv=10) ff=17920 V=100352.
+
+RoPE + SwiGLU + GQA. [arXiv:2404.14219]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b", family="dense",
+        n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+        d_ff=17920, vocab_size=100352, d_head=128,
+        act="swiglu", norm="rmsnorm", rope_theta=10_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b-smoke", family="dense",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=160, vocab_size=512, d_head=16,
+        act="swiglu", norm="rmsnorm",
+    )
+
+
+register("phi3-medium-14b", full, smoke)

@@ -1,0 +1,17 @@
+"""ElastiFormer core: routing (Alg. 1/2), moefy, LoRA, distillation."""
+from repro.core.routing import (RouteAux, bce_topk_loss, param_route_weights,
+                                param_router_init, route_tokens,
+                                token_logits, token_router_init, topk_indices,
+                                topk_mask)
+from repro.core.moefy import moefy_mlp, unmoefy_mlp
+from repro.core.lora import lora_apply, lora_init
+from repro.core.distill import (cosine_distance, distill_loss, kl_divergence,
+                                topk_kl, topk_kl_from_gathered)
+
+__all__ = [
+    "RouteAux", "bce_topk_loss", "param_route_weights", "param_router_init",
+    "route_tokens", "token_logits", "token_router_init", "topk_indices",
+    "topk_mask", "moefy_mlp", "unmoefy_mlp", "lora_apply", "lora_init",
+    "cosine_distance", "distill_loss", "kl_divergence", "topk_kl",
+    "topk_kl_from_gathered",
+]

@@ -1,0 +1,92 @@
+"""Self-distillation objectives (paper §4.2, Fig. 4).
+
+Variants compared by the paper (language output modality):
+  * forward KL  D_KL(p_student || p_teacher)   (paper's naming convention)
+  * reverse KL  D_KL(p_teacher || p_student)
+  * top-K KL: teacher probs reduced to (K+1)-vector = top-K probs + residual
+    bucket; student arranged by the teacher's top-K token indices.
+  * temperature scaling of both logit sets before softmax.
+
+The paper adopts **forward KL on top-50 tokens** for LM/VLM, and cosine
+distance between output token embeddings for ViT encoders.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_softmax(logits, temp: float):
+    return jax.nn.log_softmax(logits.astype(jnp.float32) / temp, axis=-1)
+
+
+def kl_divergence(student_logits, teacher_logits, temp: float = 1.0,
+                  direction: str = "fwd"):
+    """Full-vocab KL per token, meaned. direction follows the paper's naming:
+    'fwd' = KL(student || teacher), 'rev' = KL(teacher || student)."""
+    ls = _log_softmax(student_logits, temp)
+    lt = _log_softmax(teacher_logits, temp)
+    if direction == "fwd":
+        ps = jnp.exp(ls)
+        kl = jnp.sum(ps * (ls - lt), axis=-1)
+    else:
+        pt = jnp.exp(lt)
+        kl = jnp.sum(pt * (lt - ls), axis=-1)
+    return jnp.mean(kl) * temp * temp
+
+
+def topk_kl(student_logits, teacher_logits, k: int = 50, temp: float = 1.0,
+            direction: str = "fwd"):
+    """Top-K KL [paper §4.2]: (K+1)-dim distributions with a residual bucket."""
+    lt = _log_softmax(teacher_logits, temp)
+    ls = _log_softmax(student_logits, temp)
+    t_top, t_idx = jax.lax.top_k(lt, k)                       # (..., K)
+    s_top = jnp.take_along_axis(ls, t_idx, axis=-1)
+    return _residual_bucket_kl(s_top, t_top, direction) * temp * temp
+
+
+def topk_kl_from_gathered(s_top, t_top, direction: str = "fwd"):
+    """Same as topk_kl but on already-gathered log-probs (distributed path)."""
+    return _residual_bucket_kl(s_top, t_top, direction)
+
+
+def _residual_bucket_kl(s_top, t_top, direction):
+    def aug(logp):
+        p = jnp.exp(logp)
+        resid = jnp.clip(1.0 - jnp.sum(p, axis=-1, keepdims=True), 1e-9, 1.0)
+        return jnp.concatenate([logp, jnp.log(resid)], axis=-1)
+    ls, lt = aug(s_top), aug(t_top)
+    if direction == "fwd":
+        kl = jnp.sum(jnp.exp(ls) * (ls - lt), axis=-1)
+    else:
+        kl = jnp.sum(jnp.exp(lt) * (lt - ls), axis=-1)
+    return jnp.mean(kl)
+
+
+def cosine_distance(student_emb, teacher_emb, eps: float = 1e-6):
+    """ViT-encoder objective: 1 - cos(student, teacher) per token, meaned."""
+    s = student_emb.astype(jnp.float32)
+    t = teacher_emb.astype(jnp.float32)
+    num = jnp.sum(s * t, axis=-1)
+    den = jnp.linalg.norm(s, axis=-1) * jnp.linalg.norm(t, axis=-1) + eps
+    return jnp.mean(1.0 - num / den)
+
+
+def distill_loss(student_out, teacher_out, ecfg, mask: Optional[jnp.ndarray] = None):
+    """Dispatch on ecfg.distill_loss. *_out are logits (LM) or embeddings (ViT)."""
+    kind = ecfg.distill_loss
+    if kind == "cosine":
+        return cosine_distance(student_out, teacher_out)
+    if kind == "topk_kl":
+        return topk_kl(student_out, teacher_out, k=ecfg.distill_topk,
+                       temp=ecfg.distill_temp, direction="fwd")
+    if kind == "topk_kl_rev":
+        return topk_kl(student_out, teacher_out, k=ecfg.distill_topk,
+                       temp=ecfg.distill_temp, direction="rev")
+    if kind == "fwd_kl":
+        return kl_divergence(student_out, teacher_out, ecfg.distill_temp, "fwd")
+    if kind == "rev_kl":
+        return kl_divergence(student_out, teacher_out, ecfg.distill_temp, "rev")
+    raise ValueError(f"unknown distill loss {kind}")

@@ -1,0 +1,24 @@
+"""LoRA adapters for q/v projections (paper §5.1, Fig. 6: rank >= 1 rescues
+MHA input-subset selection). B is zero-initialized so the adapter starts as
+the identity; trained with the same self-distillation objective.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_init(key, d_in: int, d_out: int, rank: int):
+    ka, _ = jax.random.split(key)
+    return {
+        "a": jax.random.normal(ka, (d_in, rank), jnp.float32) / math.sqrt(d_in),
+        "b": jnp.zeros((rank, d_out), jnp.float32),
+    }
+
+
+def lora_apply(lp, x, scale: float = 1.0):
+    """Additive low-rank delta: x @ A @ B * scale, computed in f32."""
+    h = x.astype(jnp.float32) @ lp["a"] @ lp["b"]
+    return (h * scale).astype(x.dtype)

@@ -1,0 +1,40 @@
+"""Lossless dense-MLP -> MoE block decomposition (paper §4.1).
+
+    y = W2 sigma(W1 x) = [W2,1 W2,2] sigma([W1,1; W1,2] x)
+
+Row-split the up (and gate) projections, column-split the down projection.
+With all experts selected at uniform weight 1 (the M*softmax normalization),
+the moefied module is bit-identical in f32 to the dense module.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moefy_mlp(params: dict, n_experts: int) -> dict:
+    """params: {'wi': (D,F), 'wo': (F,D), optional 'wg': (D,F)} ->
+    {'wi': (E,D,F/E), 'wo': (E,F/E,D), optional 'wg': (E,D,F/E)}."""
+    wi, wo = params["wi"], params["wo"]
+    d, f = wi.shape
+    assert f % n_experts == 0, f"d_ff={f} not divisible by {n_experts} experts"
+    fe = f // n_experts
+    out = {
+        "wi": jnp.transpose(wi.reshape(d, n_experts, fe), (1, 0, 2)),
+        "wo": wo.reshape(n_experts, fe, d),
+    }
+    if "wg" in params:
+        out["wg"] = jnp.transpose(params["wg"].reshape(d, n_experts, fe), (1, 0, 2))
+    return out
+
+
+def unmoefy_mlp(params: dict) -> dict:
+    """Inverse of moefy_mlp (used by tests to assert losslessness)."""
+    wi = params["wi"]
+    e, d, fe = wi.shape
+    out = {
+        "wi": jnp.transpose(wi, (1, 0, 2)).reshape(d, e * fe),
+        "wo": params["wo"].reshape(e * fe, d),
+    }
+    if "wg" in params:
+        out["wg"] = jnp.transpose(params["wg"], (1, 0, 2)).reshape(d, e * fe)
+    return out

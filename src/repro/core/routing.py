@@ -1,0 +1,172 @@
+"""ElastiFormer routing primitives (the paper's Alg. 1 & 2 + §B).
+
+Two schemes:
+  * input subset selection  — scalar sigmoid router per token, top-k (k=c*T)
+    during training, threshold 0.5 at causal inference (§B.1), BCE aux loss.
+  * parameter subset selection — M-way router, w = M*softmax(W_r x), top-k
+    submodules, straight-through via output scaling, load-balance aux (§B.2).
+
+All router math is float32 regardless of backbone dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+
+def _z():
+    return jnp.zeros((), jnp.float32)
+
+
+class RouteAux(NamedTuple):
+    load: jnp.ndarray   # load-balance loss contribution (scalar)
+    topk: jnp.ndarray   # BCE top-k consistency loss contribution (scalar)
+    sel: jnp.ndarray    # sum over routers of selected-token fraction
+    cnt: jnp.ndarray    # number of routers contributing to `sel`
+
+    @staticmethod
+    def zero():
+        return RouteAux(_z(), _z(), _z(), _z())
+
+    @staticmethod
+    def of(load=None, topk=None, keep=None):
+        """keep: bool selection mask -> records its mean as a sel-rate."""
+        sel = cnt = None
+        if keep is not None:
+            sel = jnp.mean(keep.astype(jnp.float32))
+            cnt = jnp.ones((), jnp.float32)
+        return RouteAux(load if load is not None else _z(),
+                        topk if topk is not None else _z(),
+                        sel if sel is not None else _z(),
+                        cnt if cnt is not None else _z())
+
+    def __add__(self, o):
+        return RouteAux(self.load + o.load, self.topk + o.topk,
+                        self.sel + o.sel, self.cnt + o.cnt)
+
+    @property
+    def sel_rate(self):
+        """Mean fraction of tokens processed across token routers."""
+        return self.sel / jnp.maximum(self.cnt, 1.0)
+
+
+# ----------------------- input subset selection -----------------------------
+
+def token_router_init(key, d: int):
+    w = jax.random.normal(key, (d,), jnp.float32) * (1.0 / math.sqrt(d))
+    return {"w": w, "b": jnp.zeros((), jnp.float32)}
+
+
+def token_logits(rp, x):
+    """Scalar routing logits per token. x: (..., D) -> (...,) f32."""
+    return x.astype(jnp.float32) @ rp["w"] + rp["b"]
+
+
+def topk_indices(scores, k: int):
+    """Top-k indices along the last axis, sorted ascending (causal order)."""
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.sort(idx, axis=-1)
+
+
+def topk_mask(scores, k: int):
+    """Boolean membership mask of the top-k entries along the last axis."""
+    kth = jax.lax.top_k(scores, k)[0][..., -1:]
+    return scores >= kth
+
+
+def bce_topk_loss(logits, in_topk):
+    """§B.1 auxiliary loss: router sigmoid should predict top-k membership."""
+    y = in_topk.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def gather_tokens(x, idx):
+    """x: (B,S,...) idx: (B,k) -> (B,k,...)."""
+    expand = (slice(None), slice(None)) + (None,) * (x.ndim - 2)
+    return jnp.take_along_axis(x, idx[expand], axis=1)
+
+
+def scatter_add_tokens(shape_like, idx, vals):
+    """Inverse of gather_tokens: zeros.at[b, idx].add(vals)."""
+    y = jnp.zeros_like(shape_like)
+    b = jnp.arange(y.shape[0])[:, None]
+    return y.at[b, idx].add(vals.astype(y.dtype))
+
+
+def route_tokens(
+    rp,
+    x,                      # (B, S, D)
+    f: Callable,            # f(x_sub, positions_sub) -> (B, k(or S), D)
+    capacity: Optional[float],
+    mode: str,              # base | train | infer
+    positions=None,         # (S,) int32 positions (for RoPE/causal inside f)
+    impl: str = "gather",
+):
+    """Input subset selection around a module f (residual added by caller).
+
+    Returns (delta, aux). delta is f's (router-weighted) contribution.
+    """
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if capacity is None or mode == "base":
+        return f(x, positions), RouteAux.zero()
+
+    logits = token_logits(rp, x)            # (B, S)
+    scores = jax.nn.sigmoid(logits)
+
+    if mode == "infer":
+        # §B.1: threshold 0.5 (== logit 0); dense compute, masked output.
+        keep = (logits > 0.0)
+        y = f(x, positions)
+        delta = y * (keep * scores)[..., None].astype(y.dtype)
+        return delta, RouteAux.of(keep=keep)
+
+    k = max(1, min(S, int(math.ceil(capacity * S))))
+    if impl == "dense_mask":
+        mask = topk_mask(scores, k)
+        y = f(x, positions)
+        delta = y * (mask * scores)[..., None].astype(y.dtype)
+    else:
+        idx = topk_indices(scores, k)        # (B, k) ascending
+        x_sel = gather_tokens(x, idx)
+        pos_sel = positions[idx] if positions.ndim == 1 else jnp.take_along_axis(positions, idx, 1)
+        y_sel = f(x_sel, pos_sel)
+        w_sel = jnp.take_along_axis(scores, idx, axis=1)
+        y_sel = y_sel * w_sel[..., None].astype(y_sel.dtype)
+        delta = scatter_add_tokens(x, idx, y_sel)
+        mask = topk_mask(scores, k)
+    aux = RouteAux.of(topk=bce_topk_loss(logits, mask), keep=mask)
+    return delta, aux
+
+
+# --------------------- parameter subset selection ---------------------------
+
+def param_router_init(key, d: int, m: int):
+    w = jax.random.normal(key, (d, m), jnp.float32) * (1.0 / math.sqrt(d))
+    return {"w": w}
+
+
+def param_route_weights(rp, x, top_k: int, normalize_to_m: bool = True):
+    """Alg. 1: w = M * softmax(W_r x); top-k selection mask.
+
+    Returns (weights (...,M) f32, mask (...,M) bool, aux RouteAux).
+    With k == M and a uniform router this reproduces the base module exactly
+    (weights == 1 everywhere) — the paper's losslessness property.
+    """
+    m = rp["w"].shape[-1]
+    logits = x.astype(jnp.float32) @ rp["w"]            # (..., M)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w = probs * m if normalize_to_m else probs
+    mask = topk_mask(w, min(top_k, m))
+    # §B.2 load-balance: E_m[frac_selected(m) * mean_prob(m)] * M
+    red = tuple(range(probs.ndim - 1))
+    frac = jnp.mean(mask.astype(jnp.float32), axis=red)
+    mean_p = jnp.mean(probs, axis=red)
+    load = m * jnp.sum(frac * mean_p)
+    return w, mask, RouteAux.of(load=load)

@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, fused_mlp, moe_gmm
+
+__all__ = ["flash_attention", "fused_mlp", "moe_gmm"]

@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (forward) with causal + sliding-window masks,
+GQA, and a per-key validity mask (ElastiFormer token routing: unselected
+tokens are invalid keys).
+
+Layout: q (B, H, Sq, Dh), k/v (B, K, Sk, Dh) — heads-major so each grid cell
+streams contiguous (block, Dh) tiles HBM->VMEM. Online softmax with f32
+scratch accumulators carried across the innermost (sequential) kv-block grid
+dimension; causal/window-dead blocks are skipped via pl.when so the lowered
+kernel does ~half the work of the dense score matrix.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            causal: bool, window: int, block_q: int, block_k: int,
+            sm_scale: float, n_kb: int, sk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    run = jnp.bool_(True)
+    if causal:  # skip blocks entirely above the diagonal
+        run &= k_start <= q_start + block_q - 1
+    if window and window > 0:  # skip blocks entirely outside the window
+        run &= q_start - (k_start + block_k - 1) < window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < sk
+        if causal:
+            mask &= kpos <= qpos
+        if window and window > 0:
+            mask &= (qpos - kpos) < window
+        if valid_ref is not None:
+            mask &= valid_ref[0][None, :] > 0
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_sc[:, 0] = l_sc[:, 0] * alpha + jnp.sum(p, axis=1)
+        m_sc[:, 0] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)
+        # Rows past Sk are block padding (NaN in interpret mode); p is 0 there
+        # but 0*NaN = NaN in the dot, so zero the padded v rows explicitly.
+        vpos = k_start + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(vpos < sk, v, 0.0)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kb - 1)
+    def _finish():
+        l = jnp.maximum(l_sc[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    kv_valid=None, block_q: int = 128, block_k: int = 128,
+                    sm_scale: float | None = None, interpret: bool = False):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, K, Dh); kv_valid: (B, Sk) bool.
+    Returns (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nkb = pl.cdiv(Sq, bq), pl.cdiv(Sk, bk)
+
+    qt = q.transpose(0, 2, 1, 3)                          # (B,H,Sq,Dh)
+    kt = k.transpose(0, 2, 1, 3)                          # (B,K,Sk,Dh)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, block_q=bq, block_k=bk,
+        sm_scale=sm_scale, n_kb=nkb, sk=Sk)
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // G, j, 0)),
+        pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // G, j, 0)),
+    ]
+    args = [qt, kt, vt]
+    if kv_valid is not None:
+        in_specs.insert(0, pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)))
+        args.insert(0, kv_valid.astype(jnp.int32))
+        kfn = kernel
+    else:
+        kfn = functools.partial(kernel, None)
+
+    out = pl.pallas_call(
+        kfn,
+        grid=(B, H, nq, nkb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,94 @@
+"""Pallas TPU fused (gated) MLP with per-token output weighting — the compute
+hot-spot of ElastiFormer's *input subset selection* (routed MLP).
+
+y[t] = w[t] * ( act(x[t] @ Wg) * (x[t] @ Wi) ) @ Wo
+
+Fusing both matmuls + activation means the (T, F) hidden activation never
+round-trips to HBM (F is 3-4x D on the assigned archs); the kernel tiles
+F into VMEM-sized blocks and accumulates the down-projection into an f32
+scratch across the sequential F-grid dimension. Token gather/scatter (the
+top-k routing) stays in XLA — it is bandwidth-trivial next to the matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
+            act: str, n_fb: int, weighted: bool):
+    jf = pl.program_id(1)
+
+    @pl.when(jf == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    x = x_ref[...].astype(jnp.float32)                     # (bt, D)
+    hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)   # (bt, bf)
+    if wg_ref is not None:
+        hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
+        h = a * hi
+    else:
+        h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
+    acc_sc[...] += jax.lax.dot(h, wo_ref[...].astype(jnp.float32),
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(jf == n_fb - 1)
+    def _finish():
+        y = acc_sc[...]
+        if weighted:
+            y = y * tw_ref[...].astype(jnp.float32)[:, :1]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
+              block_t: int = 256, block_f: int = 512,
+              interpret: bool = False):
+    """x: (T, D); wi/wg: (D, F); wo: (F, D); token_weights: (T,) or None.
+    Returns (T, D)."""
+    T, D = x.shape
+    F = wi.shape[1]
+    bt, bf = min(block_t, T), min(block_f, F)
+    nt, nf = pl.cdiv(T, bt), pl.cdiv(F, bf)
+    tw = (jnp.ones((T, 1), jnp.float32) if token_weights is None
+          else token_weights.reshape(T, 1).astype(jnp.float32))
+    tw = jnp.broadcast_to(tw, (T, 128))  # lane-replicated for TPU layout
+
+    kernel = functools.partial(_kernel, act=act, n_fb=nf,
+                               weighted=token_weights is not None)
+    in_specs = [
+        pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
+        pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+    ]
+    args = [x, wi]
+    if wg is not None:
+        in_specs.append(pl.BlockSpec((D, bf), lambda i, j: (0, j)))
+        args.append(wg)
+        kfn = kernel
+    else:
+        kfn = lambda x_ref, wi_ref, wo_ref, tw_ref, o_ref, acc: kernel(
+            x_ref, wi_ref, None, wo_ref, tw_ref, o_ref, acc)
+    in_specs += [
+        pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
+        pl.BlockSpec((bt, 128), lambda i, j: (i, 0)),
+    ]
+    args += [wo, tw]
+
+    return pl.pallas_call(
+        kfn,
+        grid=(nt, nf),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)

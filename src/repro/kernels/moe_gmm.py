@@ -1,0 +1,93 @@
+"""Pallas TPU grouped expert matmul — the compute hot-spot of ElastiFormer's
+*parameter subset selection* (expert routing over moefied dense MLPs and
+native MoE layers).
+
+Inputs are the capacity-dispatched per-expert token buffers produced by the
+router (see models/moe.py):
+
+    y[e, c] = w[e, c] * ( act(x[e,c] @ Wg[e]) * (x[e,c] @ Wi[e]) ) @ Wo[e]
+
+Grid (E, C/bc, Fe/bf): expert-major so each expert's weight tiles are
+streamed once per token-block column; the hidden activation is fused in VMEM
+exactly like fused_mlp. Routing weights multiply the output (straight-through
+gradient path of Alg. 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
+            act: str, n_fb: int):
+    jf = pl.program_id(2)
+
+    @pl.when(jf == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    x = x_ref[0].astype(jnp.float32)                       # (bc, D)
+    hi = jax.lax.dot(x, wi_ref[0].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    if wg_ref is not None:
+        hg = jax.lax.dot(x, wg_ref[0].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
+        h = a * hi
+    else:
+        h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
+    acc_sc[...] += jax.lax.dot(h, wo_ref[0].astype(jnp.float32),
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(jf == n_fb - 1)
+    def _finish():
+        o_ref[0] = (acc_sc[...] * w_ref[0].astype(jnp.float32)[:, :1]
+                    ).astype(o_ref.dtype)
+
+
+def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
+            block_c: int = 128, block_f: int = 512, interpret: bool = False):
+    """x: (E, C, D) dispatched tokens; wi/wg: (E, D, Fe); wo: (E, Fe, D);
+    weights: (E, C) routing weights (0 for empty capacity slots).
+    Returns (E, C, D)."""
+    E, C, D = x.shape
+    Fe = wi.shape[2]
+    bc, bf = min(block_c, C), min(block_f, Fe)
+    nc, nf = pl.cdiv(C, bc), pl.cdiv(Fe, bf)
+    w = jnp.ones((E, C), jnp.float32) if weights is None else weights
+    w = jnp.broadcast_to(w.astype(jnp.float32)[..., None], (E, C, 128))
+
+    kernel = functools.partial(_kernel, act=act, n_fb=nf)
+    in_specs = [
+        pl.BlockSpec((1, bc, D), lambda e, i, j: (e, i, 0)),
+        pl.BlockSpec((1, D, bf), lambda e, i, j: (e, 0, j)),
+    ]
+    args = [x, wi]
+    if wg is not None:
+        in_specs.append(pl.BlockSpec((1, D, bf), lambda e, i, j: (e, 0, j)))
+        args.append(wg)
+        kfn = kernel
+    else:
+        kfn = lambda x_ref, wi_ref, wo_ref, w_ref, o_ref, acc: kernel(
+            x_ref, wi_ref, None, wo_ref, w_ref, o_ref, acc)
+    in_specs += [
+        pl.BlockSpec((1, bf, D), lambda e, i, j: (e, j, 0)),
+        pl.BlockSpec((1, bc, 128), lambda e, i, j: (e, i, 0)),
+    ]
+    args += [wo, w]
+
+    return pl.pallas_call(
+        kfn,
+        grid=(E, nc, nf),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, D), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)

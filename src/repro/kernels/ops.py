@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU backends the pallas_call path is used; elsewhere (this CPU container)
+the kernels run under interpret=True when `force_pallas` (tests) or fall back
+to the jnp reference — bit-compatible semantics either way.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_mlp import fused_mlp as _fused_mlp
+from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "force_pallas"))
+def flash_attention(q, k, v, kv_valid=None, *, causal=True, window=0,
+                    force_pallas=False):
+    if _on_tpu() or force_pallas:
+        return _flash(q, k, v, causal=causal, window=window,
+                      kv_valid=kv_valid, interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   kv_valid=kv_valid)
+
+
+@partial(jax.jit, static_argnames=("act", "force_pallas"))
+def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
+              force_pallas=False):
+    if _on_tpu() or force_pallas:
+        return _fused_mlp(x, wi, wo, wg, token_weights, act=act,
+                          interpret=not _on_tpu())
+    return ref.fused_mlp_ref(x, wi, wo, wg, token_weights, act=act)
+
+
+@partial(jax.jit, static_argnames=("act", "force_pallas"))
+def moe_gmm(x, wi, wo, wg=None, weights=None, *, act="swiglu",
+            force_pallas=False):
+    if _on_tpu() or force_pallas:
+        return _moe_gmm(x, wi, wo, wg, weights, act=act,
+                        interpret=not _on_tpu())
+    return ref.moe_gmm_ref(x, wi, wo, wg, weights, act=act)

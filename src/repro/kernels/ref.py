@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+that tests/test_kernels.py sweeps shapes/dtypes against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
+                        sm_scale=None):
+    """q: (B,Sq,H,Dh); k,v: (B,Sk,K,Dh) -> (B,Sq,H,Dh). Dense softmax."""
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
+    qg = q.reshape(B, Sq, K, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * sm_scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= (qpos - kpos) < window
+    mask = jnp.broadcast_to(mask, (B, 1, 1, Sq, Sk))
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", a, v.astype(jnp.float32))
+    return ctx.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def _act(name):
+    return jax.nn.silu if name == "swiglu" else jax.nn.gelu
+
+
+def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu"):
+    xf = x.astype(jnp.float32)
+    h = xf @ wi.astype(jnp.float32)
+    if wg is not None:
+        g = _act(act)(xf @ wg.astype(jnp.float32))
+        h = g * h
+    else:
+        h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
+    y = h @ wo.astype(jnp.float32)
+    if token_weights is not None:
+        y = y * token_weights.astype(jnp.float32)[:, None]
+    return y.astype(x.dtype)
+
+
+def moe_gmm_ref(x, wi, wo, wg=None, weights=None, *, act="swiglu"):
+    xf = x.astype(jnp.float32)
+    h = jnp.einsum("ecd,edf->ecf", xf, wi.astype(jnp.float32))
+    if wg is not None:
+        g = _act(act)(jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32)))
+        h = g * h
+    else:
+        h = _act(act)(h)
+    y = jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32))
+    if weights is not None:
+        y = y * weights.astype(jnp.float32)[..., None]
+    return y.astype(x.dtype)

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), record
+memory_analysis / cost_analysis / the collective schedule, and derive the
+three roofline terms.
+
+Roofline accounting: XLA's HloCostAnalysis counts a while (lax.scan) body
+ONCE regardless of trip count, so FLOPs/bytes/collective-bytes are taken
+from two fully-unrolled shallow clones (1 and 2 pattern-periods deep,
+flags.analysis_unroll) and extrapolated exactly:
+
+    per_period = U2 - U1;   outside = U1 - per_period
+    total(L)   = outside + (L / period_len) * per_period
+
+The full-depth *scanned* compile (the production program) provides the
+memory_analysis fits-proof and the collective schedule, and is what must
+compile for the cell to PASS.
+
+Usage:
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+  python -m repro.launch.dryrun --arch phi3-medium-14b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED, SHAPES, get_config, get_elastic,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import (batch_specs, build_pattern, cache_specs,
+                          decode_step, model_init, prefill, router_init)
+from repro.models import flags
+from repro.optim import cosine_schedule
+from repro.runtime import sharding as SH
+from repro.training import init_train_state, make_train_step
+
+# TPU v5e hardware constants (assignment-mandated)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/#_\.]*?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group(2).lower()
+        b = _shape_bytes(m.group(1))
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+# ------------------------------ lowering ------------------------------------
+
+def scale_layers(cfg, ecfg, k_periods: int):
+    period, _, _ = build_pattern(cfg, ecfg)
+    new = dataclasses.replace(cfg, n_layers=k_periods * len(period))
+    if cfg.encoder is not None:
+        ep, _, _ = build_pattern(cfg.encoder, ecfg)
+        new = dataclasses.replace(
+            new, encoder=dataclasses.replace(
+                cfg.encoder, n_layers=k_periods * len(ep)))
+    return new
+
+
+def _abstract_state(cfg, ecfg):
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: model_init(key, cfg, ecfg))
+    rp = jax.eval_shape(lambda: router_init(key, cfg, ecfg))
+    return params, rp
+
+
+def _replicated_tree(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def lower_cell(cfg, ecfg, shape, mesh, kind: str, microbatch=None):
+    """Build (fn, arg_shapes, in_shardings) and lower+compile. Returns the
+    compiled object."""
+    params, rp = _abstract_state(cfg, ecfg)
+    p_sh = SH.param_shardings(params, mesh)
+    rp_sh = _replicated_tree(rp, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    if kind == "train":
+        step = make_train_step(cfg, ecfg, lr=cosine_schedule(1e-4, 1000),
+                               mesh=mesh, remat=True, chunked=True,
+                               microbatch=microbatch)
+        state = jax.eval_shape(init_train_state, rp)
+        batch = batch_specs(cfg, S, B, "train")
+        lowered = jax.jit(step, in_shardings=(
+            _replicated_tree(state, mesh), p_sh,
+            SH.input_shardings(batch, mesh),
+        )).lower(state, params, batch)
+    elif kind == "prefill":
+        fn = partial(prefill, cfg=cfg, ecfg=ecfg, mode="infer",
+                     max_cache_len=S)
+        batch = batch_specs(cfg, S, B, "prefill")
+        lowered = jax.jit(lambda p, r, b: fn(p, r, b), in_shardings=(
+            p_sh, rp_sh, SH.input_shardings(batch, mesh),
+        )).lower(params, rp, batch)
+    elif kind == "decode":
+        fn = partial(decode_step, cfg=cfg, ecfg=ecfg, mode="infer")
+        caches = cache_specs(cfg, B, S)
+        c_sh = SH.cache_shardings(caches, cfg, mesh)
+        token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        t = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(
+            lambda p, r, tok, c, tt: fn(p, r, tok, c, tt),
+            in_shardings=(p_sh, rp_sh,
+                          SH.fitted(SH.batch_spec(mesh, 1), (B, 1), mesh),
+                          c_sh, NamedSharding(mesh, P())),
+        ).lower(params, rp, token, caches, t)
+    else:
+        raise ValueError(kind)
+    return lowered.compile()
+
+
+def _cost(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = parse_collectives(txt)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(sum(c["bytes"] for c in colls.values())),
+        "collectives": colls,
+    }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Analytic useful FLOPs: parameter matmuls (2N/token) PLUS the
+    quadratic attention term (2·ctx·H·Dh per token per attn layer for each
+    of QK^T and PV) — without it, long-context cells report a bogus
+    useful_flop_ratio (attention dominates 32k+ prefill)."""
+    n = cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * (1 if kind == "decode" else S)
+    # average context seen by a query token
+    ctx = {"train": S / 2, "prefill": S / 2, "decode": S}[kind]
+    attn_per_tok = 0.0
+    for i, k in enumerate(cfg.layer_kinds):
+        w = cfg.layer_windows[i]
+        c = min(ctx, w) if (w and w > 0) else ctx
+        if k in ("attn", "xattn"):
+            attn_per_tok += 2 * 2 * c * cfg.n_heads * cfg.d_head
+        if k == "xattn":  # cross attention over the encoder/image context
+            enc = cfg.n_image_tokens or cfg.encoder_seq or 0
+            attn_per_tok += 2 * 2 * enc * cfg.n_heads * cfg.d_head
+    fwd = 2 * n * tokens + attn_per_tok * tokens
+    mult = 3 if kind == "train" else 1   # teacher fwd + student fwd + bwd
+    return mult * fwd
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             skip_roofline: bool = False, variant: str = "baseline",
+             microbatch=None):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_tag), exist_ok=True)
+    path = os.path.join(out_dir, mesh_tag, f"{arch}__{shape_name}__{variant}.json")
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "variant": variant, "kind": shape.kind, "status": "running"}
+    if not shape_applicable(arch, shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires a sub-quadratic mixer; this is "
+                        "a pure full-attention architecture (DESIGN.md §5)")
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[dryrun] {arch} x {shape_name}: SKIPPED (full attention)")
+        return rec
+
+    cfg = get_config(arch)
+    ecfg = get_elastic(arch, cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    try:
+        t0 = time.time()
+        with mesh:
+            compiled = lower_cell(cfg, ecfg, shape, mesh, shape.kind,
+                                  microbatch=microbatch)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "total_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes) / 1e9,
+        }
+        rec["fits_hbm16"] = rec["memory"]["total_gb"] < 16.0
+        sc = _cost(compiled)
+        rec["scanned_cost"] = {k: sc[k] for k in ("flops", "bytes",
+                                                  "coll_bytes")}
+        rec["collective_schedule"] = sc["collectives"]
+        del compiled
+
+        if not multi_pod and not skip_roofline:
+            period, _, _ = build_pattern(cfg, ecfg)
+            with flags.analysis_unroll():
+                with mesh:
+                    c1 = _cost(lower_cell(scale_layers(cfg, ecfg, 1), ecfg,
+                                          shape, mesh, shape.kind,
+                                          microbatch=microbatch))
+                    c2 = _cost(lower_cell(scale_layers(cfg, ecfg, 2), ecfg,
+                                          shape, mesh, shape.kind,
+                                          microbatch=microbatch))
+            nper = cfg.n_layers / len(period)
+            terms = {}
+            for key in ("flops", "bytes", "coll_bytes"):
+                per = c2[key] - c1[key]
+                outside = c1[key] - per
+                terms[key] = max(0.0, outside + nper * per)
+            # cost_analysis is per-device (post-SPMD module)
+            t_comp = terms["flops"] / PEAK_FLOPS
+            t_mem = terms["bytes"] / HBM_BW
+            t_coll = terms["coll_bytes"] / ICI_BW
+            mf = model_flops(cfg, shape, shape.kind)
+            rec["roofline"] = {
+                "hlo_flops_per_dev": terms["flops"],
+                "hlo_bytes_per_dev": terms["bytes"],
+                "coll_bytes_per_dev": terms["coll_bytes"],
+                "t_compute_s": t_comp,
+                "t_memory_s": t_mem,
+                "t_collective_s": t_coll,
+                "dominant": max(
+                    [("compute", t_comp), ("memory", t_mem),
+                     ("collective", t_coll)], key=lambda kv: kv[1])[0],
+                "model_flops_total": mf,
+                "model_flops_per_dev": mf / n_chips,
+                "useful_flop_ratio": (mf / n_chips) / max(terms["flops"], 1.0),
+                "roofline_fraction": min(
+                    1.0, (mf / n_chips / PEAK_FLOPS)
+                    / max(t_comp, t_mem, t_coll, 1e-12)),
+            }
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    json.dump(rec, open(path, "w"), indent=1)
+    dom = rec.get("roofline", {}).get("dominant", "-")
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: {rec['status']} "
+          f"(mem {rec.get('memory', {}).get('total_gb', 0):.2f} GB/dev, "
+          f"dominant={dom})", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(args.out, tag,
+                                    f"{arch}__{shape}__{args.variant}.json")
+                if args.skip_existing and os.path.exists(path):
+                    st = json.load(open(path)).get("status")
+                    if st in ("ok", "skipped"):
+                        continue
+                run_cell(arch, shape, mp, args.out,
+                         skip_roofline=args.skip_roofline,
+                         variant=args.variant, microbatch=args.microbatch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Poor-man's HLO profiler for the dry-run (no hardware, no traces).
+
+Parses an HLO text module and attributes bytes (operand+output, from the
+shape annotations) per op kind, plus collective counts/bytes. This is the
+"profile" the §Perf hillclimb iterates against: it localizes WHICH ops
+produce the cost_analysis aggregates (e.g. a dense (B,H,S,S) score tensor,
+a resharding transpose, a remat-duplicated matmul).
+
+Usage:
+    from repro.launch.hloprof import profile_text, top_table
+    prof = profile_text(compiled.as_text())
+    print(top_table(prof, n=25))
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# one HLO instruction:  %name = <shape(s)> opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+    r"((?:\(?[a-z0-9]+\[[0-9,]*\][^\s\)]*\)?,?\s*)+)\s*"
+    r"([a-z][a-z0-9\-]*)\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def profile_text(hlo: str) -> dict:
+    """opcode -> {count, out_bytes}; out_bytes = output shape bytes (a good
+    HBM-write proxy; reads show up as some producer's out_bytes)."""
+    agg = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _INSTR_RE.finditer(hlo):
+        shp, op = m.group(1), m.group(2)
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast"):
+            continue
+        rec = agg[op]
+        rec["count"] += 1
+        rec["bytes"] += shape_bytes(shp)
+    return dict(agg)
+
+
+def biggest_tensors(hlo: str, n: int = 15):
+    """The n largest single instruction outputs (op, bytes, shape-str)."""
+    out = []
+    for m in _INSTR_RE.finditer(hlo):
+        shp, op = m.group(1), m.group(2)
+        if op in ("parameter", "constant", "get-tuple-element", "tuple"):
+            continue
+        out.append((shape_bytes(shp), op, shp.strip()[:90]))
+    out.sort(reverse=True)
+    return out[:n]
+
+
+def top_table(prof: dict, n: int = 20) -> str:
+    rows = sorted(prof.items(), key=lambda kv: -kv[1]["bytes"])[:n]
+    total = sum(v["bytes"] for v in prof.values())
+    lines = [f"{'opcode':24s} {'count':>8s} {'GB_out':>10s} {'%':>6s}"]
+    for op, v in rows:
+        lines.append(f"{op:24s} {v['count']:8d} {v['bytes'] / 1e9:10.2f} "
+                     f"{100 * v['bytes'] / max(total, 1):6.1f}")
+    lines.append(f"{'TOTAL':24s} {'':8s} {total / 1e9:10.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,15 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+A FUNCTION, not a module constant, so importing never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips (one v5e pod);
+multi-pod: (pod=2, data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

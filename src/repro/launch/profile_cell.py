@@ -1,0 +1,68 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Lower one (arch x shape) cell and print an HLO-derived profile:
+top op-kinds by output bytes, biggest single tensors, collective schedule.
+This is the evidence base for each §Perf iteration.
+
+Usage: PYTHONPATH=src python -m repro.launch.profile_cell --arch qwen2-7b \
+           --shape train_4k [--multi-pod] [--unrolled]
+"""
+import argparse
+
+from repro.configs import SHAPES, get_config, get_elastic
+from repro.launch import dryrun as DR
+from repro.launch.hloprof import biggest_tensors, profile_text, top_table
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_pattern, flags
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unrolled", action="store_true",
+                    help="profile the 1-period unrolled clone (faster, "
+                    "per-layer attribution) instead of the full scan")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    ecfg = get_elastic(args.arch, cfg)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    if args.unrolled:
+        cfg1 = DR.scale_layers(cfg, ecfg, 1)
+        with flags.analysis_unroll():
+            with mesh:
+                compiled = DR.lower_cell(cfg1, ecfg, shape, mesh, shape.kind)
+        period, _, _ = build_pattern(cfg, ecfg)
+        print(f"# unrolled clone: {cfg1.n_layers} layers "
+              f"(1 period of {len(period)}; full model {cfg.n_layers})")
+    else:
+        with mesh:
+            compiled = DR.lower_cell(cfg, ecfg, shape, mesh, shape.kind)
+
+    txt = compiled.as_text()
+    print(f"\n== {args.arch} x {args.shape} "
+          f"{'pod2x16x16' if args.multi_pod else 'pod16x16'} ==")
+    ma = compiled.memory_analysis()
+    print(f"memory: arg {ma.argument_size_in_bytes / 1e9:.2f} GB  "
+          f"temp {ma.temp_size_in_bytes / 1e9:.2f} GB")
+    ca = compiled.cost_analysis() or {}
+    print(f"cost_analysis: flops {ca.get('flops', 0) / 1e12:.2f}T  "
+          f"bytes {ca.get('bytes accessed', 0) / 1e9:.2f} GB")
+    print("\n-- top op kinds by output bytes --")
+    print(top_table(profile_text(txt), n=args.top))
+    print("\n-- biggest single tensors --")
+    for b, op, shp in biggest_tensors(txt, 15):
+        print(f"{b / 1e9:9.3f} GB  {op:18s} {shp}")
+    print("\n-- collectives --")
+    for op, rec in sorted(DR.parse_collectives(txt).items()):
+        print(f"{op:20s} count={rec['count']:5d} "
+              f"bytes={rec['bytes'] / 1e9:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Distributed ElastiFormer self-distillation training driver.
+
+Wires together: config registry -> mesh -> sharded frozen base model ->
+router init -> distillation train step -> fault-tolerant supervised loop
+(checkpoint/restart, straggler watchdog) -> deterministic sharded data.
+
+On this CPU container it is exercised end-to-end with smoke configs and a
+(1,1) mesh (tests/test_train_loop.py, examples/train_elastic_lm.py); on a
+pod the same code runs under the production mesh from launch/mesh.py.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, get_elastic
+from repro.data import LMDataPipeline
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_init, router_init, router_param_count
+from repro.optim import cosine_schedule
+from repro.runtime import (FailureInjector, StragglerWatchdog, make_mesh,
+                           run_resilient)
+from repro.runtime import sharding as SH
+from repro.training import TrainState, init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+def build_trainer(arch: str, *, variant: str = "full", mesh=None,
+                  lr: float = 1e-4, total_steps: int = 1000,
+                  seq_len: int = 512, global_batch: int = 32,
+                  remat: bool = True, compression: bool = False,
+                  seed: int = 0, ecfg=None):
+    cfg = get_config(arch, variant)
+    ecfg = ecfg or get_elastic(arch, cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model_init(key, cfg, ecfg)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+    log.info("base params: %.3fM frozen; router params: %d (%.5f%%)",
+             sum(x.size for x in jax.tree.leaves(params)) / 1e6,
+             router_param_count(rp),
+             100 * router_param_count(rp)
+             / max(1, sum(x.size for x in jax.tree.leaves(params))))
+    if mesh is not None:
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), params,
+            SH.param_shardings(params, mesh))
+    state = init_train_state(rp, use_compression=compression)
+    step_fn = jax.jit(make_train_step(
+        cfg, ecfg, lr=cosine_schedule(lr, total_steps), mesh=mesh,
+        remat=remat, chunked=cfg.vocab_size > 0,
+        compress_axis="pod" if (compression and mesh is not None
+                                and "pod" in mesh.axis_names) else None),
+        donate_argnums=(0,))
+    pipe = LMDataPipeline(vocab=cfg.vocab_size, seq_len=seq_len,
+                          global_batch=global_batch, seed=seed)
+    return cfg, ecfg, params, state, step_fn, pipe
+
+
+def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
+          seq_len: int = 128, global_batch: int = 8, lr: float = 1e-3,
+          ckpt_dir: str = "/tmp/repro_ckpt", save_every: int = 25,
+          use_mesh: bool = False, multi_pod: bool = False,
+          inject_failures: tuple = (), seed: int = 0):
+    mesh = make_production_mesh(multi_pod=multi_pod) if use_mesh else None
+    cfg, ecfg, params, state, step_fn, pipe = build_trainer(
+        arch, variant=variant, mesh=mesh, lr=lr, total_steps=total_steps,
+        seq_len=seq_len, global_batch=global_batch, seed=seed)
+    ckpt = Checkpointer(ckpt_dir, keep=3)
+    box = {"state": state, "metrics": {}}
+
+    def do_step(step: int) -> dict:
+        batch = {"tokens": jnp.asarray(pipe.batch_at(step))}
+        box["state"], m = step_fn(box["state"], params, batch)
+        box["metrics"] = {k: float(v) for k, v in m.items()}
+        if step % 10 == 0:
+            log.info("step %d %s", step, box["metrics"])
+        return box["metrics"]
+
+    def save(step: int):
+        ckpt.save(step, {"router": box["state"].router_params,
+                         "opt_m": box["state"].opt.m,
+                         "opt_v": box["state"].opt.v},
+                  extra={"step": step, "data": pipe.state(),
+                         "opt_step": int(box["state"].opt.step)})
+
+    def restore() -> int:
+        latest = ckpt.latest_step()
+        if latest is None:
+            box["state"] = init_train_state(state.router_params)
+            return 0
+        tree = {"router": box["state"].router_params,
+                "opt_m": box["state"].opt.m, "opt_v": box["state"].opt.v}
+        loaded, extra = ckpt.restore(latest, tree)
+        opt = box["state"].opt._replace(
+            step=jnp.asarray(extra["opt_step"], jnp.int32),
+            m=loaded["opt_m"], v=loaded["opt_v"])
+        box["state"] = TrainState(loaded["router"], opt, box["state"].ef)
+        pipe.restore(extra["data"])
+        return extra["step"]
+
+    watchdog = StragglerWatchdog()
+    metrics, restarts = run_resilient(
+        start_step=restore(), total_steps=total_steps, do_step=do_step,
+        save=save, restore=restore, save_every=save_every,
+        injector=FailureInjector(inject_failures), watchdog=watchdog)
+    ckpt.wait()
+    return box["state"], metrics, restarts, watchdog
+
+
+def main():
+    logging.basicConfig(level=logging.INFO)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="toy-lm")
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    _, metrics, restarts, _ = train(
+        args.arch, variant=args.variant, total_steps=args.steps,
+        seq_len=args.seq_len, global_batch=args.batch, lr=args.lr,
+        ckpt_dir=args.ckpt, use_mesh=args.mesh, multi_pod=args.multi_pod)
+    print("final:", metrics, "restarts:", restarts)
+
+
+if __name__ == "__main__":
+    main()

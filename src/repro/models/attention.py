@@ -1,0 +1,311 @@
+"""Grouped-query attention with RoPE, sliding windows, cross-attention,
+KV caches, and ElastiFormer hooks (head routing weights, LoRA q/v).
+
+TP formulation (§Perf H1): q-heads are zero-padded to cfg.n_heads_p (a
+multiple of the `model` mesh axis; wo pad rows are zero so the math is
+exact) and GQA is computed in *repeat-kv* form — k/v are expanded from K kv
+heads to the padded head count with a static take. Every head-indexed
+tensor then shards cleanly on one axis, so XLA partitions attention 16-way
+with no partial-sum all-reduces (the grouped (B,K,G,Sq,Sk) reshape used to
+shatter the head axis across two dims and force replication or worse).
+
+Two softmax-attention implementations:
+  * plain: materializes (B,Hp,Sq,Sk) scores — short sequences.
+  * blocked: lax.scan over KV chunks with online softmax (flash-style) —
+    long sequences; numerically identical (f32 accumulation) and the
+    jnp twin of kernels/flash_attention.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import lora_apply
+from repro.models import flags
+from repro.models.layers import dense_init, dtype_of, rope_apply, rope_tables
+
+NEG_INF = -1e30
+BLOCKED_THRESHOLD = 2048   # use blocked attention when Sk exceeds this
+KV_BLOCK = 1024
+
+
+def _expand_kv(t, hp: int, h: Optional[int] = None):
+    """(B,S,K,Dh) -> (B,S,Hp,Dh) repeat-kv (exact GQA; shards on heads).
+    h = logical head count (defaults to hp when there is no padding)."""
+    k = t.shape[2]
+    g = max(1, (h or hp) // k)
+    idx = jnp.minimum(jnp.arange(hp) // g, k - 1)
+    return jnp.take(t, idx, axis=2)
+
+
+def attn_init(key, cfg, cross: bool = False):
+    D, K, Dh = cfg.d_model, cfg.n_kv_heads, cfg.d_head
+    H, Hp = cfg.n_heads, cfg.n_heads_p
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+
+    def pad_h(w, axis):  # zero q-head padding (exact)
+        if Hp == H:
+            return w
+        pw = [(0, 0)] * w.ndim
+        pw[axis] = (0, Hp - H)
+        return jnp.pad(w, pw)
+
+    p = {
+        "wq": pad_h(dense_init(ks[0], D, H * Dh, dt).reshape(D, H, Dh), 1),
+        "wk": dense_init(ks[1], D, K * Dh, dt).reshape(D, K, Dh),
+        "wv": dense_init(ks[2], D, K * Dh, dt).reshape(D, K, Dh),
+        "wo": pad_h(dense_init(ks[3], H * Dh, D, dt).reshape(H, Dh, D), 0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp, Dh), dt)
+        p["bk"] = jnp.zeros((K, Dh), dt)
+        p["bv"] = jnp.zeros((K, Dh), dt)
+    return p
+
+
+def _pad_heads(t, cfg, axis: int = -1, fill: float = 0.0):
+    """Pad a head-indexed tensor on `axis` from H to Hp."""
+    H, Hp = cfg.n_heads, cfg.n_heads_p
+    if Hp == H:
+        return t
+    pw = [(0, 0)] * t.ndim
+    pw[axis] = (0, Hp - H)
+    return jnp.pad(t, pw, constant_values=fill)
+
+
+def _project_q(p, x, positions, cfg, lora, use_rope):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])       # (B,S,Hp,Dh)
+    if lora is not None and "q" in lora:
+        H, Dh = cfg.n_heads, cfg.d_head
+        dq = lora_apply(lora["q"], x).reshape(x.shape[0], x.shape[1], H, Dh)
+        q = q + _pad_heads(dq, cfg, axis=2)
+    if "bq" in p:
+        q = q + p["bq"]
+    if use_rope:
+        cos, sin = rope_tables(positions, cfg.d_head, cfg.rope_theta)
+        if cos.ndim == 2:  # (S, half) -> broadcast over batch
+            cos, sin = cos[None], sin[None]
+        q = rope_apply(q, cos, sin)
+    return q
+
+
+def _project_kv(p, x, positions, cfg, lora, use_rope):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if lora is not None and "v" in lora:
+        K, Dh = p["wv"].shape[1], p["wv"].shape[2]
+        v = v + lora_apply(lora["v"], x).reshape(x.shape[0], x.shape[1], K, Dh)
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if use_rope:
+        cos, sin = rope_tables(positions, cfg.d_head, cfg.rope_theta)
+        if cos.ndim == 2:
+            cos, sin = cos[None], sin[None]
+        k = rope_apply(k, cos, sin)
+    return k, v
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int, kv_valid=None):
+    """(B?, Sq, Sk) boolean allow-mask."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = kv_pos[..., None, :].astype(jnp.int32)
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window and window > 0:
+        m &= (qp - kp) < window
+    if kv_valid is not None:
+        m &= kv_valid[..., None, :]
+    return m
+
+
+def sdpa(q, k, v, mask, cfg=None):
+    """q:(B,Sq,Hp,Dh) k,v:(B,Sk,K,Dh) mask:(B?,Sq,Sk) -> (B,Sq,Hp,Dh).
+
+    Repeat-kv GQA (head axis shards whole); f32 softmax."""
+    B, Sq, Hp, Dh = q.shape
+    mqa = k.shape[2] == 1  # MQA: broadcast kv in the einsum, never expand
+    if k.shape[2] != Hp and not mqa:
+        h = cfg.n_heads if cfg is not None else Hp
+        k, v = _expand_kv(k, Hp, h), _expand_kv(v, Hp, h)
+    scale = Dh ** -0.5
+    if mqa:
+        s = jnp.einsum("bqhd,bsd->bhqs", q, k[:, :, 0])
+    else:
+        s = jnp.einsum("bqhd,bshd->bhqs", q, k)
+    s = s.astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    if mqa:
+        ctx = jnp.einsum("bhqs,bsd->bqhd", a.astype(v.dtype), v[:, :, 0])
+    else:
+        ctx = jnp.einsum("bhqs,bshd->bqhd", a.astype(v.dtype), v)
+    return ctx
+
+
+def blocked_sdpa(q, k, v, q_pos, kv_pos, causal, window, kv_valid=None,
+                 block: int = KV_BLOCK, cfg=None):
+    """Flash-style online-softmax attention, lax.scan over KV blocks.
+
+    Identical math to sdpa (f32 accumulators), O(Sq*block) live memory."""
+    if flags.unroll():
+        # analysis mode: cap trip count at 64 so full unroll stays compilable
+        block = max(block, -(-k.shape[1] // 64))
+        block = -(-block // 128) * 128
+    B, Sq, Hp, Dh = q.shape
+    Sk = k.shape[1]
+    mqa = k.shape[2] == 1  # MQA: broadcast kv in the einsums, never expand
+    if k.shape[2] != Hp and not mqa:
+        h = cfg.n_heads if cfg is not None else Hp
+        k, v = _expand_kv(k, Hp, h), _expand_kv(v, Hp, h)
+    kvh = k.shape[2]
+    nb = -(-Sk // block)
+    pad = nb * block - Sk
+    if pad:
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        kv_pos_p = jnp.pad(kv_pos, [(0, 0)] * (kv_pos.ndim - 1) + [(0, pad)])
+        valid = jnp.ones((Sk,), bool) if kv_valid is None else kv_valid
+        valid = jnp.pad(valid, [(0, 0)] * (valid.ndim - 1) + [(0, pad)])
+    else:
+        kv_pos_p = kv_pos
+        valid = jnp.ones((Sk,), bool) if kv_valid is None else kv_valid
+
+    def bcast_b(a):  # give kv-side tensors a batch dim for scan stacking
+        return jnp.broadcast_to(a, (B,) + a.shape[-1:]) if a.ndim == 1 else a
+
+    kv_pos_p, valid = bcast_b(kv_pos_p), bcast_b(valid)
+    kb = k.reshape(B, nb, block, kvh, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, kvh, Dh).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos_p.reshape(B, nb, block).transpose(1, 0, 2)
+    mb = valid.reshape(B, nb, block).transpose(1, 0, 2)
+
+    scale = Dh ** -0.5
+    q_posb = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(q_pos, (B, Sq))
+
+    def body(carry, xs):
+        m_i, l_i, acc = carry
+        kc, vc, pc, vm = xs
+        if mqa:
+            s = jnp.einsum("bqhd,bsd->bhqs", q, kc[:, :, 0])
+        else:
+            s = jnp.einsum("bqhd,bshd->bhqs", q, kc)
+        s = s.astype(jnp.float32) * scale
+        allow = _mask(q_posb, pc, causal, window, vm)     # (B,Sq,block)
+        s = jnp.where(allow[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p_ij = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + jnp.sum(p_ij, axis=-1)
+        if mqa:
+            pv = jnp.einsum("bhqs,bsd->bhqd", p_ij,
+                            vc[:, :, 0].astype(jnp.float32))
+        else:
+            pv = jnp.einsum("bhqs,bshd->bhqd", p_ij, vc.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hp, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hp, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hp, Sq, Dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb, mb),
+                                      unroll=flags.unroll())
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attn_apply(
+    p, x, *, cfg, positions, causal: bool = True, window: int = 0,
+    kv_x=None, kv_positions=None, kv_valid=None,
+    head_weights=None, lora=None, use_rope: bool = True,
+):
+    """Full-sequence attention (train / prefill). Self-attn if kv_x is None.
+
+    head_weights: (B, Sq, H) f32 ElastiFormer head-routing weights (already
+    masked, logical heads); multiplies per-head context before the output
+    projection — Alg. 1 output scaling = straight-through router gradient.
+    Returns (out (B,Sq,D), k, v) — k/v (logical K heads) for caches."""
+    cross = kv_x is not None
+    q = _project_q(p, x, positions, cfg, lora, use_rope and not cross)
+    if cross:
+        k, v = _project_kv(p, kv_x, kv_positions, cfg, lora, use_rope=False)
+        kvp = kv_positions if kv_positions is not None else jnp.arange(kv_x.shape[1])
+    else:
+        k, v = _project_kv(p, x, positions, cfg, lora, use_rope)
+        kvp = positions
+    eff_window = window if (window and window > 0) else k.shape[1]
+    if min(k.shape[1], eff_window) > BLOCKED_THRESHOLD:
+        qp = positions if positions.ndim == 2 else jnp.broadcast_to(positions, x.shape[:2])
+        ctx = blocked_sdpa(q, k, v, qp, kvp, causal and not cross, window,
+                           kv_valid, cfg=cfg)
+    else:
+        mask = _mask(positions, kvp, causal and not cross, window, kv_valid)
+        ctx = sdpa(q, k, v, mask, cfg=cfg)
+    if head_weights is not None:
+        ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, k, v
+
+
+def attn_decode(
+    p, x, cache, t, *, cfg, window: int = 0, head_weights=None, lora=None,
+    use_rope: bool = True, write: Optional[jnp.ndarray] = None,
+):
+    """One decode step. x: (B,1,D); cache: {'k','v': (B,L,K,Dh),
+    'valid': (B,L), 'pos': (B,L) i32}; t: scalar position.
+
+    The cache is a RING buffer: entry for position p lives at slot p % L.
+    Sliding-window layers allocate L = window so a 500k-token decode keeps
+    an O(window) cache; full-attention layers use L = max_seq (slot == p).
+    `pos` records absolute positions (-1 = empty) for RoPE-free masking.
+    write: (B,) bool — ElastiFormer token routing: skipped tokens do not
+    enter the cache.  Returns (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    pos = jnp.full((B, 1), t, jnp.int32)
+    q = _project_q(p, x, pos, cfg, lora, use_rope)
+    k_new, v_new = _project_kv(p, x, pos, cfg, lora, use_rope)
+    wr = jnp.ones((B,), bool) if write is None else write
+    slot = jax.lax.rem(t.astype(jnp.int32), jnp.int32(L))
+    old = lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+    upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+        c, jnp.where(wr[:, None, None, None], n, old(c)).astype(c.dtype),
+        slot, axis=1)
+    ck = upd(cache["k"], k_new)
+    cv = upd(cache["v"], v_new)
+    # the slot is consumed by position t either way (stale entry evicted)
+    valid = jax.lax.dynamic_update_slice_in_dim(
+        cache["valid"], wr[:, None], slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
+    new_cache = {"k": ck, "v": cv, "valid": valid, "pos": cpos}
+    kv_valid = valid & (cpos >= 0)
+    if L > BLOCKED_THRESHOLD:
+        ctx = blocked_sdpa(q, ck, cv, pos, cpos, True, window, kv_valid,
+                           cfg=cfg)
+    else:
+        mask = _mask(pos, cpos, True, window, kv_valid)
+        ctx = sdpa(q, ck, cv, mask, cfg=cfg)
+    if head_weights is not None:
+        ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, new_cache
+
+
+def attn_cache_init(cfg, batch: int, max_seq: int, window: int = 0):
+    """Ring cache of length window (local layers) or max_seq (global)."""
+    L = min(max_seq, window) if window and window > 0 else max_seq
+    K, Dh = cfg.n_kv_heads, cfg.d_head
+    dt = dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, L, K, Dh), dt),
+        "v": jnp.zeros((batch, L, K, Dh), dt),
+        "valid": jnp.zeros((batch, L), bool),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+    }

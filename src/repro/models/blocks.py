@@ -1,0 +1,389 @@
+"""Transformer blocks with ElastiFormer routing woven in.
+
+Block kinds (cfg.mixer_pattern):
+  attn  : [token-route] GQA self-attention [head-route] [LoRA]  + MLP block
+  xattn : same + cross-attention to encoder/image context       + MLP block
+  ssm   : [token-route] Mamba2 SSD mixer (no MLP)
+  rglru : [token-route] RG-LRU recurrent mixer                  + MLP block
+
+Modes:
+  base  : frozen pretrained model (the distillation teacher) — routers off.
+  train : student; input-subset selection = top-k (capacity c), Alg. 2.
+  infer : student; input-subset selection = threshold 0.5 (§B.1).
+
+Token routing semantics per mixer family:
+  attention : top-k tokens attend among themselves (MoD semantics) — the
+              gather path delivers real FLOP savings in the lowered HLO.
+  ssm/rglru : skipped tokens leave the recurrent state untouched (dt=0 /
+              a=1 exact pass-through); dense-masked in both train and infer
+              so train/infer semantics coincide.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing as R
+from repro.runtime import sharding as SH
+from repro.core.moefy import moefy_mlp
+from repro.core.lora import lora_init
+from repro.models import attention as A
+from repro.models import rglru as G
+from repro.models import ssm as S
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+from repro.models.moe import moe_apply, moe_decode, moe_init
+
+
+def has_mlp(kind: str) -> bool:
+    return kind != "ssm"
+
+
+def is_attn(kind: str) -> bool:
+    return kind in ("attn", "xattn")
+
+
+# ------------------------------ init ---------------------------------------
+
+def block_init(key, kind: str, cfg):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": norm_init(cfg.d_model, cfg.norm)}
+    if is_attn(kind):
+        p["attn"] = A.attn_init(ks[0], cfg)
+    elif kind == "ssm":
+        p["mixer"] = S.ssm_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = G.rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "xattn":
+        p["xnorm"] = norm_init(cfg.d_model, cfg.norm)
+        p["xattn"] = A.attn_init(ks[1], cfg, cross=True)
+    if has_mlp(kind):
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm)
+        p["mlp"] = moe_init(ks[2], cfg) if cfg.moe is not None else mlp_init(ks[2], cfg)
+    return p
+
+
+def block_router_init(key, kind: str, cfg, ecfg):
+    """Trainable ElastiFormer params for one layer (tiny; see Table 1)."""
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    rp = {}
+    if ecfg.mha_token_capacity is not None:
+        rp["tok_mixer"] = R.token_router_init(ks[0], D)
+    if is_attn(kind):
+        if ecfg.mha_head_topk is not None:
+            rp["head"] = R.param_router_init(ks[1], D, cfg.n_heads)
+        if ecfg.lora_rank:
+            rp["lora"] = {
+                "q": lora_init(ks[2], D, cfg.n_heads * cfg.d_head, ecfg.lora_rank),
+                "v": lora_init(ks[3], D, cfg.n_kv_heads * cfg.d_head, ecfg.lora_rank),
+            }
+    if has_mlp(kind):
+        if ecfg.mlp_token_capacity is not None:
+            rp["tok_mlp"] = R.token_router_init(ks[4], D)
+        n_exp = cfg.moe.n_experts if cfg.moe is not None else ecfg.mlp_n_experts
+        if n_exp and ecfg.mlp_expert_topk:
+            rp["expert"] = R.param_router_init(ks[5], D, n_exp)
+    return rp
+
+
+# ------------------------- helpers ------------------------------------------
+
+def _round_k(capacity: float, s: int) -> int:
+    k = int(math.ceil(capacity * s))
+    if s >= 1024:  # MXU-friendly gather sizes on long sequences
+        k = min(s, -(-k // 128) * 128)
+    return max(1, min(s, k))
+
+
+def _head_weights(rp, h, ecfg, auxes):
+    if rp is None or "head" not in rp or ecfg.mha_head_topk is None:
+        return None
+    w, m, a = R.param_route_weights(rp["head"], h, ecfg.mha_head_topk)
+    auxes.append(a)
+    return w * m
+
+
+def _mlp_fn(p, rp, cfg, ecfg, elastic_on, mode, auxes):
+    """Returns f(h_sub, pos_sub) for the MLP/MoE sub-block."""
+    def f(h, _pos):
+        if cfg.moe is not None:
+            if elastic_on and rp and "expert" in rp and mode != "base":
+                y, a = moe_apply(
+                    p["mlp"], h, act=cfg.act, top_k=ecfg.mlp_expert_topk,
+                    router_w=rp["expert"]["w"], normalize_to_m=True,
+                    capacity_factor=cfg.moe.capacity_factor,
+                    seq_chunk=cfg.moe.seq_chunk)
+            else:
+                y, a = moe_apply(
+                    p["mlp"], h, act=cfg.act, top_k=cfg.moe.top_k,
+                    capacity_factor=cfg.moe.capacity_factor,
+                    seq_chunk=cfg.moe.seq_chunk)
+            auxes.append(a)
+            return y
+        if (elastic_on and rp and "expert" in rp and mode != "base"
+                and ecfg.mlp_n_experts):
+            ep = moefy_mlp(p["mlp"], ecfg.mlp_n_experts)
+            # seq_chunk bounds the (B,E,C,D) dispatch buffers: 512 keeps
+            # the f32 scatter-upcast live set ~1.3 GB/dev (vs 8.5 GB at a
+            # full-sequence chunk) — §Perf H4 (HBM fit).
+            y, a = moe_apply(
+                ep, h, act=cfg.act, top_k=ecfg.mlp_expert_topk,
+                router_w=rp["expert"]["w"], normalize_to_m=True,
+                seq_chunk=512)
+            auxes.append(a)
+            return y
+        return mlp_apply(p["mlp"], h, cfg.act)
+    return f
+
+
+# --------------------- full-sequence block apply ----------------------------
+
+def block_apply(
+    kind: str, p, rp, x, *, cfg, ecfg, mode: str, elastic_on: bool,
+    window: int = 0, positions=None, causal: bool = True,
+    enc_kv=None, enc_valid=None, collect_cache: bool = False,
+    max_cache_len: int = 0,
+):
+    """x: (B,S,D) -> (x', aux[, cache]). Pre-norm residual block."""
+    B, Seq, D = x.shape
+    auxes = [R.RouteAux.zero()]
+    if positions is None:
+        positions = jnp.arange(Seq, dtype=jnp.int32)
+    routed = elastic_on and mode != "base"
+    cache = {}
+
+    # ---- temporal mixer ----
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    cap = ecfg.mha_token_capacity if (routed and ecfg) else None
+
+    if is_attn(kind):
+        lora = rp.get("lora") if (routed and rp) else None
+        if cap is None:
+            hw = _head_weights(rp if routed else None, h, ecfg, auxes)
+            y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
+                                   causal=causal, window=window,
+                                   head_weights=hw, lora=lora)
+            delta, keep = y, jnp.ones((B, Seq), bool)
+        elif mode == "train" and ecfg.routing_impl == "gather":
+            logits = R.token_logits(rp["tok_mixer"], h)
+            scores = jax.nn.sigmoid(logits)
+            kk = _round_k(cap, Seq)
+            idx = R.topk_indices(scores, kk)
+            h_sel = R.gather_tokens(h, idx)
+            pos_sel = jnp.take_along_axis(
+                jnp.broadcast_to(positions, (B, Seq)), idx, 1)
+            hw = _head_weights(rp, h_sel, ecfg, auxes)
+            y_sel, k, v = A.attn_apply(p["attn"], h_sel, cfg=cfg,
+                                       positions=pos_sel, causal=causal,
+                                       window=window, head_weights=hw,
+                                       lora=lora)
+            w_sel = jnp.take_along_axis(scores, idx, 1)
+            delta = R.scatter_add_tokens(
+                x, idx, y_sel * w_sel[..., None].astype(y_sel.dtype))
+            keep = R.topk_mask(scores, kk)
+            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
+                                       keep=keep))
+            if collect_cache:  # scatter k/v back to full positions
+                k = _scatter_kv(k, idx, B, Seq)
+                v = _scatter_kv(v, idx, B, Seq)
+        else:  # threshold (infer/prefill) or dense_mask training
+            logits = R.token_logits(rp["tok_mixer"], h)
+            scores = jax.nn.sigmoid(logits)
+            if mode == "train":
+                keep = R.topk_mask(scores, _round_k(cap, Seq))
+                auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
+                                           keep=keep))
+            else:
+                keep = logits > 0.0
+                auxes.append(R.RouteAux.of(keep=keep))
+            hw = _head_weights(rp, h, ecfg, auxes)
+            y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
+                                   causal=causal, window=window,
+                                   kv_valid=keep, head_weights=hw, lora=lora)
+            delta = y * (keep * scores)[..., None].astype(y.dtype)
+        if collect_cache:
+            L = max_cache_len or Seq
+            cache["attn"] = _pad_cache(k, v, keep, L, window)
+    else:  # ssm / rglru — dense masked routing (state pass-through semantics)
+        keep = None
+        if cap is not None:
+            logits = R.token_logits(rp["tok_mixer"], h)
+            scores = jax.nn.sigmoid(logits)
+            if mode == "train":
+                keep = R.topk_mask(scores, _round_k(cap, Seq))
+                auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
+                                           keep=keep))
+            else:
+                keep = logits > 0.0
+                auxes.append(R.RouteAux.of(keep=keep))
+        if kind == "ssm":
+            y, (st, cv) = S.ssm_apply(p["mixer"], h, cfg, keep_mask=keep)
+            if collect_cache:
+                cache["ssm"] = {"state": st, "conv": cv}
+        else:
+            y, (st, cv) = G.rglru_apply(p["mixer"], h, cfg, keep_mask=keep)
+            if collect_cache:
+                cache["rglru"] = {"state": st, "conv": cv}
+        if keep is None:
+            delta = y
+        else:
+            delta = y * (keep * scores)[..., None].astype(y.dtype)
+    x = x + delta
+
+    # ---- cross attention (xattn) ----
+    if kind == "xattn":
+        hx = norm_apply(p["xnorm"], x, cfg.norm)
+        lora = None
+        y, xk, xv = A.attn_apply(
+            p["xattn"], hx, cfg=cfg, positions=positions, causal=False,
+            kv_x=enc_kv, kv_positions=jnp.arange(enc_kv.shape[1]),
+            kv_valid=enc_valid, use_rope=False)
+        x = x + y
+        if collect_cache:
+            ev = (jnp.ones(enc_kv.shape[:2], bool) if enc_valid is None
+                  else jnp.broadcast_to(enc_valid, enc_kv.shape[:2]))
+            cache["xattn"] = {"k": xk, "v": xv, "valid": ev}
+
+    # ---- MLP ----
+    if has_mlp(kind):
+        h = norm_apply(p["norm2"], x, cfg.norm)
+        f = _mlp_fn(p, rp, cfg, ecfg, elastic_on, mode, auxes)
+        cap_mlp = ecfg.mlp_token_capacity if (routed and ecfg) else None
+        delta, a = R.route_tokens(
+            (rp or {}).get("tok_mlp"), h, f, cap_mlp, mode,
+            positions=positions, impl=ecfg.routing_impl if ecfg else "gather")
+        auxes.append(a)
+        x = x + delta
+
+    aux = auxes[0]
+    for a in auxes[1:]:
+        aux = aux + a
+    return (x, aux, cache) if collect_cache else (x, aux)
+
+
+def _scatter_kv(t, idx, b, s):
+    out = jnp.zeros((b, s) + t.shape[2:], t.dtype)
+    bi = jnp.arange(b)[:, None]
+    return out.at[bi, idx].set(t)
+
+
+def _pad_cache(k, v, keep, max_len: int, window: int = 0):
+    """Lay prefill k/v into the ring-cache format (slot = pos % L)."""
+    B, S = k.shape[:2]
+    L = min(max_len, window) if window and window > 0 else max_len
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if S <= L:
+        pad = L - S
+        pw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pw), "v": jnp.pad(v, pw),
+                "valid": jnp.pad(keep, [(0, 0), (0, pad)]),
+                "pos": jnp.pad(pos, [(0, 0), (0, pad)], constant_values=-1)}
+    # keep the last L positions, scattered to their ring slots
+    k, v = k[:, -L:], v[:, -L:]
+    keep, pos = keep[:, -L:], pos[:, -L:]
+    slots = pos % L
+    bi = jnp.arange(B)[:, None]
+    out = {
+        "k": jnp.zeros_like(k).at[bi, slots].set(k),
+        "v": jnp.zeros_like(v).at[bi, slots].set(v),
+        "valid": jnp.zeros_like(keep).at[bi, slots].set(keep),
+        "pos": jnp.full_like(pos, -1).at[bi, slots].set(pos),
+    }
+    return out
+
+
+# ------------------------------ decode --------------------------------------
+
+def block_decode(kind: str, p, rp, x, cache, t, *, cfg, ecfg, mode: str,
+                 elastic_on: bool, window: int = 0):
+    """One token. x: (B,1,D); returns (x', new_cache)."""
+    B = x.shape[0]
+    routed = elastic_on and mode != "base" and rp is not None
+    new_cache = dict(cache)
+
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    keep, score = None, None
+    if routed and ecfg.mha_token_capacity is not None and "tok_mixer" in rp:
+        logits = R.token_logits(rp["tok_mixer"], h)[:, 0]    # (B,)
+        keep = logits > 0.0
+        score = jax.nn.sigmoid(logits)
+
+    auxes = []
+    if is_attn(kind):
+        lora = rp.get("lora") if routed else None
+        hw = _head_weights(rp if routed else None, h, ecfg, auxes)
+        y, new_cache["attn"] = A.attn_decode(
+            p["attn"], h, cache["attn"], t, cfg=cfg, window=window,
+            head_weights=hw, lora=lora, write=keep)
+    elif kind == "ssm":
+        y, new_cache["ssm"] = S.ssm_decode(p["mixer"], h, cache["ssm"], cfg,
+                                           write=keep)
+    else:
+        y, new_cache["rglru"] = G.rglru_decode(p["mixer"], h, cache["rglru"],
+                                               cfg, write=keep)
+    if keep is not None:
+        y = y * (keep * score)[:, None, None].astype(y.dtype)
+    x = x + y
+
+    if kind == "xattn":
+        hx = norm_apply(p["xnorm"], x, cfg.norm)
+        xc = cache["xattn"]
+        pos = jnp.zeros((B, 1), jnp.int32)
+        kvp = jnp.broadcast_to(jnp.arange(xc["k"].shape[1], dtype=jnp.int32),
+                               xc["k"].shape[:2])
+        mask = A._mask(pos, kvp, False, 0, xc["valid"])
+        q = A._project_q(p["xattn"], hx, pos, cfg, None, False)
+        ctx = A.sdpa(q, xc["k"], xc["v"], mask)
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, p["xattn"]["wo"])
+
+    if has_mlp(kind):
+        h = norm_apply(p["norm2"], x, cfg.norm)
+        keep2, score2 = None, None
+        if routed and ecfg.mlp_token_capacity is not None and "tok_mlp" in rp:
+            lg = R.token_logits(rp["tok_mlp"], h)[:, 0]
+            keep2, score2 = lg > 0.0, jax.nn.sigmoid(lg)
+        if cfg.moe is not None:
+            if routed and "expert" in rp:
+                y, _ = moe_decode(p["mlp"], h, act=cfg.act,
+                                  top_k=ecfg.mlp_expert_topk,
+                                  router_w=rp["expert"]["w"],
+                                  normalize_to_m=True)
+            else:
+                y, _ = moe_decode(p["mlp"], h, act=cfg.act,
+                                  top_k=cfg.moe.top_k)
+        elif routed and "expert" in rp and ecfg.mlp_n_experts:
+            ep = moefy_mlp(p["mlp"], ecfg.mlp_n_experts)
+            y, _ = moe_decode(ep, h, act=cfg.act,
+                              top_k=ecfg.mlp_expert_topk,
+                              router_w=rp["expert"]["w"], normalize_to_m=True)
+        else:
+            y = mlp_apply(p["mlp"], h, cfg.act)
+        if keep2 is not None:
+            y = y * (keep2 * score2)[:, None, None].astype(y.dtype)
+        x = x + y
+    return x, new_cache
+
+
+def block_cache_init(kind: str, cfg, batch: int, max_seq: int, enc_len: int = 0,
+                     window: int = 0):
+    c = {}
+    if is_attn(kind):
+        c["attn"] = A.attn_cache_init(cfg, batch, max_seq, window)
+    if kind == "xattn":
+        c["xattn"] = {
+            "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                           jnp.dtype(cfg.dtype)),
+            "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                           jnp.dtype(cfg.dtype)),
+            "valid": jnp.zeros((batch, enc_len), bool),
+        }
+    if kind == "ssm":
+        c["ssm"] = S.ssm_cache_init(cfg, batch)
+    if kind == "rglru":
+        c["rglru"] = G.rglru_cache_init(cfg, batch)
+    return c

@@ -1,0 +1,29 @@
+"""Global tracing flags.
+
+ANALYSIS_UNROLL: when True, every lax.scan in the model (layer stack, blocked
+attention KV loop, MoE dispatch chunk loop) is fully unrolled at trace time.
+Used ONLY by the roofline analysis path: XLA's HloCostAnalysis counts a while
+body once regardless of trip count, so the dry-run lowers small unrolled
+clones (1 and 2 periods deep) and extrapolates exactly (see launch/dryrun.py).
+The production path always scans (compile time, code size).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+ANALYSIS_UNROLL = False
+
+
+def unroll() -> bool:
+    return ANALYSIS_UNROLL
+
+
+@contextmanager
+def analysis_unroll(enabled: bool = True):
+    global ANALYSIS_UNROLL
+    prev = ANALYSIS_UNROLL
+    ANALYSIS_UNROLL = enabled
+    try:
+        yield
+    finally:
+        ANALYSIS_UNROLL = prev

@@ -1,0 +1,90 @@
+"""Shared neural-net primitives: norms, activations, inits, RoPE.
+
+Pure JAX, params as plain dict pytrees. All inits take an explicit PRNG key
+and return dicts of jnp arrays in cfg.dtype (norms/routers in f32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def norm_init(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def act_fn(name: str):
+    if name in ("swiglu",):
+        return jax.nn.silu
+    if name in ("geglu",):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    return lambda x: jax.nn.gelu(x, approximate=True)
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ----------------------------- RoPE ---------------------------------------
+
+def rope_tables(positions, d_head: int, theta: float, dtype=jnp.float32):
+    """cos/sin tables for given integer positions. positions: (...,)"""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def rope_apply(x, cos, sin):
+    """x: (..., n_heads, d_head); cos/sin broadcastable to (..., 1, d_head/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------- dense MLP ---------------------------------------
+
+def mlp_init(key, cfg):
+    D, F, dt = cfg.d_model, cfg.d_ff, dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], D, F, dt), "wo": dense_init(ks[1], F, D, dt)}
+    if is_gated(cfg.act):
+        p["wg"] = dense_init(ks[2], D, F, dt)
+    return p
+
+
+def mlp_apply(p, x, act: str):
+    h = x @ p["wi"]
+    if is_gated(act):
+        h = act_fn(act)(x @ p["wg"]) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ p["wo"]

@@ -1,0 +1,408 @@
+"""Model assembly: embedding, pattern-scanned block stack, LM head; prefill &
+decode; encoder / enc-dec / VLM plumbing; ElastiFormer router attachment.
+
+Layer stacking uses a *pattern scan*: the layer sequence is grouped into
+repeating periods (heterogeneous kinds, windows, and elastic on/off flags are
+static per pattern position). Parameters are stacked per position and the
+period is unrolled inside a single jax.lax.scan body — so compile time and
+HLO size stay ~O(one period) even at 88 layers and 512-way SPMD, with exact
+per-kind cost attribution (no lax.switch dual-branch waste). Remainder layers
+run unrolled ("tail").
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import RouteAux, token_router_init, topk_indices, gather_tokens
+from repro.models.blocks import (block_apply, block_cache_init, block_decode,
+                                 block_router_init, block_init)
+from repro.models.layers import dense_init, dtype_of, norm_apply, norm_init
+from repro.models import flags
+
+
+class PatternPos(NamedTuple):
+    kind: str
+    window: int
+    elastic: bool
+
+
+def _total(mesh, axes) -> int:
+    n = 1
+    for g in axes:
+        for a in (g if isinstance(g, tuple) else (g,)):
+            n *= mesh.shape.get(a, 1)
+    return n
+
+
+def build_pattern(cfg, ecfg=None):
+    """Returns (period: tuple[PatternPos], P, R)."""
+    n = cfg.n_layers
+    base = math.lcm(len(cfg.mixer_pattern), len(cfg.window_pattern))
+    if ecfg is not None and ecfg.layers == "even":
+        base = math.lcm(base, 2)
+    period_len = base if base <= n else n
+    kinds, wins = cfg.layer_kinds, cfg.layer_windows
+    ecfg_applies = (lambda i: True) if ecfg is None else ecfg.applies_to_layer
+    period = tuple(PatternPos(kinds[j], wins[j], ecfg_applies(j))
+                   for j in range(period_len))
+    return period, n // period_len, n % period_len
+
+
+def _split_layers(per_layer: list, period_len: int, P: int):
+    """[L trees] -> (scan: [period_len stacked-over-P trees], tail: [R trees])."""
+    scan = []
+    for j in range(period_len):
+        if P > 0:
+            scan.append(jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[per_layer[p * period_len + j] for p in range(P)]))
+    tail = per_layer[P * period_len:]
+    return scan, tail
+
+
+# ------------------------------- init ---------------------------------------
+
+def model_init(key, cfg, ecfg=None):
+    period, P, _ = build_pattern(cfg, ecfg)
+    dt = dtype_of(cfg)
+    D, V = cfg.d_model, cfg.padded_vocab
+    ks = jax.random.split(key, 8)
+    params = {"final_norm": norm_init(D, cfg.norm)}
+    if V:
+        params["embed"] = dense_init(ks[0], V, D, dt, scale=0.02)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], D, V, dt)
+    layers = [block_init(jax.random.fold_in(ks[2], i), cfg.layer_kinds[i], cfg)
+              for i in range(cfg.n_layers)]
+    params["scan"], params["tail"] = _split_layers(layers, len(period), P)
+    if cfg.family in ("encoder", "vlm") or cfg.d_frontend:
+        params["in_proj"] = dense_init(ks[3], cfg.d_frontend or D, D, dt)
+    if cfg.encoder is not None:
+        params["encoder"] = model_init(ks[4], cfg.encoder, ecfg)
+        params["encoder"]["in_proj"] = dense_init(
+            ks[5], cfg.encoder.d_frontend or cfg.encoder.d_model,
+            cfg.encoder.d_model, dt)
+    return params
+
+
+def router_init(key, cfg, ecfg):
+    """Trainable ElastiFormer parameter tree (mirrors the layer stacking)."""
+    period, P, _ = build_pattern(cfg, ecfg)
+    ks = jax.random.split(key, 4)
+    layers = [block_router_init(jax.random.fold_in(ks[0], i),
+                                cfg.layer_kinds[i], cfg, ecfg)
+              for i in range(cfg.n_layers)]
+    rp = {}
+    rp["scan"], rp["tail"] = _split_layers(layers, len(period), P)
+    if ecfg.vlm_token_capacity is not None and (
+            cfg.family in ("vlm", "encdec") or cfg.n_image_tokens):
+        D = cfg.d_model
+        if ecfg.vlm_router == "mlp":
+            h = ecfg.vlm_router_hidden or D
+            rp["vlm"] = {
+                "w1": dense_init(ks[1], D, h, jnp.float32),
+                "b1": jnp.zeros((h,), jnp.float32),
+                "w2": dense_init(ks[2], h, 1, jnp.float32),
+                "b2": jnp.zeros((), jnp.float32),
+            }
+        else:
+            rp["vlm"] = token_router_init(ks[1], D)
+    if cfg.encoder is not None:
+        rp["encoder"] = router_init(ks[3], cfg.encoder, ecfg)
+    return rp
+
+
+def router_param_count(rp) -> int:
+    return sum(x.size for x in jax.tree.leaves(rp))
+
+
+# --------------------------- context selection -------------------------------
+
+def _vlm_logits(rp, emb):
+    if "w1" in rp:  # MLP router (paper §5.3)
+        h = jax.nn.gelu(emb.astype(jnp.float32) @ rp["w1"] + rp["b1"])
+        return (h @ rp["w2"])[..., 0] + rp["b2"]
+    return emb.astype(jnp.float32) @ rp["w"] + rp["b"]
+
+
+def select_context_tokens(rp, emb, ecfg, mode: str):
+    """Paper §5.3: top-k image/context-token selection before the decoder.
+    Non-causal, so top-k applies at inference too (no BCE aux needed)."""
+    if mode == "base" or rp is None or "vlm" not in rp \
+            or ecfg.vlm_token_capacity is None:
+        return emb, None
+    B, T, D = emb.shape
+    logits = _vlm_logits(rp["vlm"], emb)
+    scores = jax.nn.sigmoid(logits)
+    k = max(1, int(math.ceil(ecfg.vlm_token_capacity * T)))
+    idx = topk_indices(scores, k)
+    sel = gather_tokens(emb, idx)
+    w = jnp.take_along_axis(scores, idx, 1)
+    return sel * w[..., None].astype(sel.dtype), None
+
+
+# ------------------------------ stack runner ---------------------------------
+
+def _run_stack(params, rparams, x, *, cfg, ecfg, mode, period, causal,
+               enc_kv=None, enc_valid=None, remat=False):
+    aux0 = RouteAux.zero()
+
+    def apply_block(ent, lp, lrp, x, enc_kv, enc_valid):
+        return block_apply(
+            ent.kind, lp, lrp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+            elastic_on=ent.elastic, window=ent.window, causal=causal,
+            enc_kv=enc_kv, enc_valid=enc_valid)
+
+    # §Perf H2: under a mesh, run each block shard_map-MANUAL over the batch
+    # axes (model axis stays auto for GSPMD tensor parallelism). This makes
+    # every batch-indexed gather/scatter in token routing / MoE dispatch
+    # device-local — GSPMD cannot partition batch-indexed scatters and was
+    # replicating them to the full global batch (12 GB f32 tensors + 80 GB
+    # of all-reduce per layer at qwen2/train_4k scale).
+    from repro.runtime import sharding as _SH
+    mesh = _SH.active_mesh()
+    ba = _SH.batch_axes(mesh) if mesh is not None else ()
+    # skip when the batch axes are trivial (size 1: XLA rejects auto
+    # collectives nested in a manual-over-one-partition region) or don't
+    # divide the batch
+    ba = ba if (ba and _total(mesh, ba) > 1
+                and x.shape[0] % _total(mesh, ba) == 0) else ()
+
+    def shard_block(f):
+        if not ba:
+            return f
+
+        def body(lp, lrp, xx, ekv, evd):
+            y, a = f(lp, lrp, xx, ekv, evd)
+            return y, jax.tree.map(lambda s: jax.lax.pmean(s, ba), a)
+
+        from jax.sharding import PartitionSpec as P
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(ba, None, None),
+                      P() if enc_kv is None else P(ba, None, None),
+                      P() if enc_valid is None else P(ba, None)),
+            out_specs=(P(ba, None, None), P()),
+            axis_names=frozenset(a for g in ba for a in
+                                 (g if isinstance(g, tuple) else (g,))),
+            check_vma=False)
+
+    fns = []
+    for ent in period:
+        f = shard_block(partial(apply_block, ent))
+        if remat:
+            f = jax.checkpoint(f)
+        fns.append(f)
+
+    has_rp = rparams is not None and mode != "base"
+
+    def body(carry, xs):
+        x, aux = carry
+        lps = xs[0]
+        lrps = xs[1] if has_rp else [None] * len(period)
+        for j in range(len(period)):
+            x, a = fns[j](lps[j], lrps[j], x, enc_kv, enc_valid)
+            aux = aux + a
+        return (x, aux), None
+
+    if params["scan"]:
+        assert len(params["scan"]) == len(period), (
+            f"param stacking period ({len(params['scan'])}) != apply-time "
+            f"pattern period ({len(period)}): init and apply must use the "
+            f"same ecfg.layers mode")
+        xs = (params["scan"], rparams["scan"]) if has_rp else (params["scan"],)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), xs,
+                                    unroll=flags.unroll())
+    else:
+        aux = aux0
+    for i, lp in enumerate(params["tail"]):
+        ent = period[i % len(period)]
+        lrp = rparams["tail"][i] if has_rp else None
+        x, a = fns[i % len(period)](lp, lrp, x, enc_kv, enc_valid)
+        aux = aux + a
+    return x, aux
+
+
+def _embed(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _logits(params, cfg, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.padded_vocab != cfg.vocab_size:
+        v = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(v, logits, -1e30)
+    return logits
+
+
+def _context(params, rparams, batch, cfg, ecfg, mode, remat=False):
+    """Image/encoder context for xattn layers -> (enc_kv, enc_valid, aux)."""
+    if cfg.family == "vlm":
+        emb = batch["image_embeds"].astype(dtype_of(cfg)) @ params["in_proj"]
+        emb, valid = select_context_tokens(rparams, emb, ecfg, mode) \
+            if ecfg is not None else (emb, None)
+        return emb, valid, RouteAux.zero()
+    if cfg.encoder is not None:
+        ecfg_enc = ecfg
+        enc_p = params["encoder"]
+        enc_rp = rparams.get("encoder") if (rparams and mode != "base") else None
+        x = batch["frames"].astype(dtype_of(cfg)) @ enc_p["in_proj"]
+        period, _, _ = build_pattern(cfg.encoder, ecfg_enc)
+        x, aux = _run_stack(enc_p, enc_rp, x, cfg=cfg.encoder, ecfg=ecfg_enc,
+                            mode=mode, period=period, causal=False, remat=remat)
+        x = norm_apply(enc_p["final_norm"], x, cfg.encoder.norm)
+        x, valid = select_context_tokens(rparams, x, ecfg, mode) \
+            if ecfg is not None else (x, None)
+        return x, valid, aux
+    return None, None, RouteAux.zero()
+
+
+def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
+            return_hidden: bool = False, remat: bool = False):
+    """Full-sequence forward. Returns (logits | hidden | embeddings, aux)."""
+    period, _, _ = build_pattern(cfg, ecfg)
+    if cfg.family == "encoder":
+        x = batch["embeds"].astype(dtype_of(cfg)) @ params["in_proj"]
+        rp = rparams if mode != "base" else None
+        x, aux = _run_stack(params, rp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+                            period=period, causal=False, remat=remat)
+        return norm_apply(params["final_norm"], x, cfg.norm), aux
+    enc_kv, enc_valid, aux0 = _context(params, rparams, batch, cfg, ecfg,
+                                       mode, remat)
+    x = _embed(params, cfg, batch["tokens"])
+    rp = rparams if mode != "base" else None
+    x, aux = _run_stack(params, rp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+                        period=period, causal=True, enc_kv=enc_kv,
+                        enc_valid=enc_valid, remat=remat)
+    aux = aux + aux0
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, aux
+    return _logits(params, cfg, x), aux
+
+
+# ------------------------------ serving --------------------------------------
+
+def cache_init(cfg, batch: int, max_seq: int):
+    period, P, _ = build_pattern(cfg, None)
+    enc_len = cfg.n_image_tokens or cfg.encoder_seq
+    caches = [block_cache_init(k, cfg, batch, max_seq, enc_len,
+                               window=cfg.layer_windows[i])
+              for i, k in enumerate(cfg.layer_kinds)]
+    scan, tail = _split_layers(caches, len(period), P)
+    return {"scan": scan, "tail": tail}
+
+
+def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
+            max_cache_len: int = 0):
+    """Forward + cache collection. Returns (logits_last (B,V), caches)."""
+    period, P, _ = build_pattern(cfg, ecfg)
+    enc_kv, enc_valid, _ = _context(params, rparams, batch, cfg, ecfg, mode)
+    x = _embed(params, cfg, batch["tokens"])
+    S = x.shape[1]
+    L = max_cache_len or S
+    has_rp = rparams is not None and mode != "base"
+
+    def apply_block(ent, lp, lrp, x):
+        return block_apply(
+            ent.kind, lp, lrp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+            elastic_on=ent.elastic, window=ent.window, causal=True,
+            enc_kv=enc_kv, enc_valid=enc_valid, collect_cache=True,
+            max_cache_len=L)
+
+    def body(x, xs):
+        lps = xs[0]
+        lrps = xs[1] if has_rp else [None] * len(period)
+        ncs = []
+        for j, ent in enumerate(period):
+            x, _, nc = apply_block(ent, lps[j], lrps[j], x)
+            ncs.append(nc)
+        return x, ncs
+
+    if params["scan"]:
+        xs = (params["scan"], rparams["scan"]) if has_rp else (params["scan"],)
+        x, scan_caches = jax.lax.scan(body, x, xs, unroll=flags.unroll())
+    else:
+        scan_caches = []
+    tail_caches = []
+    for i, lp in enumerate(params["tail"]):
+        ent = period[i % len(period)]
+        lrp = rparams["tail"][i] if has_rp else None
+        x, _, nc = apply_block(ent, lp, lrp, x)
+        tail_caches.append(nc)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = _logits(params, cfg, x[:, -1])
+    return logits, {"scan": scan_caches, "tail": tail_caches}
+
+
+def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
+                mode: str = "infer"):
+    """One decode step. token: (B,1) i32; t: scalar i32 position.
+    Returns (logits (B,V), new caches)."""
+    period, _, _ = build_pattern(cfg, ecfg)
+    x = _embed(params, cfg, token)
+    has_rp = rparams is not None and mode != "base"
+
+    def body(x, xs):
+        lps, lcs = xs[0], xs[-1]
+        lrps = xs[1] if has_rp else [None] * len(period)
+        ncs = []
+        for j, ent in enumerate(period):
+            x, nc = block_decode(
+                ent.kind, lps[j], lrps[j], x, lcs[j], t, cfg=cfg, ecfg=ecfg,
+                mode=mode, elastic_on=ent.elastic, window=ent.window)
+            ncs.append(nc)
+        return x, ncs
+
+    if params["scan"]:
+        xs = ((params["scan"], rparams["scan"], caches["scan"]) if has_rp
+              else (params["scan"], caches["scan"]))
+        x, new_scan = jax.lax.scan(body, x, xs, unroll=flags.unroll())
+    else:
+        new_scan = []
+    new_tail = []
+    for i, lp in enumerate(params["tail"]):
+        ent = period[i % len(period)]
+        lrp = rparams["tail"][i] if has_rp else None
+        x, nc = block_decode(ent.kind, lp, lrp, x, caches["tail"][i], t,
+                             cfg=cfg, ecfg=ecfg, mode=mode,
+                             elastic_on=ent.elastic, window=ent.window)
+        new_tail.append(nc)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = _logits(params, cfg, x[:, -1])
+    return logits, {"scan": new_scan, "tail": new_tail}
+
+
+# ------------------------------ input specs ----------------------------------
+
+def batch_specs(cfg, seq_len: int, global_batch: int, kind: str):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    i32 = jnp.int32
+    B, S = global_batch, seq_len
+    if kind == "decode":
+        specs = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+    elif cfg.family == "encoder":
+        specs = {"embeds": jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens or S, cfg.d_frontend or cfg.d_model),
+            jnp.float32)}
+        return specs
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.family == "vlm" and kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_frontend), jnp.float32)
+    if cfg.encoder is not None and kind != "decode":
+        e = cfg.encoder
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, e.encoder_seq, e.d_frontend or e.d_model), jnp.float32)
+    return specs
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: cache_init(cfg, batch, max_seq))

@@ -1,0 +1,157 @@
+"""Mixture-of-experts MLP: native (qwen2-moe, grok-1) and ElastiFormer's
+moefied dense MLP share this machinery.
+
+Dispatch is per-expert capacity gather (exact top-k semantics, FLOPs
+proportional to selected experts only, no (B,S,E,C) one-hot): for each expert
+take its top-C tokens by routing weight, gather, batched expert matmul,
+weighted scatter-add. Sequence-chunked via lax.scan to bound the gather
+buffer and keep the HLO small at 512-way SPMD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import RouteAux, topk_mask
+from repro.models.layers import act_fn, dense_init, dtype_of, is_gated
+from repro.models import flags
+
+
+def moe_init(key, cfg):
+    """Native MoE params (router + stacked experts + optional shared)."""
+    m = cfg.moe
+    D, dt = cfg.d_model, dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    E, Fe = m.n_experts, m.d_expert
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "wi": dense_init(ks[1], D, E * Fe, dt).reshape(D, E, Fe).transpose(1, 0, 2),
+        "wo": dense_init(ks[2], Fe, E * D, dt).reshape(Fe, E, D).transpose(1, 0, 2),
+    }
+    if is_gated(cfg.act):
+        p["wg"] = dense_init(ks[3], D, E * Fe, dt).reshape(D, E, Fe).transpose(1, 0, 2)
+    if m.n_shared_experts:
+        Fs = m.d_shared
+        p["shared"] = {"wi": dense_init(ks[4], D, Fs, dt),
+                       "wo": dense_init(ks[5], Fs, D, dt)}
+        if is_gated(cfg.act):
+            p["shared"]["wg"] = dense_init(ks[6], D, Fs, dt)
+    return p
+
+
+def _expert_ffn(p, x_sel, act):
+    """x_sel: (B,E,C,D), expert weights (E,D,Fe)/(E,Fe,D) -> (B,E,C,D)."""
+    h = jnp.einsum("becd,edf->becf", x_sel, p["wi"])
+    if "wg" in p:
+        h = act_fn(act)(jnp.einsum("becd,edf->becf", x_sel, p["wg"])) * h
+    else:
+        h = act_fn(act)(h)
+    return jnp.einsum("becf,efd->becd", h, p["wo"])
+
+
+def moe_apply(
+    p, x, *, act: str, top_k: int, router_w=None, normalize_to_m: bool = False,
+    capacity_factor: float = 1.25, seq_chunk: int = 2048,
+):
+    """x: (B,S,D) -> (B,S,D), aux. router_w overrides p['router'] (elastic)."""
+    B, S, D = x.shape
+    rw = router_w if router_w is not None else p["router"]
+    E = rw.shape[-1]
+    k = min(top_k, E)
+    chunk = min(seq_chunk, S)
+    n_chunks = -(-S // chunk)
+    # Elastic token routing hands us ragged S (e.g. ceil(0.8*4096)=3277):
+    # pad to a chunk multiple; padded tokens are barred from dispatch.
+    s_pad = n_chunks * chunk
+    x_orig = x
+    if s_pad != S:
+        x = jnp.pad(x, [(0, 0), (0, s_pad - S), (0, 0)])
+    valid = (jnp.arange(s_pad) < S)
+    cap = int(math.ceil(k * chunk / E * capacity_factor))
+    cap = min(chunk, max(4, -(-cap // 4) * 4))
+
+    def one_chunk(xc, vc):
+        s = xc.shape[1]
+        logits = xc.astype(jnp.float32) @ rw                  # (B,s,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        w = probs * E if normalize_to_m else probs
+        mask = topk_mask(w, k) & vc[None, :, None]
+        red_frac = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))
+        load = E * jnp.sum(red_frac * jnp.mean(probs, axis=(0, 1)))
+        sc = jnp.where(mask, w, -jnp.inf)                     # (B,s,E)
+        vals, idx = jax.lax.top_k(sc.transpose(0, 2, 1), cap)  # (B,E,C)
+        keep = jnp.isfinite(vals)
+        # dispatch: token gather into (B,E,C,D) buffers (UNweighted)
+        x_sel = jnp.take_along_axis(xc[:, None], idx[..., None], axis=2)
+        y_buf = _expert_ffn(p, x_sel, act)                    # (B,E,C,D)
+        # combine by GATHER, not scatter (§Perf H3): XLA upcasts bf16
+        # scatter-add to f32 and surrounds it with full-buffer copies
+        # (~25 GB/layer of traffic). Instead invert the dispatch index
+        # with a tiny int32 scatter, then each token reads back its k
+        # expert outputs — bf16 loads proportional to top-k only.
+        b3 = jnp.arange(B)[:, None, None]
+        e3 = jnp.arange(E)[None, :, None]
+        slot_of = jnp.full((B, E, s), -1, jnp.int32)
+        slot_of = slot_of.at[b3, e3, idx].set(
+            jnp.where(keep, jnp.broadcast_to(jnp.arange(cap), (B, E, cap)),
+                      -1))
+        wtok, eids = jax.lax.top_k(sc, k)                     # (B,s,k)
+        slots = jnp.take_along_axis(slot_of.transpose(0, 2, 1), eids, -1)
+        ok = jnp.isfinite(wtok) & (slots >= 0)
+        lin = eids * cap + jnp.maximum(slots, 0)              # (B,s,k)
+        y_tok = jnp.take_along_axis(
+            y_buf.reshape(B, E * cap, D),
+            lin.reshape(B, s * k)[..., None], axis=1).reshape(B, s, k, D)
+        wt = jnp.where(ok, wtok, 0.0)
+        out = jnp.sum(y_tok * wt[..., None].astype(xc.dtype), axis=2)
+        return out.astype(xc.dtype), load
+
+    xs = x.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    vs = valid.reshape(n_chunks, chunk)
+    ys, loads = jax.lax.scan(
+        lambda c, xv: (c, one_chunk(*xv)), None, (xs, vs),
+        unroll=flags.unroll())[1]
+    y = ys.transpose(1, 0, 2, 3).reshape(B, s_pad, D)[:, :S]
+    if "shared" in p:
+        y = y + _dense_ffn(p["shared"], x_orig, act)
+    aux = RouteAux.of(load=jnp.mean(loads))
+    return y, aux
+
+
+def _dense_ffn(p, x, act):
+    h = x @ p["wi"]
+    if "wg" in p:
+        h = act_fn(act)(x @ p["wg"]) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ p["wo"]
+
+
+def moe_decode(p, x, *, act: str, top_k: int, router_w=None,
+               normalize_to_m: bool = False):
+    """Decode path (S==1): gather only the selected experts' weights so HBM
+    traffic ∝ top-k experts (memory-roofline critical at 314B scale)."""
+    B, S, D = x.shape
+    rw = router_w if router_w is not None else p["router"]
+    E = rw.shape[-1]
+    k = min(top_k, E)
+    logits = x.astype(jnp.float32) @ rw                       # (B,1,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w = probs * E if normalize_to_m else probs
+    vals, idx = jax.lax.top_k(w[:, 0], k)                     # (B,k)
+    wi_sel = jnp.take(p["wi"], idx, axis=0)                   # (B,k,D,Fe)
+    wo_sel = jnp.take(p["wo"], idx, axis=0)
+    h = jnp.einsum("bsd,bkdf->bkf", x, wi_sel)
+    if "wg" in p:
+        wg_sel = jnp.take(p["wg"], idx, axis=0)
+        h = act_fn(act)(jnp.einsum("bsd,bkdf->bkf", x, wg_sel)) * h
+    else:
+        h = act_fn(act)(h)
+    y = jnp.einsum("bkf,bkfd,bk->bd", h, wo_sel, vals.astype(h.dtype))
+    y = y[:, None]
+    if "shared" in p:
+        y = y + _dense_ffn(p["shared"], x, act)
+    return y, RouteAux.zero()

@@ -1,0 +1,111 @@
+"""RecurrentGemma / Griffin recurrent block with RG-LRU. [arXiv:2402.19427]
+
+Block:  x -> (gate branch: W_y x -> GeLU)  *  (W_x x -> causal conv1d ->
+RG-LRU) -> W_out.  RG-LRU:
+    r_t = sigmoid(W_a u_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The linear recurrence is computed with jax.lax.associative_scan (log-depth on
+TPU), decode is the O(1) step form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+_C = 8.0
+
+
+def rglru_init(key, cfg):
+    D, W, dt = cfg.d_model, cfg.lru_width, dtype_of(cfg)
+    ck = cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^c = sigmoid(Lambda)^c is in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_y": dense_init(ks[1], D, W, dt),
+        "w_x": dense_init(ks[2], D, W, dt),
+        "conv_w": (jax.random.normal(ks[3], (ck, W), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((W,), dt),
+        "w_a": dense_init(ks[4], W, W, jnp.float32, scale=1.0 / W ** 0.5),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": dense_init(ks[5], W, W, jnp.float32, scale=1.0 / W ** 0.5),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7), W, D, dt),
+    }
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated_in
+
+
+def _causal_conv(x, w, b, state=None):
+    ck = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(ck))
+    return y + b, xp[:, -(ck - 1):]
+
+
+def rglru_apply(p, x, cfg, init_state=None, conv_state=None, keep_mask=None):
+    """Full sequence. x: (B,S,D) -> (B,S,D). Returns (y, (h_final, conv)).
+
+    keep_mask: (B,S) bool ElastiFormer token routing — skipped tokens use
+    a=1, input=0: exact recurrent-state pass-through."""
+    gate = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32), approximate=True)
+    u, new_conv = _causal_conv(x @ p["w_x"], p["conv_w"], p["conv_b"],
+                               conv_state)
+    a, b = _gates(p, u)                                     # (B,S,W) f32
+    if keep_mask is not None:
+        km = keep_mask[..., None]
+        a = jnp.where(km, a, 1.0)
+        b = jnp.where(km, b, 0.0)
+    if init_state is not None:
+        b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate * h).astype(x.dtype) @ p["w_out"]
+    return y, (h[:, -1], new_conv)
+
+
+def rglru_decode(p, x, cache, cfg, write=None):
+    """One step. cache: {'state': (B,W) f32, 'conv': (B,ck-1,W)}."""
+    B = x.shape[0]
+    gate = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32), approximate=True)
+    xw = x @ p["w_x"]                                       # (B,1,W)
+    conv_in = jnp.concatenate([cache["conv"].astype(xw.dtype), xw], axis=1)
+    u = (jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]) + p["conv_b"])[:, None]
+    a, b = _gates(p, u)                                     # (B,1,W)
+    h = a[:, 0] * cache["state"] + b[:, 0]
+    wr = jnp.ones((B,), bool) if write is None else write
+    h = jnp.where(wr[:, None], h, cache["state"])
+    new_conv = jnp.where(wr[:, None, None], conv_in[:, 1:], cache["conv"])
+    y = (gate[:, 0] * h)[:, None].astype(x.dtype) @ p["w_out"]
+    return y, {"state": h, "conv": new_conv}
+
+
+def rglru_cache_init(cfg, batch: int):
+    return {
+        "state": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.lru_width),
+                          dtype_of(cfg)),
+    }

@@ -1,0 +1,198 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel scan form for
+training/prefill, O(1)-state recurrent form for decode. [arXiv:2405.21060]
+
+TPU adaptation: the chunked algorithm is expressed as dense (chunk x chunk)
+matmuls (MXU-friendly) + a lax.scan over chunk states (the only sequential
+part), instead of the CUDA selective-scan kernel. Projections are kept as
+separate parameters (z/x/B/C/dt) rather than one fused in_proj so that
+tensor-parallel sharding stays aligned with the head structure (d_inner and
+dt shard over the `model` axis; the group-shared B/C are replicated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of, norm_apply
+
+
+def ssm_init(key, cfg):
+    D, dt = cfg.d_model, dtype_of(cfg)
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ck = cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], D, di, dt),
+        "in_x": dense_init(ks[1], D, di, dt),
+        "in_b": dense_init(ks[2], D, N, dt),
+        "in_c": dense_init(ks[3], D, N, dt),
+        "in_dt": dense_init(ks[4], D, H, dt),
+        "conv_x": (jax.random.normal(ks[5], (ck, di), jnp.float32) * 0.1).astype(dt),
+        "conv_b": (jax.random.normal(ks[6], (ck, N), jnp.float32) * 0.1).astype(dt),
+        "conv_c": (jax.random.normal(ks[7], (ck, N), jnp.float32) * 0.1).astype(dt),
+        "conv_bias_x": jnp.zeros((di,), dt),
+        "conv_bias_b": jnp.zeros((N,), dt),
+        "conv_bias_c": jnp.zeros((N,), dt),
+        "a_log": jnp.zeros((H,), jnp.float32),            # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(jax.random.fold_in(key, 9), di, D, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B,S,C), w: (ck,C) -> (B,S,C)."""
+    ck = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(ck))
+    return y + b
+
+
+def _segsum(a):
+    """a: (..., q) -> (..., q, q) with out[i,j] = sum_{j<m<=i} a[m], -inf above
+    the diagonal (strictly causal cumulative decay)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int, init_state=None):
+    """SSD: y_t = C_t^T h_t,  h_t = exp(a_t dt_t) h_{t-1} + dt_t B_t x_t^T.
+
+    x: (B,S,H,P); dt: (B,S,H); a: (H,) (negative); bmat/cmat: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = bmat.shape[-1]
+    assert S % chunk == 0, f"seq {S} % ssm_chunk {chunk} != 0"
+    nc, q = S // chunk, chunk
+    dA = (dt * a).astype(jnp.float32)                       # (B,S,H)
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    r = lambda t: t.reshape((B, nc, q) + t.shape[2:])
+    xc, dAc = r(xdt), r(dA)
+    bc, cc = r(bmat.astype(jnp.float32)), r(cmat.astype(jnp.float32))
+
+    # intra-chunk (quadratic within chunk, MXU matmuls)
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))         # (B,nc,H,q,q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)              # (B,nc,q,q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", cb, L, xc)
+
+    # chunk states
+    dA_cum = jnp.cumsum(dAc, axis=2)                        # (B,nc,q,H)
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (B,nc,q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_states, xc)
+
+    # inter-chunk recurrence (the only sequential part)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (B,nc,H)
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(h, xs):
+        s, dec = xs                                         # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + s
+        return h_new, h                                     # emit state *before* chunk
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    h_final, h_prev = jax.lax.scan(body, h0, xs)
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    state_decay = jnp.exp(dA_cum)                           # (B,nc,q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, h_prev, state_decay)
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, h_final
+
+
+def _project(p, x):
+    z = x @ p["in_z"]
+    xs = x @ p["in_x"]
+    bmat = x @ p["in_b"]
+    cmat = x @ p["in_c"]
+    dt = x @ p["in_dt"]
+    return z, xs, bmat, cmat, dt
+
+
+def ssm_apply(p, x, cfg, init_state=None, conv_state=None, keep_mask=None):
+    """Full-sequence Mamba2 block. x: (B,S,D) -> (B,S,D).
+    Returns (y, (ssm_state, conv_state)) for cache hand-off at prefill.
+
+    keep_mask: (B,S) bool ElastiFormer token routing — dt is zeroed for
+    skipped tokens, which makes the recurrence an exact state pass-through
+    (decay exp(a*0)=1, input dt*B*x=0)."""
+    B, S, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    z, xs, bmat, cmat, dt = _project(p, x)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_bias = jnp.concatenate(
+        [p["conv_bias_x"], p["conv_bias_b"], p["conv_bias_c"]], axis=-1)
+    if conv_state is not None:
+        xbc_in = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        xbc_conv = _causal_conv(xbc_in, conv_w, conv_bias)[:, -(S + cfg.conv_kernel - 1):][:, -S:]
+    else:
+        xbc_conv = _causal_conv(xbc, conv_w, conv_bias)
+        xbc_in = xbc
+    new_conv_state = xbc_in[:, -(cfg.conv_kernel - 1):]
+    xbc_conv = jax.nn.silu(xbc_conv)
+    xs, bmat, cmat = jnp.split(xbc_conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if keep_mask is not None:
+        dt = dt * keep_mask[..., None].astype(dt.dtype)
+    a = -jnp.exp(p["a_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    while S % chunk:        # largest divisor of S not exceeding ssm_chunk
+        chunk -= 1
+    y, state = ssd_chunked(xs.reshape(B, S, H, P), dt, a, bmat, cmat,
+                           chunk, init_state)
+    y = y + p["d_skip"][:, None] * xs.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = norm_apply({"scale": p["norm_scale"]},
+                   (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                   "rmsnorm")
+    return y @ p["out_proj"], (state, new_conv_state)
+
+
+def ssm_decode(p, x, cache, cfg, write=None):
+    """One decode step. x: (B,1,D); cache: {'state': (B,H,P,N) f32,
+    'conv': (B,ck-1,di+2N)}. write: (B,) bool token-routing gate — when False
+    the state/conv caches pass through unchanged (token skipped)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xs, bmat, cmat, dt = _project(p, x)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)        # (B,1,C)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_bias = jnp.concatenate(
+        [p["conv_bias_x"], p["conv_bias_b"], p["conv_bias_c"]], axis=-1)
+    conv_in = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    y_conv = jnp.einsum("bkc,kc->bc", conv_in, conv_w) + conv_bias
+    xbc_conv = jax.nn.silu(y_conv)[:, None]
+    xs, bmat, cmat = jnp.split(xbc_conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * a)                                    # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    new_state = (cache["state"] * dA[..., None, None]
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt, xh,
+                              bmat[:, 0].astype(jnp.float32)))
+    wr = jnp.ones((B,), bool) if write is None else write
+    new_state = jnp.where(wr[:, None, None, None], new_state, cache["state"])
+    new_conv = jnp.where(wr[:, None, None], conv_in[:, 1:], cache["conv"])
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), new_state)
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(B, 1, di)
+    y = norm_apply({"scale": p["norm_scale"]},
+                   (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                   "rmsnorm")
+    return y @ p["out_proj"], {"state": new_state, "conv": new_conv}
+
+
+def ssm_cache_init(cfg, batch: int):
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, N),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di + 2 * N),
+                          dtype_of(cfg)),
+    }

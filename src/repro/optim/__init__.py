@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (AdamWState, adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_schedule,
+                                   global_norm)
+from repro.optim.compression import (EFState, compress_grads, dequantize_int8,
+                                     ef_init, quantize_int8)

@@ -1,0 +1,53 @@
+"""Elastic scaling: re-mesh a running job onto a different device count.
+
+ElastiFormer training state is small (routers + LoRA + AdamW moments,
+<0.1% of the model), and the base model is frozen — so scaling down/up is:
+  1. drain + checkpoint (async save already in flight most of the time);
+  2. rebuild the mesh at the new (pod, data, model) shape;
+  3. re-derive shardings from the same logical rules (they are expressed
+     against axis *names*, not sizes) and device_put the restored state.
+
+`reshard` also serves checkpoint-portability: a checkpoint written on a
+16x16 mesh restores onto 2x16x16 (or a single host) unchanged, because the
+on-disk format is plain host arrays.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.runtime import sharding as SH
+
+
+def make_mesh(shape: tuple, axes: tuple, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def valid_mesh_shapes(n_devices: int, model_axis: int):
+    """Enumerate (data, model) shapes available after losing/gaining hosts —
+    the controller picks the largest batch-preserving one."""
+    out = []
+    for m in (model_axis, model_axis // 2, model_axis * 2):
+        if m and n_devices % m == 0:
+            out.append((n_devices // m, m))
+    return out
+
+
+def reshard(tree, mesh: Mesh, specs_tree):
+    """device_put every leaf onto `mesh` with its PartitionSpec."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs_tree)
+
+
+def rescale_training_state(params, router_params, opt_state, new_mesh: Mesh):
+    """Re-mesh all training state. Base params follow the TP rules; router
+    and optimizer trees are replicated (tiny)."""
+    p = reshard(params, new_mesh, SH.param_specs(params, new_mesh))
+    rep = lambda t: jax.tree.map(
+        lambda x: jax.device_put(x, SH.replicated(new_mesh)), t)
+    return p, rep(router_params), rep(opt_state)

@@ -1,0 +1,89 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+Single-controller view of what runs per-host at pod scale:
+  * StragglerWatchdog — EWMA of step wall-times; a step exceeding
+    `threshold x` the EWMA flags the slow host (here: logs + counter; on a
+    real fleet this feeds the re-dispatch / hot-spare controller).
+  * run_resilient — supervision loop: on any step failure it restores the
+    latest verified checkpoint (params/opt/data state) and replays from
+    there. Deterministic data (pipeline.batch_at(step)) makes the replay
+    bitwise-reproducible — asserted by tests/test_fault_tolerance.py.
+  * FailureInjector — deterministic fault injection for tests/drills.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.ft")
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Raise SimulatedFailure at the given steps (once each)."""
+    at_steps: tuple = ()
+    fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class StragglerWatchdog:
+    threshold: float = 2.5
+    decay: float = 0.9
+    ewma: Optional[float] = None
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.threshold * self.ewma
+        if slow:
+            self.flagged.append((step, dt, self.ewma))
+            log.warning("straggler: step %d took %.3fs (ewma %.3fs) — "
+                        "flagging for re-dispatch", step, dt, self.ewma)
+        self.ewma = dt if self.ewma is None else \
+            self.decay * self.ewma + (1 - self.decay) * dt
+        return slow
+
+
+def run_resilient(
+    *, start_step: int, total_steps: int,
+    do_step: Callable[[int], dict],
+    save: Callable[[int], None], restore: Callable[[], int],
+    save_every: int = 50, max_restarts: int = 10,
+    injector: Optional[FailureInjector] = None,
+    watchdog: Optional[StragglerWatchdog] = None,
+):
+    """Supervised training loop. `do_step(step)` runs one step and returns
+    metrics; `save(step)` checkpoints; `restore()` reloads the latest
+    checkpoint and returns its step. Returns (last_metrics, n_restarts)."""
+    step = start_step
+    restarts = 0
+    metrics = {}
+    while step < total_steps:
+        try:
+            if injector is not None:
+                injector.maybe_fail(step)
+            t0 = time.perf_counter()
+            metrics = do_step(step)
+            if watchdog is not None:
+                watchdog.observe(step, time.perf_counter() - t0)
+            step += 1
+            if step % save_every == 0 or step == total_steps:
+                save(step)
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log.warning("step %d failed (%s); restoring latest checkpoint",
+                        step, e)
+            step = restore()
+    return metrics, restarts

@@ -1,0 +1,67 @@
+"""Batched serving loop with elastic (threshold-routed) decode.
+
+prefill_fn / decode_fn are jitted once per (batch, prompt_len) bucket; the
+engine pads requests into fixed buckets so recompilation is bounded. Decode
+runs the ElastiFormer threshold path (§B.1): per token, each router decides
+with theta=0.5 whether the token enters each module — variable inference
+compute on a static graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cache_init, decode_step, prefill
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 32
+
+
+class ServingEngine:
+    """Greedy batched generation over a frozen base model + routers."""
+
+    def __init__(self, params, router_params, cfg, ecfg=None,
+                 mode: str = "infer", batch_size: int = 8,
+                 max_seq: int = 256):
+        self.params, self.rp = params, router_params
+        self.cfg, self.ecfg, self.mode = cfg, ecfg, mode
+        self.B, self.max_seq = batch_size, max_seq
+        self._prefill = jax.jit(partial(
+            prefill, cfg=cfg, ecfg=ecfg, mode=mode, max_cache_len=max_seq))
+        self._decode = jax.jit(partial(
+            decode_step, cfg=cfg, ecfg=ecfg, mode=mode))
+
+    def generate(self, requests: List[GenRequest],
+                 extra_inputs: Optional[dict] = None) -> List[np.ndarray]:
+        out: List[np.ndarray] = []
+        for i in range(0, len(requests), self.B):
+            out += self._generate_batch(requests[i:i + self.B], extra_inputs)
+        return out
+
+    def _generate_batch(self, reqs, extra_inputs):
+        B = self.B
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, plen), np.int32)
+        for j, r in enumerate(reqs):
+            toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, caches = self._prefill(self.params, self.rp, batch)
+        max_new = max(r.max_new_tokens for r in reqs)
+        gen = np.zeros((B, max_new), np.int32)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for t in range(max_new):
+            gen[:, t] = np.asarray(tok)[:, 0]
+            logits, caches = self._decode(self.params, self.rp, tok, caches,
+                                          jnp.int32(plen + t))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return [gen[j, :reqs[j].max_new_tokens] for j in range(len(reqs))]

@@ -1,0 +1,22 @@
+import dataclasses
+
+import jax
+import pytest
+
+# Tests run on the single real CPU device; only launch/dryrun.py (run as its
+# own process) uses the 512 fake devices. Keep x64 off (match TPU numerics).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def f32(cfg):
+    """Smoke configs in float32 for tight numeric comparisons on CPU."""
+    new = dataclasses.replace(cfg, dtype="float32")
+    if cfg.encoder is not None:
+        new = dataclasses.replace(
+            new, encoder=dataclasses.replace(cfg.encoder, dtype="float32"))
+    return new

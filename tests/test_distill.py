@@ -1,0 +1,62 @@
+"""Distillation objectives (paper §4.2 / Fig. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill import (cosine_distance, kl_divergence, topk_kl,
+                                topk_kl_from_gathered)
+
+
+def test_kl_zero_on_identical(key):
+    logits = jax.random.normal(key, (4, 16, 128))
+    for d in ("fwd", "rev"):
+        assert float(kl_divergence(logits, logits, direction=d)) < 1e-6
+    assert float(topk_kl(logits, logits, k=10)) < 1e-6
+
+
+def test_kl_positive_and_direction_asymmetric(key):
+    a = jax.random.normal(key, (4, 16, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, 64))
+    f = float(kl_divergence(a, b, direction="fwd"))
+    r = float(kl_divergence(a, b, direction="rev"))
+    assert f > 0 and r > 0 and abs(f - r) > 1e-6
+
+
+def test_topk_kl_approaches_full_kl_for_peaked_teacher(key):
+    """When the teacher mass is concentrated in the top-k, the residual
+    bucket is negligible and top-k KL ~= full KL."""
+    v = 256
+    t = jax.random.normal(key, (2, 8, v)) * 0.1
+    t = t.at[..., :5].add(12.0)             # teacher peaked on 5 tokens
+    s = t + 0.3 * jax.random.normal(jax.random.fold_in(key, 1), t.shape)
+    full = float(kl_divergence(s, t, direction="fwd"))
+    tk = float(topk_kl(s, t, k=50, direction="fwd"))
+    assert abs(full - tk) / max(full, 1e-9) < 0.25
+
+
+def test_temperature_scaling_softens(key):
+    a = jax.random.normal(key, (2, 4, 32)) * 4
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 32)) * 4
+    hot = float(kl_divergence(a, b, temp=1.0))
+    soft = float(kl_divergence(a, b, temp=4.0))
+    assert soft != hot  # temperature changes the objective
+
+
+def test_cosine_distance_bounds(key):
+    x = jax.random.normal(key, (4, 8, 32))
+    assert float(cosine_distance(x, x)) < 1e-6
+    assert float(cosine_distance(x, -x)) == pytest.approx(2.0, abs=1e-5)
+
+
+def test_gathered_matches_direct_topk_kl(key):
+    logits_t = jax.random.normal(key, (2, 8, 64))
+    logits_s = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 64))
+    k = 10
+    lt = jax.nn.log_softmax(logits_t, -1)
+    ls = jax.nn.log_softmax(logits_s, -1)
+    t_top, idx = jax.lax.top_k(lt, k)
+    s_top = jnp.take_along_axis(ls, idx, -1)
+    a = float(topk_kl(logits_s, logits_t, k=k))
+    b = float(topk_kl_from_gathered(s_top, t_top))
+    assert a == pytest.approx(b, rel=1e-5)

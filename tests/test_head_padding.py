@@ -1,0 +1,58 @@
+"""TP head padding (§Perf H1): zero-padded q-heads + repeat-kv GQA must be
+bit-for-bit equivalent to the logical-head model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (attn_apply, attn_cache_init, attn_decode,
+                                    attn_init)
+
+
+def _cfgs(kv=2):
+    cfg0 = dataclasses.replace(get_config("toy-lm", "smoke"),
+                               dtype="float32", n_kv_heads=kv)
+    return cfg0, dataclasses.replace(cfg0, head_pad=16)
+
+
+@pytest.mark.parametrize("kv", [1, 2, 4])
+def test_padded_attention_matches_logical(key, kv):
+    cfg0, cfgp = _cfgs(kv)
+    p0, pp = attn_init(key, cfg0), attn_init(key, cfgp)
+    np.testing.assert_allclose(
+        np.asarray(pp["wq"][:, :cfg0.n_heads]), np.asarray(p0["wq"]))
+    assert pp["wq"].shape[1] == 16 and pp["wo"].shape[0] == 16
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 24, cfg0.d_model))
+    pos = jnp.arange(24)
+    y0, k0, _ = attn_apply(p0, x, cfg=cfg0, positions=pos)
+    yp, kp, _ = attn_apply(pp, x, cfg=cfgp, positions=pos)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yp), atol=1e-5)
+    # caches stay logical-K
+    assert k0.shape == kp.shape == (2, 24, kv, cfg0.d_head)
+
+
+def test_padded_decode_matches_logical(key):
+    cfg0, cfgp = _cfgs(kv=2)
+    p0, pp = attn_init(key, cfg0), attn_init(key, cfgp)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (2, 1, cfg0.d_model))
+    c0 = attn_cache_init(cfg0, 2, 8)
+    cp = attn_cache_init(cfgp, 2, 8)
+    t = jnp.int32(0)
+    y0, _ = attn_decode(p0, x, c0, t, cfg=cfg0)
+    yp, _ = attn_decode(pp, x, cp, t, cfg=cfgp)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yp), atol=1e-5)
+
+
+def test_head_routing_weights_apply_on_logical_heads(key):
+    cfg0, cfgp = _cfgs(kv=2)
+    pp = attn_init(key, cfgp)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 8, cfg0.d_model))
+    hw = jax.random.uniform(jax.random.fold_in(key, 4),
+                            (2, 8, cfg0.n_heads))   # logical H
+    y, _, _ = attn_apply(pp, x, cfg=cfgp, positions=jnp.arange(8),
+                         head_weights=hw)
+    assert y.shape == (2, 8, cfg0.d_model)
+    assert not np.isnan(np.asarray(y)).any()

@@ -1,0 +1,41 @@
+"""HLO text profiler: shape parsing and aggregation on a synthetic module."""
+from repro.launch.hloprof import (biggest_tensors, profile_text, shape_bytes,
+                                  top_table)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,4096,3584] parameter(0)
+  %c = bf16[128,128] constant({...})
+  %dot = bf16[16,4096,4096] dot(%p0, %p0), contracting_dims={2}
+  %ar = f32[16,4096] all-reduce(%p0), replica_groups={}
+  %gte = f32[16] get-tuple-element(%ar), index=0
+  ROOT %conv = f32[16,4096,4096] convert(%dot)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[16,4096,3584]") == 16 * 4096 * 3584 * 4
+    assert shape_bytes("bf16[128,128]") == 128 * 128 * 2
+    assert shape_bytes("(f32[2,2], s32[4])") == 16 + 16
+
+
+def test_profile_skips_bookkeeping_ops():
+    prof = profile_text(HLO)
+    assert "parameter" not in prof
+    assert "get-tuple-element" not in prof
+    assert prof["dot"]["count"] == 1
+    assert prof["dot"]["bytes"] == 16 * 4096 * 4096 * 2
+    assert prof["all-reduce"]["count"] == 1
+
+
+def test_biggest_tensors_sorted_desc():
+    top = biggest_tensors(HLO, n=3)
+    assert top[0][0] >= top[1][0] >= top[2][0]
+    assert top[0][1] == "convert"          # f32[16,4096,4096] is largest
+
+
+def test_top_table_renders():
+    out = top_table(profile_text(HLO))
+    assert "dot" in out and "TOTAL" in out

@@ -1,0 +1,94 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py),
+executed in interpret mode on CPU (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_mlp import fused_mlp
+from repro.kernels.moe_gmm import moe_gmm
+
+TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+        jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,K,Dh", [
+    (1, 128, 128, 4, 4, 64),     # MHA square
+    (2, 256, 256, 8, 2, 64),     # GQA 4:1
+    (1, 64, 320, 4, 1, 128),     # MQA, ragged Sk (block padding path)
+    (1, 384, 128, 4, 4, 128),    # Sq > Sk
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 96), (False, 0)])
+def test_flash_attention_sweep(B, Sq, Sk, H, K, Dh, causal, window, dtype, key):
+    if causal and Sq > Sk:
+        pytest.skip("causal requires Sq <= Sk alignment in this harness")
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, Dh), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.9, (B, Sk))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          kv_valid=valid, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   kv_valid=valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,D,F,gated,act", [
+    (256, 128, 512, True, "swiglu"),
+    (100, 128, 384, True, "geglu"),      # ragged T
+    (512, 256, 1024, False, "gelu"),
+])
+def test_fused_mlp_sweep(T, D, F, gated, act, dtype, key):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D), dtype)
+    wi = (jax.random.normal(ks[1], (D, F)) * 0.05).astype(dtype)
+    wo = (jax.random.normal(ks[2], (F, D)) * 0.05).astype(dtype)
+    wg = (jax.random.normal(ks[3], (D, F)) * 0.05).astype(dtype) if gated else None
+    tw = jax.random.uniform(ks[4], (T,))
+    got = fused_mlp(x, wi, wo, wg, tw, act=act, interpret=True)
+    want = ref.fused_mlp_ref(x, wi, wo, wg, tw, act=act)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,Fe,gated", [
+    (4, 128, 128, 256, True),
+    (8, 96, 64, 128, False),     # ragged C
+    (2, 256, 128, 512, True),
+])
+def test_moe_gmm_sweep(E, C, D, Fe, gated, dtype, key):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (E, C, D), dtype)
+    wi = (jax.random.normal(ks[1], (E, D, Fe)) * 0.05).astype(dtype)
+    wo = (jax.random.normal(ks[2], (E, Fe, D)) * 0.05).astype(dtype)
+    wg = (jax.random.normal(ks[3], (E, D, Fe)) * 0.05).astype(dtype) if gated else None
+    w = jax.random.uniform(ks[4], (E, C))
+    got = moe_gmm(x, wi, wo, wg, w, act="swiglu", interpret=True)
+    want = ref.moe_gmm_ref(x, wi, wo, wg, w, act="swiglu")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+def test_flash_matches_model_blocked_sdpa(key):
+    """The Pallas kernel, the blocked jnp path, and the dense path agree."""
+    from repro.models.attention import blocked_sdpa, sdpa, _mask
+    B, S, H, K, Dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, K, Dh))
+    v = jax.random.normal(ks[2], (B, S, K, Dh))
+    pos = jnp.arange(S)
+    dense = sdpa(q, k, v, _mask(pos, pos, True, 0))
+    blocked = blocked_sdpa(q, k, v, pos[None], pos[None], True, 0, block=64)
+    kernel = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(blocked),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(kernel),
+                               atol=2e-5)

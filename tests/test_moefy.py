@@ -1,0 +1,66 @@
+"""Losslessness of the dense-MLP -> MoE block decomposition (paper §4.1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.moefy import moefy_mlp, unmoefy_mlp
+from repro.models.layers import mlp_apply, mlp_init
+from repro.models.moe import moe_apply
+
+
+def _dense_params(key, d=32, f=64, gated=True):
+    cfg = dataclasses.replace(get_config("toy-lm"), d_model=d, d_ff=f,
+                              act="swiglu" if gated else "gelu",
+                              dtype="float32")
+    return mlp_init(key, cfg), cfg
+
+
+def test_moefy_roundtrip(key):
+    p, _ = _dense_params(key)
+    back = unmoefy_mlp(moefy_mlp(p, 4))
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(back[k]))
+
+
+def test_moefied_all_experts_equals_dense(key):
+    """Block decomposition with all experts selected at weight 1 must equal
+    the dense MLP bit-for-bit in f32 (the paper's normalization guarantee)."""
+    p, cfg = _dense_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    y_dense = mlp_apply(p, x, cfg.act)
+    m = 4
+    ep = moefy_mlp(p, m)
+    router_w = jnp.zeros((cfg.d_model, m))   # uniform -> weights all 1
+    y_moe, _ = moe_apply(ep, x, act=cfg.act, top_k=m, router_w=router_w,
+                         normalize_to_m=True, capacity_factor=float(m),
+                         seq_chunk=8)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_moe),
+                               atol=1e-5)
+
+
+def test_moefied_topk_is_subset_compute(key):
+    """With k < M the moefied module output is the weighted sum of the
+    selected experts only."""
+    p, cfg = _dense_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, 4, cfg.d_model))
+    m = 4
+    ep = moefy_mlp(p, m)
+    router_w = jax.random.normal(jax.random.fold_in(key, 3),
+                                 (cfg.d_model, m))
+    y, _ = moe_apply(ep, x, act=cfg.act, top_k=2, router_w=router_w,
+                     normalize_to_m=True, capacity_factor=4.0, seq_chunk=4)
+    # manual: per-token top-2 experts, weighted
+    logits = x @ router_w
+    w = jax.nn.softmax(logits, -1) * m
+    kth = jnp.sort(w, -1)[..., -2:-1]
+    mask = w >= kth
+    want = jnp.zeros_like(x)
+    for e in range(m):
+        he = x @ ep["wi"][e]
+        ge = jax.nn.silu(x @ ep["wg"][e])
+        ye = (ge * he) @ ep["wo"][e]
+        want = want + ye * (w[..., e:e + 1] * mask[..., e:e + 1])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.routing import param_route_weights, topk_mask
+from repro.models.rglru import _gates, rglru_init
+from repro.models.ssm import ssd_chunked
+from repro.optim import dequantize_int8, ef_init, compress_grads, quantize_int8
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+floats = hnp.arrays(np.float32, shape=hnp.array_shapes(min_dims=1, max_dims=3,
+                                                       max_side=16),
+                    elements=st.floats(-100, 100, width=32))
+
+
+@given(floats)
+def test_int8_quantization_error_bound(x):
+    q, s = quantize_int8(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - x)
+    assert (err <= float(s) * 0.5 + 1e-6).all()
+
+
+@given(floats, st.integers(2, 6))
+def test_error_feedback_is_lossless_over_time(x, steps):
+    """EF compression: sum of compressed outputs converges to the sum of the
+    true gradients (residual is bounded, never lost)."""
+    g = {"w": jnp.asarray(x)}
+    ef = ef_init(g)
+    total = np.zeros_like(x)
+    for _ in range(steps):
+        out, ef = compress_grads(g, ef)
+        total += np.asarray(out["w"], np.float32)
+    scale = max(1e-6, float(np.abs(x).max()))
+    resid = np.abs(np.asarray(ef.residual["w"]))
+    # residual stays within one quantization bucket of the *current* grad
+    assert (resid <= scale / 127.0 + 1e-5).all()
+    np.testing.assert_allclose(total + np.asarray(ef.residual["w"]),
+                               x * steps, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 8), st.integers(1, 4))
+def test_param_router_norm_invariant(m_pow, seed):
+    m = 2 * m_pow
+    key = jax.random.PRNGKey(seed)
+    rp = {"w": jax.random.normal(key, (8, m))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8))
+    w, mask, _ = param_route_weights(rp, x, top_k=max(1, m // 2))
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), m, rtol=1e-4)
+    assert (mask.sum(-1) == max(1, m // 2)).all()
+
+
+@given(st.integers(0, 5))
+def test_topk_mask_count_invariant(seed):
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.uniform(key, (3, 17))
+    for k in (1, 5, 17):
+        assert (topk_mask(scores, k).sum(-1) == k).all()
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 4), st.sampled_from([2, 4, 8]))
+def test_ssd_chunked_matches_sequential_recurrence(seed, chunk):
+    """SSD chunked algorithm == naive per-step recurrence oracle."""
+    key = jax.random.PRNGKey(seed)
+    B, S, H, P, N = 1, 16, 2, 4, 3
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.2)
+    bm = jax.random.normal(ks[3], (B, S, N))
+    cm = jax.random.normal(jax.random.fold_in(key, 5), (B, S, N))
+    y, hfin = ssd_chunked(x, dt, a, bm, cm, chunk)
+    # oracle
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(a))      # (B,H)
+        inp = np.einsum("bh,bhp,bn->bhpn", np.asarray(dt[:, t]),
+                        np.asarray(x[:, t]), np.asarray(bm[:, t]))
+        h = h * dA[..., None, None] + inp
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(cm[:, t]), h))
+    want = np.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), want, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hfin), h, atol=2e-4, rtol=1e-3)
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 4))
+def test_rglru_scan_matches_sequential(seed):
+    """Associative-scan RG-LRU == sequential loop."""
+    key = jax.random.PRNGKey(seed)
+    import dataclasses
+    from repro.configs import get_config
+    cfg = dataclasses.replace(get_config("recurrentgemma-2b", "smoke"),
+                              dtype="float32")
+    p = rglru_init(key, cfg)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (1, 12, cfg.lru_width))
+    a, b = _gates(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h_scan = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = np.zeros((1, cfg.lru_width))
+    hs = []
+    for t in range(12):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        hs.append(h)
+    np.testing.assert_allclose(np.asarray(h_scan), np.stack(hs, 1),
+                               atol=1e-5, rtol=1e-4)

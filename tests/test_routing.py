@@ -1,0 +1,111 @@
+"""Unit tests for ElastiFormer routing primitives (Alg. 1 & 2, §B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import routing as R
+
+
+def test_topk_indices_sorted_causal_order(key):
+    scores = jax.random.uniform(key, (4, 64))
+    idx = R.topk_indices(scores, 16)
+    assert (jnp.diff(idx, axis=-1) > 0).all(), "indices must be ascending"
+
+
+def test_topk_mask_matches_indices(key):
+    scores = jax.random.uniform(key, (4, 64))
+    k = 10
+    mask = R.topk_mask(scores, k)
+    assert (mask.sum(-1) == k).all()
+    idx = R.topk_indices(scores, k)
+    picked = jnp.take_along_axis(mask, idx, axis=-1)
+    assert picked.all()
+
+
+def test_gather_scatter_roundtrip(key):
+    x = jax.random.normal(key, (2, 32, 8))
+    idx = R.topk_indices(jax.random.uniform(jax.random.fold_in(key, 1),
+                                            (2, 32)), 12)
+    sel = R.gather_tokens(x, idx)
+    back = R.scatter_add_tokens(x, idx, sel)
+    mask = jnp.zeros((2, 32), bool).at[jnp.arange(2)[:, None], idx].set(True)
+    np.testing.assert_allclose(back, x * mask[..., None], rtol=1e-6)
+
+
+def test_param_router_identity_when_all_selected(key):
+    """Paper §4.1: k=M with uniform router weights reproduces the base
+    module exactly (w == 1 after M*softmax normalization)."""
+    d, m = 16, 8
+    rp = {"w": jnp.zeros((d, m))}   # uniform logits
+    x = jax.random.normal(key, (3, 5, d))
+    w, mask, aux = R.param_route_weights(rp, x, top_k=m)
+    np.testing.assert_allclose(np.asarray(w), 1.0, atol=1e-6)
+    assert mask.all()
+
+
+def test_param_router_weights_sum_to_m(key):
+    d, m = 16, 8
+    rp = R.param_router_init(key, d, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, 5, d))
+    w, _, _ = R.param_route_weights(rp, x, top_k=3)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), m, rtol=1e-5)
+
+
+def test_route_tokens_gather_vs_dense_mask_equivalence(key):
+    """Gather and dense-mask implementations are the same math for a
+    position-independent module."""
+    d = 16
+    rp = R.token_router_init(key, d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 24, d))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (d, d)) * 0.1
+    f = lambda h, pos: h @ w
+    y1, a1 = R.route_tokens(rp, x, f, 0.5, "train", impl="gather")
+    y2, a2 = R.route_tokens(rp, x, f, 0.5, "train", impl="dense_mask")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(float(a1.topk), float(a2.topk), rtol=1e-5)
+
+
+def test_route_tokens_gradients_flow_to_router(key):
+    d = 8
+    rp = R.token_router_init(key, d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, d))
+    f = lambda h, pos: jnp.tanh(h)
+
+    def loss(rp):
+        y, aux = R.route_tokens(rp, x, f, 0.5, "train")
+        return jnp.sum(y ** 2) + aux.topk
+
+    g = jax.grad(loss)(rp)
+    assert float(jnp.abs(g["w"]).sum()) > 0, "straight-through grad missing"
+
+
+def test_infer_threshold_routing(key):
+    d = 8
+    rp = {"w": jnp.zeros((d,)), "b": jnp.asarray(-10.0)}   # always-off router
+    x = jax.random.normal(key, (2, 16, d))
+    y, _ = R.route_tokens(rp, x, lambda h, p: jnp.ones_like(h), 0.5, "infer")
+    np.testing.assert_allclose(np.asarray(y), 0.0)
+    rp_on = {"w": jnp.zeros((d,)), "b": jnp.asarray(10.0)}  # always-on
+    y, _ = R.route_tokens(rp_on, x, lambda h, p: jnp.ones_like(h), 0.5, "infer")
+    assert float(jnp.abs(y).min()) > 0.99
+
+
+def test_bce_topk_loss_direction(key):
+    logits = jnp.asarray([[-5.0, 5.0, -5.0, 5.0]])
+    good = jnp.asarray([[False, True, False, True]])
+    bad = ~good
+    assert float(R.bce_topk_loss(logits, good)) < float(
+        R.bce_topk_loss(logits, bad))
+
+
+def test_load_balance_penalizes_collapse():
+    """Switch-style load loss: collapsed routing (all tokens -> expert 0)
+    must score higher than a decisively balanced router."""
+    m = 4
+    x = jnp.eye(m).repeat(16, axis=0) * 10.0          # (64, 4), rotating
+    collapsed = {"w": jnp.zeros((m, m)).at[:, 0].set(1.0)}
+    balanced = {"w": jnp.eye(m)}                      # token i -> expert i
+    _, _, a_col = R.param_route_weights(collapsed, x, top_k=1)
+    _, _, a_bal = R.param_route_weights(balanced, x, top_k=1)
+    assert float(a_col.load) > float(a_bal.load)
