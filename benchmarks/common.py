@@ -141,8 +141,12 @@ def eval_lm_loss(params, rparams, cfg, ecfg, mode: str, seed: int = 123,
 
 
 def distill_routers(params, cfg, ecfg, steps: int = 60, lr: float = 3e-3,
-                    seed: int = 7, data_seed: int = 0):
-    """Train ONLY the ElastiFormer routers by self-distillation."""
+                    seed: int = 7, data_seed: int = 0, policy=None):
+    """Train ONLY the ElastiFormer routers by self-distillation.
+
+    ``ecfg``: legacy ElasticConfig or new ElasticSpec; ``policy`` optionally
+    sets the (traced) capacity budget for the run — an annealing schedule
+    could hand a different policy per step on the same compiled step."""
     rp = router_init(jax.random.PRNGKey(seed), cfg, ecfg)
     state = init_train_state(rp)
     step_fn = jax.jit(make_train_step(cfg, ecfg, lr=cosine_schedule(lr, steps),
@@ -151,5 +155,7 @@ def distill_routers(params, cfg, ecfg, steps: int = 60, lr: float = 3e-3,
                           global_batch=BATCH, seed=data_seed)
     m = {}
     for i in range(steps):
-        state, m = step_fn(state, params, {"tokens": jnp.asarray(pipe.batch_at(i))})
+        batch = {"tokens": jnp.asarray(pipe.batch_at(i))}
+        state, m = (step_fn(state, params, batch) if policy is None
+                    else step_fn(state, params, batch, policy))
     return state.router_params, {k: float(v) for k, v in m.items()}

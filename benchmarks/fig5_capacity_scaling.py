@@ -6,47 +6,105 @@ Four independent ablations on the frozen teacher (each router type alone):
   mlp_tokens   — input subset selection around the MLP
   heads        — parameter subset selection over attention heads
   experts      — parameter subset selection over the moefied MLP
-Metric: eval LM loss vs teacher at each capacity level."""
+Metric: eval LM loss vs teacher at each capacity level.
+
+The sweep exercises the spec/policy split: per router kind, ONE jitted
+train step and ONE jitted eval serve every capacity — the capacity is a
+traced ``ElasticPolicy`` argument, so the 4-point sweep compiles exactly
+once per kind (asserted via the jit cache)."""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import (distill_routers, emit, eval_lm_loss,
-                               pretrained_teacher)
-from repro.configs import ElasticConfig
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BATCH, SEQ, emit, pretrained_teacher
+from repro.core.policy import ElasticPolicy, ElasticSpec
+from repro.data import LMDataPipeline
+from repro.models import forward
+from repro.optim import cosine_schedule
+from repro.training import init_train_state, lm_loss, make_train_step
+from repro.models import router_init
+
+CAPACITIES = (0.25, 0.5, 0.75, 1.0)
+M_EXPERTS = 8
 
 
-def _ecfg(kind: str, cap: float, n_heads: int, m_exp: int = 8):
-    base = dict(mlp_token_capacity=None, mha_token_capacity=None,
-                mha_head_topk=None, mlp_n_experts=None, mlp_expert_topk=None,
-                lora_rank=0)
+def _spec(kind: str) -> ElasticSpec:
+    base = dict(mlp_token_routed=False, mha_token_routed=False,
+                mha_head_routed=False, mlp_n_experts=None,
+                expert_routed=False, lora_rank=0)
     if kind == "mha_tokens":
-        base["mha_token_capacity"] = cap
+        base["mha_token_routed"] = True
     elif kind == "mlp_tokens":
-        base["mlp_token_capacity"] = cap
+        base["mlp_token_routed"] = True
     elif kind == "heads":
-        base["mha_head_topk"] = max(1, round(cap * n_heads))
+        base["mha_head_routed"] = True
     elif kind == "experts":
-        base["mlp_n_experts"] = m_exp
-        base["mlp_expert_topk"] = max(1, round(cap * m_exp))
-    return ElasticConfig(**base)
+        base.update(mlp_n_experts=M_EXPERTS, expert_routed=True)
+    return ElasticSpec(**base)
+
+
+def _policy(cfg, cap: float) -> ElasticPolicy:
+    # traced leaves: every capacity re-uses the same compiled graphs
+    return ElasticPolicy.uniform(cap, n_heads=cfg.n_heads,
+                                 n_experts=M_EXPERTS)
 
 
 def main(steps: int = 40):
     cfg, params = pretrained_teacher()
-    teacher = eval_lm_loss(params, None, cfg, None, "base")
+    pipe = lambda seed: LMDataPipeline(vocab=cfg.vocab_size, seq_len=SEQ,
+                                       global_batch=BATCH, seed=seed)
+
+    @jax.jit
+    def teacher_eval(tokens):
+        logits, _ = forward(params, None, {"tokens": tokens}, cfg, None,
+                            mode="base")
+        return lm_loss(logits, tokens)
+
+    ev = pipe(123)
+    teacher = float(jnp.mean(jnp.stack(
+        [teacher_eval(jnp.asarray(ev.batch_at(1000 + i))) for i in range(4)])))
     emit("fig5_teacher", 0.0, f"lm_loss={teacher:.4f}")
+
     summary = {}
     for kind in ("mha_tokens", "mlp_tokens", "heads", "experts"):
-        for cap in (0.25, 0.5, 0.75, 1.0):
-            ecfg = _ecfg(kind, cap, cfg.n_heads)
+        spec = _spec(kind)
+        step_fn = jax.jit(make_train_step(
+            cfg, spec, lr=cosine_schedule(3e-3, steps), chunked=True))
+
+        @jax.jit
+        def eval_fn(rp, tokens, policy):
+            logits, _ = forward(params, rp, {"tokens": tokens}, cfg, spec,
+                                mode="train", policy=policy)
+            return lm_loss(logits, tokens)
+
+        for cap in CAPACITIES:
+            policy = _policy(cfg, cap)
+            state = init_train_state(
+                router_init(jax.random.PRNGKey(7), cfg, spec))
+            data = pipe(0)
             t0 = time.perf_counter()
-            rp, _ = distill_routers(params, cfg, ecfg, steps=steps)
+            for i in range(steps):
+                state, _ = step_fn(state, params,
+                                   {"tokens": jnp.asarray(data.batch_at(i))},
+                                   policy)
             dt = (time.perf_counter() - t0) / steps * 1e6
-            loss = eval_lm_loss(params, rp, cfg, ecfg, "train")
+            losses = [eval_fn(state.router_params,
+                              jnp.asarray(ev.batch_at(1000 + i)), policy)
+                      for i in range(4)]
+            loss = float(jnp.mean(jnp.stack(losses)))
             summary[(kind, cap)] = loss
             emit(f"fig5_{kind}_c{cap}", dt,
                  f"eval_lm_loss={loss:.4f};gap={loss - teacher:+.4f}")
+        # the whole capacity sweep must ride ONE compiled train step and
+        # ONE compiled eval — the point of the ElasticPolicy redesign
+        n_train, n_eval = step_fn._cache_size(), eval_fn._cache_size()
+        assert n_train == 1, f"{kind}: train step compiled {n_train}x"
+        assert n_eval == 1, f"{kind}: eval compiled {n_eval}x"
+        emit(f"fig5_{kind}_compiles", 0.0,
+             f"train={n_train};eval={n_eval};capacities={len(CAPACITIES)}")
     # paper's qualitative claim: at matched 0.5 capacity, token routing hurts
     # MHA more than MLP
     emit("fig5_mha_vs_mlp_tokens_at_0.5", 0.0,

@@ -1,12 +1,33 @@
 """Quickstart: make a pretrained transformer elastic in ~60 lines.
 
-1. Pretrain a small LM teacher on a synthetic corpus (stands in for a
+The elasticity API is two objects (see docs/elastic_policy.md):
+
+  * ``ElasticSpec``  — static: which routers EXIST (token routing around
+    MHA/MLP, head selection, moefied experts, LoRA rank). It shapes the
+    router parameter tree and the compiled HLO, like the model config.
+  * ``ElasticPolicy`` — runtime: capacities, head/expert top-k, decode
+    threshold theta, teacher/student flag. A JAX pytree passed as a traced
+    argument, so ONE compiled model serves every compute budget:
+
+        spec = ElasticSpec(mha_token_routed=True, mha_head_routed=True,
+                           mlp_n_experts=4, expert_routed=True, lora_rank=1)
+        rp   = router_init(key, cfg, spec)
+        # sweep budgets with zero recompiles
+        for b in (0.25, 0.5, 1.0):
+            policy = solve_budget(cfg, spec, b)     # roofline budget solver
+            logits, _ = jit_forward(params, rp, batch, policy)
+
+    ``ElasticPolicy.uniform(1.0)`` reproduces the frozen teacher exactly
+    (the paper's losslessness property). The legacy ``ElasticConfig`` still
+    works everywhere through a shim and maps 1:1 onto (spec, policy).
+
+This script:
+1. Pretrains a small LM teacher on a synthetic corpus (stands in for a
    downloaded checkpoint; weights are then FROZEN).
-2. Attach ElastiFormer routers: token routing around MHA/MLP, head
-   selection, moefied-expert selection (+ rank-1 LoRA on q/v).
-3. Self-distill ONLY the routers against the frozen teacher.
-4. Compare eval LM loss: teacher vs elastic student, and report the
-   active-compute fraction and router parameter overhead.
+2. Attaches ElastiFormer routers per an ElasticSpec.
+3. Self-distills ONLY the routers against the frozen teacher.
+4. Evaluates the SAME routers at several budgets through one compiled
+   forward, and reports loss vs active-compute fraction.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,11 +37,13 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
+import jax.numpy as jnp
 
-from benchmarks.common import (distill_routers, eval_lm_loss,
-                               pretrained_teacher)
-from repro.configs import ElasticConfig
-from repro.models import router_param_count, router_init
+from benchmarks.common import BATCH, SEQ, distill_routers, pretrained_teacher
+from repro.core.policy import ElasticPolicy, ElasticSpec, solve_budget
+from repro.data import LMDataPipeline
+from repro.models import forward, router_param_count, router_init
+from repro.training import lm_loss
 
 
 def main():
@@ -28,34 +51,51 @@ def main():
     cfg, params = pretrained_teacher(steps=300)
     n_base = sum(x.size for x in jax.tree.leaves(params))
 
-    print("== 2. attaching ElastiFormer routers")
-    ecfg = ElasticConfig(
-        mlp_token_capacity=0.8,     # 20% of tokens skip the MLP
-        mha_token_capacity=0.8,     # 20% of tokens skip attention...
+    print("== 2. attaching ElastiFormer routers (ElasticSpec)")
+    spec = ElasticSpec(
+        mlp_token_routed=True,      # tokens may skip the MLP
+        mha_token_routed=True,      # tokens may skip attention...
         lora_rank=1,                # ...rescued by rank-1 LoRA (paper Fig. 6)
-        mha_head_topk=2,            # 2/4 attention heads per token
+        mha_head_routed=True,       # per-token attention-head selection
         mlp_n_experts=4,            # dense MLP losslessly split into 4 experts
-        mlp_expert_topk=2,          # 2/4 experts per token
+        expert_routed=True,         # per-token expert selection
     )
-    rp = router_init(jax.random.PRNGKey(0), cfg, ecfg)
+    rp = router_init(jax.random.PRNGKey(0), cfg, spec)
     n_router = router_param_count(rp)
     print(f"   base params (frozen): {n_base:,}")
     print(f"   router(+LoRA) params: {n_router:,} "
           f"({100 * n_router / n_base:.3f}% — paper: 0.00006%–0.3%)")
 
-    print("== 3. self-distilling routers (teacher = frozen base) ...")
-    rp, metrics = distill_routers(params, cfg, ecfg, steps=60)
+    print("== 3. self-distilling routers at a 0.8 budget ...")
+    train_policy = solve_budget(cfg, spec, 0.8)
+    rp, metrics = distill_routers(params, cfg, spec, steps=60,
+                                  policy=train_policy)
     print(f"   final train metrics: { {k: round(v, 4) for k, v in metrics.items()} }")
 
-    print("== 4. evaluation")
-    base = eval_lm_loss(params, None, cfg, None, "base")
-    stud = eval_lm_loss(params, rp, cfg, ecfg, "train")
-    cap = ecfg.mlp_token_capacity
+    print("== 4. one compiled model, many budgets")
+    pipe = LMDataPipeline(vocab=cfg.vocab_size, seq_len=SEQ,
+                          global_batch=BATCH, seed=123)
+    tokens = jnp.asarray(pipe.batch_at(0))
+    t_logits, _ = forward(params, None, {"tokens": tokens}, cfg, None,
+                          mode="base")
+    base = float(lm_loss(t_logits, tokens))
     print(f"   teacher LM loss : {base:.4f}")
-    print(f"   elastic LM loss : {stud:.4f}  (delta {stud - base:+.4f})")
-    print(f"   active compute  : ~{cap:.0%} tokens x "
-          f"{ecfg.mha_head_topk}/{cfg.n_heads} heads x "
-          f"{ecfg.mlp_expert_topk}/{ecfg.mlp_n_experts} experts")
+
+    @jax.jit
+    def ev(rp, tokens, policy):
+        logits, aux = forward(params, rp, {"tokens": tokens}, cfg, spec,
+                              mode="train", policy=policy)
+        return lm_loss(logits, tokens), aux.sel_rate
+
+    for budget in (0.5, 0.8, 1.0):
+        policy = solve_budget(cfg, spec, budget)
+        loss, sel = ev(rp, tokens, policy)
+        tag = " (== teacher, lossless)" if budget == 1.0 else ""
+        print(f"   budget {budget:.1f}: LM loss {float(loss):.4f} "
+              f"(delta {float(loss) - base:+.4f}), "
+              f"token sel rate {float(sel):.2f}{tag}")
+    print(f"   forward compiled {ev._cache_size()}x for "
+          f"{3} budgets (policy is a traced argument)")
 
 
 if __name__ == "__main__":

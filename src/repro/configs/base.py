@@ -156,6 +156,14 @@ class ElasticConfig:
     """ElastiFormer routing configuration (the paper's contribution).
 
     capacities are fractions in (0, 1]; None disables that router.
+
+    DEPRECATED for new code: this bakes every capacity/top-k into the trace
+    (one compile per budget). Prefer the split API in ``repro.core.policy``
+    — a static ``ElasticSpec`` (what routers exist) plus a runtime
+    ``ElasticPolicy`` pytree passed as a traced argument, so one compiled
+    model serves every compute budget. Every entry point still accepts
+    ``ElasticConfig`` through a shim; ``to_spec_policy()`` converts
+    explicitly (see docs/elastic_policy.md for the migration table).
     """
     mlp_token_capacity: Optional[float] = 0.8    # input subset sel. around MLP
     mha_token_capacity: Optional[float] = None   # input subset sel. around MHA/mixer
@@ -177,6 +185,11 @@ class ElasticConfig:
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0
+
+    def to_spec_policy(self):
+        """Split into the new (ElasticSpec, ElasticPolicy) pair."""
+        from repro.core.policy import policy_from_config, spec_from_config
+        return spec_from_config(self), policy_from_config(self)
 
 
 @dataclass(frozen=True)

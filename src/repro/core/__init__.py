@@ -1,17 +1,23 @@
-"""ElastiFormer core: routing (Alg. 1/2), moefy, LoRA, distillation."""
+"""ElastiFormer core: spec/policy, routing (Alg. 1/2), moefy, LoRA,
+distillation."""
+from repro.core.policy import (ElasticPolicy, ElasticSpec, as_spec_policy,
+                               capacity_anneal, policy_from_config,
+                               solve_budget, spec_from_config)
 from repro.core.routing import (RouteAux, bce_topk_loss, param_route_weights,
                                 param_router_init, route_tokens,
                                 token_logits, token_router_init, topk_indices,
-                                topk_mask)
+                                topk_mask, topk_mask_dyn)
 from repro.core.moefy import moefy_mlp, unmoefy_mlp
 from repro.core.lora import lora_apply, lora_init
 from repro.core.distill import (cosine_distance, distill_loss, kl_divergence,
                                 topk_kl, topk_kl_from_gathered)
 
 __all__ = [
+    "ElasticPolicy", "ElasticSpec", "as_spec_policy", "capacity_anneal",
+    "policy_from_config", "solve_budget", "spec_from_config",
     "RouteAux", "bce_topk_loss", "param_route_weights", "param_router_init",
     "route_tokens", "token_logits", "token_router_init", "topk_indices",
-    "topk_mask", "moefy_mlp", "unmoefy_mlp", "lora_apply", "lora_init",
-    "cosine_distance", "distill_loss", "kl_divergence", "topk_kl",
-    "topk_kl_from_gathered",
+    "topk_mask", "topk_mask_dyn", "moefy_mlp", "unmoefy_mlp", "lora_apply",
+    "lora_init", "cosine_distance", "distill_loss", "kl_divergence",
+    "topk_kl", "topk_kl_from_gathered",
 ]

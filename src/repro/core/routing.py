@@ -2,9 +2,18 @@
 
 Two schemes:
   * input subset selection  — scalar sigmoid router per token, top-k (k=c*T)
-    during training, threshold 0.5 at causal inference (§B.1), BCE aux loss.
+    during training, threshold theta at causal inference (§B.1), BCE aux loss.
   * parameter subset selection — M-way router, w = M*softmax(W_r x), top-k
     submodules, straight-through via output scaling, load-balance aux (§B.2).
+
+Capacities and top-k counts come in two flavors (see core/policy.py):
+  * python numbers — trace-time constants; the top-k *gather* path with real
+    FLOP savings is available, at one compile per budget;
+  * traced jnp scalars / (B,) arrays — rank-based validity *masking* at full
+    shapes, so ONE compiled graph serves every budget (and mixed per-request
+    budgets inside one batch). Any capacity >= 1 (or top-k >= M, or
+    ``student <= 0``) short-circuits to the exact unrouted module: router
+    weights are forced to 1, which is the paper's losslessness property.
 
 All router math is float32 regardless of backbone dtype.
 """
@@ -78,6 +87,121 @@ def topk_mask(scores, k: int):
     return scores >= kth
 
 
+# ----------------- static/traced scalar plumbing (policy leaves) -------------
+
+def is_static(v) -> bool:
+    """True for python numbers (trace-time constants from the legacy
+    ``ElasticConfig`` path); traced policy leaves are jnp arrays/tracers."""
+    return isinstance(v, (int, float))
+
+
+def bcast_to(v, ndim: int):
+    """Right-pad a leading-dims value ((), (B,), ...) with singleton axes so
+    it broadcasts against an (B, ..., n) tensor of rank ``ndim``."""
+    if is_static(v):
+        return v
+    v = jnp.asarray(v)
+    return v.reshape(v.shape + (1,) * (ndim - v.ndim))
+
+
+def token_ranks(scores):
+    """Descending rank of each entry along the last axis (0 = largest)."""
+    return jnp.argsort(jnp.argsort(-scores, axis=-1), axis=-1)
+
+
+def topk_mask_dyn(scores, k):
+    """topk_mask with a *traced* k ((), or any leading-dims shape): an entry
+    is kept iff its descending rank is < k. Ties broken by position."""
+    return token_ranks(scores) < bcast_to(k, scores.ndim)
+
+
+def topk_mask_any(scores, k):
+    if is_static(k):
+        return topk_mask(scores, int(k))
+    return topk_mask_dyn(scores, k)
+
+
+def capacity_k(capacity, s: int, mxu: bool = False):
+    """ceil(capacity * s) clipped to [1, s]; python int when static.
+
+    ``mxu``: on long sequences (s >= 1024) round the count up to a multiple
+    of 128 (MXU-friendly gather sizes) — the traced path applies the SAME
+    rule so one-graph masking selects exactly the tokens the static gather
+    compile would have."""
+    if is_static(capacity):
+        k = int(math.ceil(capacity * s))
+        if mxu and s >= 1024:
+            k = min(s, -(-k // 128) * 128)
+        return max(1, min(s, k))
+    k = jnp.ceil(capacity * s)
+    if mxu and s >= 1024:
+        k = jnp.minimum(s, jnp.ceil(k / 128) * 128)
+    return jnp.clip(k, 1, s)
+
+
+def threshold_logit(theta):
+    """Router-logit threshold equivalent to sigmoid(logit) > theta."""
+    if is_static(theta):
+        return math.log(theta / (1.0 - theta)) if 0.0 < theta < 1.0 \
+            else (-jnp.inf if theta <= 0.0 else jnp.inf)
+    theta = jnp.clip(jnp.asarray(theta, jnp.float32), 1e-6, 1.0 - 1e-6)
+    return jnp.log(theta) - jnp.log1p(-theta)
+
+
+def gate_capacity(capacity, student):
+    """Teacher gating: ``student <= 0`` forces full capacity (exact teacher)."""
+    if student is None:
+        return capacity
+    if is_static(student):
+        return capacity if student > 0 else 1.0
+    cap = capacity if not is_static(capacity) else jnp.asarray(
+        capacity, jnp.float32)
+    return jnp.where(jnp.asarray(student) > 0, cap, 1.0)
+
+
+def gate_topk(k, student, n: int):
+    """Teacher gating for parameter-subset top-k: student off -> all n."""
+    if student is None:
+        return k
+    if is_static(student):
+        return k if student > 0 else n
+    kk = k if not is_static(k) else jnp.asarray(k, jnp.float32)
+    return jnp.where(jnp.asarray(student) > 0, kk, n)
+
+
+def is_full(v, limit=1.0):
+    """capacity >= 1 (or top-k >= M): the knob requests the exact teacher.
+    python bool when static, else a traced bool array."""
+    if is_static(v):
+        return v >= limit
+    return jnp.asarray(v) >= limit
+
+
+def token_gate(logits, scores, capacity, mode: str, *, theta=0.5,
+               mxu: bool = False):
+    """Unified keep-mask + router weight for input subset selection.
+
+    Train: top-k by capacity (static fast path or traced rank masking; both
+    use the same rounding — see ``capacity_k``'s ``mxu``).
+    Infer: threshold theta on the router sigmoid (§B.1).
+    Any capacity >= 1 forces (keep=all, weight=1) — exact teacher.
+    Returns (keep bool (B,S), weight f32 (B,S)).
+    """
+    S = scores.shape[-1]
+    if mode == "train":
+        keep = topk_mask_any(scores, capacity_k(capacity, S, mxu=mxu))
+    else:
+        keep = logits > bcast_to(threshold_logit(theta), logits.ndim)
+    full = is_full(capacity)
+    if is_static(full):
+        if full:
+            return jnp.ones_like(keep, bool), jnp.ones_like(scores)
+        return keep, keep * scores
+    full = bcast_to(full, keep.ndim)
+    keep = keep | full
+    return keep, jnp.where(full, 1.0, keep * scores)
+
+
 def bce_topk_loss(logits, in_topk):
     """§B.1 auxiliary loss: router sigmoid should predict top-k membership."""
     y = in_topk.astype(jnp.float32)
@@ -102,14 +226,19 @@ def route_tokens(
     rp,
     x,                      # (B, S, D)
     f: Callable,            # f(x_sub, positions_sub) -> (B, k(or S), D)
-    capacity: Optional[float],
+    capacity,               # None | python float (static) | traced scalar/(B,)
     mode: str,              # base | train | infer
     positions=None,         # (S,) int32 positions (for RoPE/causal inside f)
     impl: str = "gather",
+    theta=0.5,              # inference threshold (policy.theta)
+    student=None,           # policy.student: <=0 bypasses routing entirely
 ):
     """Input subset selection around a module f (residual added by caller).
 
     Returns (delta, aux). delta is f's (router-weighted) contribution.
+    Static capacities keep the top-k gather path (smaller HLO, per-budget
+    compile); traced capacities run dense with rank masking so one compiled
+    graph serves every budget.
     """
     B, S, D = x.shape
     if positions is None:
@@ -117,22 +246,13 @@ def route_tokens(
     if capacity is None or mode == "base":
         return f(x, positions), RouteAux.zero()
 
+    capacity = gate_capacity(capacity, student)
     logits = token_logits(rp, x)            # (B, S)
     scores = jax.nn.sigmoid(logits)
 
-    if mode == "infer":
-        # §B.1: threshold 0.5 (== logit 0); dense compute, masked output.
-        keep = (logits > 0.0)
-        y = f(x, positions)
-        delta = y * (keep * scores)[..., None].astype(y.dtype)
-        return delta, RouteAux.of(keep=keep)
-
-    k = max(1, min(S, int(math.ceil(capacity * S))))
-    if impl == "dense_mask":
-        mask = topk_mask(scores, k)
-        y = f(x, positions)
-        delta = y * (mask * scores)[..., None].astype(y.dtype)
-    else:
+    if (mode == "train" and impl == "gather" and is_static(capacity)
+            and is_static(theta) and capacity < 1.0):
+        k = max(1, min(S, int(math.ceil(capacity * S))))
         idx = topk_indices(scores, k)        # (B, k) ascending
         x_sel = gather_tokens(x, idx)
         pos_sel = positions[idx] if positions.ndim == 1 else jnp.take_along_axis(positions, idx, 1)
@@ -141,8 +261,16 @@ def route_tokens(
         y_sel = y_sel * w_sel[..., None].astype(y_sel.dtype)
         delta = scatter_add_tokens(x, idx, y_sel)
         mask = topk_mask(scores, k)
-    aux = RouteAux.of(topk=bce_topk_loss(logits, mask), keep=mask)
-    return delta, aux
+        return delta, RouteAux.of(topk=bce_topk_loss(logits, mask), keep=mask)
+
+    # dense path: full-shape compute, rank/threshold masking (train w/
+    # dense_mask impl, inference, and every traced-capacity case)
+    keep, w = token_gate(logits, scores, capacity, mode, theta=theta)
+    y = f(x, positions)
+    delta = y * w[..., None].astype(y.dtype)
+    if mode == "train":
+        return delta, RouteAux.of(topk=bce_topk_loss(logits, keep), keep=keep)
+    return delta, RouteAux.of(keep=keep)
 
 
 # --------------------- parameter subset selection ---------------------------
@@ -152,9 +280,11 @@ def param_router_init(key, d: int, m: int):
     return {"w": w}
 
 
-def param_route_weights(rp, x, top_k: int, normalize_to_m: bool = True):
+def param_route_weights(rp, x, top_k, normalize_to_m: bool = True):
     """Alg. 1: w = M * softmax(W_r x); top-k selection mask.
 
+    ``top_k`` may be a python int (static) or a traced scalar/(B,) array
+    (rank masking; one compiled graph for every k).
     Returns (weights (...,M) f32, mask (...,M) bool, aux RouteAux).
     With k == M and a uniform router this reproduces the base module exactly
     (weights == 1 everywhere) — the paper's losslessness property.
@@ -163,7 +293,8 @@ def param_route_weights(rp, x, top_k: int, normalize_to_m: bool = True):
     logits = x.astype(jnp.float32) @ rp["w"]            # (..., M)
     probs = jax.nn.softmax(logits, axis=-1)
     w = probs * m if normalize_to_m else probs
-    mask = topk_mask(w, min(top_k, m))
+    k = min(int(top_k), m) if is_static(top_k) else jnp.clip(top_k, 1, m)
+    mask = topk_mask_any(w, k)
     # §B.2 load-balance: E_m[frac_selected(m) * mean_prob(m)] * M
     red = tuple(range(probs.ndim - 1))
     frac = jnp.mean(mask.astype(jnp.float32), axis=red)

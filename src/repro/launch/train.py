@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_elastic
+from repro.core.policy import as_spec_policy, capacity_anneal, solve_budget
 from repro.data import LMDataPipeline
 from repro.launch.mesh import make_production_mesh
 from repro.models import model_init, router_init, router_param_count
@@ -67,7 +68,14 @@ def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
           seq_len: int = 128, global_batch: int = 8, lr: float = 1e-3,
           ckpt_dir: str = "/tmp/repro_ckpt", save_every: int = 25,
           use_mesh: bool = False, multi_pod: bool = False,
-          inject_failures: tuple = (), seed: int = 0):
+          inject_failures: tuple = (), seed: int = 0,
+          budget: float = None, anneal_from: float = None,
+          anneal_steps: int = None):
+    """``budget``: target compute budget; capacities come from the roofline
+    budget solver instead of the config defaults. ``anneal_from``: start the
+    distillation near that budget and anneal linearly to ``budget`` over
+    ``anneal_steps`` (default: all steps). The policy is a *traced* argument
+    of the jitted train step, so the whole schedule runs on ONE compile."""
     mesh = make_production_mesh(multi_pod=multi_pod) if use_mesh else None
     cfg, ecfg, params, state, step_fn, pipe = build_trainer(
         arch, variant=variant, mesh=mesh, lr=lr, total_steps=total_steps,
@@ -75,9 +83,31 @@ def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
     ckpt = Checkpointer(ckpt_dir, keep=3)
     box = {"state": state, "metrics": {}}
 
+    policy_at = None
+    if budget is None and (anneal_from is not None
+                           or anneal_steps is not None):
+        raise ValueError("--anneal-from/--anneal-steps require --budget "
+                         "(the anneal target)")
+    if budget is not None:
+        spec, _ = as_spec_policy(ecfg)
+        sched = capacity_anneal(
+            anneal_from if anneal_from is not None else budget, budget,
+            anneal_steps if anneal_steps is not None else total_steps)
+        cache = {}
+
+        def policy_at(step: int):
+            b = round(sched(step), 4)
+            if b not in cache:   # solver output as traced jnp leaves
+                cache[b] = solve_budget(cfg, spec, b)
+            return cache[b]
+
     def do_step(step: int) -> dict:
         batch = {"tokens": jnp.asarray(pipe.batch_at(step))}
-        box["state"], m = step_fn(box["state"], params, batch)
+        if policy_at is None:
+            box["state"], m = step_fn(box["state"], params, batch)
+        else:
+            box["state"], m = step_fn(box["state"], params, batch,
+                                      policy_at(step))
         box["metrics"] = {k: float(v) for k, v in m.items()}
         if step % 10 == 0:
             log.info("step %d %s", step, box["metrics"])
@@ -126,11 +156,20 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
     ap.add_argument("--mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="target compute budget in (0,1]; capacities from "
+                         "the roofline budget solver")
+    ap.add_argument("--anneal-from", type=float, default=None,
+                    help="start budget of the linear capacity anneal "
+                         "(traced policy: the schedule re-uses one compile)")
+    ap.add_argument("--anneal-steps", type=int, default=None)
     args = ap.parse_args()
     _, metrics, restarts, _ = train(
         args.arch, variant=args.variant, total_steps=args.steps,
         seq_len=args.seq_len, global_batch=args.batch, lr=args.lr,
-        ckpt_dir=args.ckpt, use_mesh=args.mesh, multi_pod=args.multi_pod)
+        ckpt_dir=args.ckpt, use_mesh=args.mesh, multi_pod=args.multi_pod,
+        budget=args.budget, anneal_from=args.anneal_from,
+        anneal_steps=args.anneal_steps)
     print("final:", metrics, "restarts:", restarts)
 
 

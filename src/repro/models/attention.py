@@ -76,11 +76,22 @@ def _pad_heads(t, cfg, axis: int = -1, fill: float = 0.0):
     return jnp.pad(t, pw, constant_values=fill)
 
 
+def _lora_scale(lora, d):
+    """Optional traced on/off multiplier ((), or (B,)) set by the policy:
+    0 disables the adapter (full-budget / teacher rows stay lossless)."""
+    s = lora.get("scale")
+    return None if s is None else jnp.reshape(
+        jnp.asarray(s), jnp.shape(s) + (1,) * (d - jnp.ndim(s)))
+
+
 def _project_q(p, x, positions, cfg, lora, use_rope):
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])       # (B,S,Hp,Dh)
     if lora is not None and "q" in lora:
         H, Dh = cfg.n_heads, cfg.d_head
         dq = lora_apply(lora["q"], x).reshape(x.shape[0], x.shape[1], H, Dh)
+        s = _lora_scale(lora, dq.ndim)
+        if s is not None:
+            dq = dq * s.astype(dq.dtype)
         q = q + _pad_heads(dq, cfg, axis=2)
     if "bq" in p:
         q = q + p["bq"]
@@ -97,7 +108,11 @@ def _project_kv(p, x, positions, cfg, lora, use_rope):
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     if lora is not None and "v" in lora:
         K, Dh = p["wv"].shape[1], p["wv"].shape[2]
-        v = v + lora_apply(lora["v"], x).reshape(x.shape[0], x.shape[1], K, Dh)
+        dv = lora_apply(lora["v"], x).reshape(x.shape[0], x.shape[1], K, Dh)
+        s = _lora_scale(lora, dv.ndim)
+        if s is not None:
+            dv = dv * s.astype(dv.dtype)
+        v = v + dv
     if "bk" in p:
         k, v = k + p["bk"], v + p["bv"]
     if use_rope:

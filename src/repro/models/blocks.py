@@ -6,21 +6,29 @@ Block kinds (cfg.mixer_pattern):
   ssm   : [token-route] Mamba2 SSD mixer (no MLP)
   rglru : [token-route] RG-LRU recurrent mixer                  + MLP block
 
+Elasticity is split into a static ``ElasticSpec`` (which routers exist —
+shapes params and HLO) and a runtime ``ElasticPolicy`` (capacities, head/
+expert top-k, decode threshold theta, teacher/student flag) — see
+core/policy.py. Policy leaves that are python numbers are trace-time
+constants (the legacy static path, with top-k *gather* routing and real FLOP
+savings); traced leaves run full-shape compute with rank masking so ONE
+compiled block serves every budget, including per-request (B,) budgets.
+
 Modes:
   base  : frozen pretrained model (the distillation teacher) — routers off.
   train : student; input-subset selection = top-k (capacity c), Alg. 2.
-  infer : student; input-subset selection = threshold 0.5 (§B.1).
+  infer : student; input-subset selection = threshold theta (§B.1).
 
 Token routing semantics per mixer family:
   attention : top-k tokens attend among themselves (MoD semantics) — the
-              gather path delivers real FLOP savings in the lowered HLO.
+              gather path delivers real FLOP savings in the lowered HLO;
+              the masked path computes the same math at full shapes.
   ssm/rglru : skipped tokens leave the recurrent state untouched (dt=0 /
               a=1 exact pass-through); dense-masked in both train and infer
               so train/infer semantics coincide.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
@@ -67,26 +75,27 @@ def block_init(key, kind: str, cfg):
     return p
 
 
-def block_router_init(key, kind: str, cfg, ecfg):
-    """Trainable ElastiFormer params for one layer (tiny; see Table 1)."""
+def block_router_init(key, kind: str, cfg, spec):
+    """Trainable ElastiFormer params for one layer (tiny; see Table 1).
+    ``spec`` is the static ElasticSpec: it alone decides which routers exist."""
     D = cfg.d_model
     ks = jax.random.split(key, 6)
     rp = {}
-    if ecfg.mha_token_capacity is not None:
+    if spec.mha_token_routed:
         rp["tok_mixer"] = R.token_router_init(ks[0], D)
     if is_attn(kind):
-        if ecfg.mha_head_topk is not None:
+        if spec.mha_head_routed:
             rp["head"] = R.param_router_init(ks[1], D, cfg.n_heads)
-        if ecfg.lora_rank:
+        if spec.lora_rank:
             rp["lora"] = {
-                "q": lora_init(ks[2], D, cfg.n_heads * cfg.d_head, ecfg.lora_rank),
-                "v": lora_init(ks[3], D, cfg.n_kv_heads * cfg.d_head, ecfg.lora_rank),
+                "q": lora_init(ks[2], D, cfg.n_heads * cfg.d_head, spec.lora_rank),
+                "v": lora_init(ks[3], D, cfg.n_kv_heads * cfg.d_head, spec.lora_rank),
             }
     if has_mlp(kind):
-        if ecfg.mlp_token_capacity is not None:
+        if spec.mlp_token_routed:
             rp["tok_mlp"] = R.token_router_init(ks[4], D)
-        n_exp = cfg.moe.n_experts if cfg.moe is not None else ecfg.mlp_n_experts
-        if n_exp and ecfg.mlp_expert_topk:
+        n_exp = cfg.moe.n_experts if cfg.moe is not None else spec.mlp_n_experts
+        if n_exp and spec.expert_routed:
             rp["expert"] = R.param_router_init(ks[5], D, n_exp)
     return rp
 
@@ -94,47 +103,89 @@ def block_router_init(key, kind: str, cfg, ecfg):
 # ------------------------- helpers ------------------------------------------
 
 def _round_k(capacity: float, s: int) -> int:
-    k = int(math.ceil(capacity * s))
-    if s >= 1024:  # MXU-friendly gather sizes on long sequences
-        k = min(s, -(-k // 128) * 128)
-    return max(1, min(s, k))
+    """MXU-rounded top-k count (the canonical rule lives in routing so the
+    traced masking path selects identical token counts)."""
+    return R.capacity_k(capacity, s, mxu=True)
 
 
-def _head_weights(rp, h, ecfg, auxes):
-    if rp is None or "head" not in rp or ecfg.mha_head_topk is None:
+def _expert_args(pol, n_experts: int) -> dict:
+    """moe_apply/moe_decode kwargs for the elastic expert budget: a static
+    int keeps the small-k graph; a traced count sizes buffers for all E and
+    masks (one graph, any budget)."""
+    k = R.gate_topk(pol.mlp_expert_topk, pol.student, n_experts)
+    if R.is_static(k):
+        return {"top_k": min(int(k), n_experts)}
+    return {"top_k": n_experts, "top_k_traced": k}
+
+
+def _lora_gate(lora, cap, student):
+    """Disable the LoRA rescue adapters exactly when there is nothing to
+    rescue: mha token budget full, or the policy is in teacher mode — this
+    keeps budget-1.0 rows bit-lossless even with trained adapters.
+    ``cap`` is the (already student-gated) mha token capacity or None."""
+    if lora is None:
         return None
-    w, m, a = R.param_route_weights(rp["head"], h, ecfg.mha_head_topk)
+    if cap is not None:
+        full = R.is_full(cap)
+    elif student is None or R.is_static(student):
+        full = student is not None and student <= 0
+    else:
+        full = jnp.asarray(student) <= 0
+    if R.is_static(full):
+        return None if full else lora
+    return {**lora, "scale": 1.0 - jnp.asarray(full, jnp.float32)}
+
+
+def _head_weights(rp, h, spec, pol, cfg, auxes):
+    if rp is None or spec is None or "head" not in rp \
+            or not spec.mha_head_routed:
+        return None
+    k = R.gate_topk(pol.mha_head_topk, pol.student, cfg.n_heads)
+    w, m, a = R.param_route_weights(rp["head"], h, k)
     auxes.append(a)
-    return w * m
+    hw = w * m
+    full = R.is_full(k, cfg.n_heads)
+    if R.is_static(full):
+        return jnp.ones_like(hw) if full else hw
+    return jnp.where(R.bcast_to(full, hw.ndim), 1.0, hw)
 
 
-def _mlp_fn(p, rp, cfg, ecfg, elastic_on, mode, auxes):
-    """Returns f(h_sub, pos_sub) for the MLP/MoE sub-block."""
-    def f(h, _pos):
+def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
+    """Returns f(h_sub, pos_sub[, token_valid, dispatch_frac]) for the
+    MLP/MoE sub-block. The masked (traced-capacity) token-routing path hands
+    in ``token_valid``/``dispatch_frac`` so skipped tokens cannot evict kept
+    ones from expert capacity and the dispatch buffers match what the static
+    gather path would have compiled for the same budget."""
+    def f(h, _pos, token_valid=None, dispatch_frac=None):
         if cfg.moe is not None:
             if elastic_on and rp and "expert" in rp and mode != "base":
                 y, a = moe_apply(
-                    p["mlp"], h, act=cfg.act, top_k=ecfg.mlp_expert_topk,
+                    p["mlp"], h, act=cfg.act,
                     router_w=rp["expert"]["w"], normalize_to_m=True,
                     capacity_factor=cfg.moe.capacity_factor,
-                    seq_chunk=cfg.moe.seq_chunk)
+                    seq_chunk=cfg.moe.seq_chunk, token_valid=token_valid,
+                    dispatch_frac=dispatch_frac,
+                    **_expert_args(pol, cfg.moe.n_experts))
             else:
                 y, a = moe_apply(
                     p["mlp"], h, act=cfg.act, top_k=cfg.moe.top_k,
                     capacity_factor=cfg.moe.capacity_factor,
-                    seq_chunk=cfg.moe.seq_chunk)
+                    seq_chunk=cfg.moe.seq_chunk, token_valid=token_valid,
+                    dispatch_frac=dispatch_frac)
             auxes.append(a)
             return y
         if (elastic_on and rp and "expert" in rp and mode != "base"
-                and ecfg.mlp_n_experts):
-            ep = moefy_mlp(p["mlp"], ecfg.mlp_n_experts)
+                and spec.mlp_n_experts):
+            ep = moefy_mlp(p["mlp"], spec.mlp_n_experts)
             # seq_chunk bounds the (B,E,C,D) dispatch buffers: 512 keeps
             # the f32 scatter-upcast live set ~1.3 GB/dev (vs 8.5 GB at a
             # full-sequence chunk) — §Perf H4 (HBM fit).
             y, a = moe_apply(
-                ep, h, act=cfg.act, top_k=ecfg.mlp_expert_topk,
+                ep, h, act=cfg.act,
                 router_w=rp["expert"]["w"], normalize_to_m=True,
-                seq_chunk=512)
+                seq_chunk=512, token_valid=token_valid,
+                dispatch_frac=dispatch_frac,
+                **_expert_args(pol, spec.mlp_n_experts))
             auxes.append(a)
             return y
         return mlp_apply(p["mlp"], h, cfg.act)
@@ -144,7 +195,7 @@ def _mlp_fn(p, rp, cfg, ecfg, elastic_on, mode, auxes):
 # --------------------- full-sequence block apply ----------------------------
 
 def block_apply(
-    kind: str, p, rp, x, *, cfg, ecfg, mode: str, elastic_on: bool,
+    kind: str, p, rp, x, *, cfg, spec, pol=None, mode: str, elastic_on: bool,
     window: int = 0, positions=None, causal: bool = True,
     enc_kv=None, enc_valid=None, collect_cache: bool = False,
     max_cache_len: int = 0,
@@ -159,17 +210,23 @@ def block_apply(
 
     # ---- temporal mixer ----
     h = norm_apply(p["norm1"], x, cfg.norm)
-    cap = ecfg.mha_token_capacity if (routed and ecfg) else None
+    cap = None
+    if routed and spec is not None and spec.mha_token_routed:
+        cap = R.gate_capacity(pol.mha_token_capacity, pol.student)
 
     if is_attn(kind):
         lora = rp.get("lora") if (routed and rp) else None
+        lora = _lora_gate(lora, cap,
+                          pol.student if (routed and pol is not None) else None)
         if cap is None:
-            hw = _head_weights(rp if routed else None, h, ecfg, auxes)
+            hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
+                               auxes) if routed else None
             y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
                                    causal=causal, window=window,
                                    head_weights=hw, lora=lora)
             delta, keep = y, jnp.ones((B, Seq), bool)
-        elif mode == "train" and ecfg.routing_impl == "gather":
+        elif (mode == "train" and spec.routing_impl == "gather"
+              and R.is_static(cap) and cap < 1.0):
             logits = R.token_logits(rp["tok_mixer"], h)
             scores = jax.nn.sigmoid(logits)
             kk = _round_k(cap, Seq)
@@ -177,7 +234,7 @@ def block_apply(
             h_sel = R.gather_tokens(h, idx)
             pos_sel = jnp.take_along_axis(
                 jnp.broadcast_to(positions, (B, Seq)), idx, 1)
-            hw = _head_weights(rp, h_sel, ecfg, auxes)
+            hw = _head_weights(rp, h_sel, spec, pol, cfg, auxes)
             y_sel, k, v = A.attn_apply(p["attn"], h_sel, cfg=cfg,
                                        positions=pos_sel, causal=causal,
                                        window=window, head_weights=hw,
@@ -191,21 +248,21 @@ def block_apply(
             if collect_cache:  # scatter k/v back to full positions
                 k = _scatter_kv(k, idx, B, Seq)
                 v = _scatter_kv(v, idx, B, Seq)
-        else:  # threshold (infer/prefill) or dense_mask training
+        else:  # threshold (infer/prefill), dense_mask, or traced capacity
             logits = R.token_logits(rp["tok_mixer"], h)
             scores = jax.nn.sigmoid(logits)
+            keep, wtok = R.token_gate(logits, scores, cap, mode,
+                                      theta=pol.theta, mxu=True)
             if mode == "train":
-                keep = R.topk_mask(scores, _round_k(cap, Seq))
                 auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
                                            keep=keep))
             else:
-                keep = logits > 0.0
                 auxes.append(R.RouteAux.of(keep=keep))
-            hw = _head_weights(rp, h, ecfg, auxes)
+            hw = _head_weights(rp, h, spec, pol, cfg, auxes)
             y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
                                    causal=causal, window=window,
                                    kv_valid=keep, head_weights=hw, lora=lora)
-            delta = y * (keep * scores)[..., None].astype(y.dtype)
+            delta = y * wtok[..., None].astype(y.dtype)
         if collect_cache:
             L = max_cache_len or Seq
             cache["attn"] = _pad_cache(k, v, keep, L, window)
@@ -214,12 +271,12 @@ def block_apply(
         if cap is not None:
             logits = R.token_logits(rp["tok_mixer"], h)
             scores = jax.nn.sigmoid(logits)
+            keep, wtok = R.token_gate(logits, scores, cap, mode,
+                                      theta=pol.theta, mxu=True)
             if mode == "train":
-                keep = R.topk_mask(scores, _round_k(cap, Seq))
                 auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
                                            keep=keep))
             else:
-                keep = logits > 0.0
                 auxes.append(R.RouteAux.of(keep=keep))
         if kind == "ssm":
             y, (st, cv) = S.ssm_apply(p["mixer"], h, cfg, keep_mask=keep)
@@ -232,7 +289,7 @@ def block_apply(
         if keep is None:
             delta = y
         else:
-            delta = y * (keep * scores)[..., None].astype(y.dtype)
+            delta = y * wtok[..., None].astype(y.dtype)
     x = x + delta
 
     # ---- cross attention (xattn) ----
@@ -252,12 +309,30 @@ def block_apply(
     # ---- MLP ----
     if has_mlp(kind):
         h = norm_apply(p["norm2"], x, cfg.norm)
-        f = _mlp_fn(p, rp, cfg, ecfg, elastic_on, mode, auxes)
-        cap_mlp = ecfg.mlp_token_capacity if (routed and ecfg) else None
-        delta, a = R.route_tokens(
-            (rp or {}).get("tok_mlp"), h, f, cap_mlp, mode,
-            positions=positions, impl=ecfg.routing_impl if ecfg else "gather")
-        auxes.append(a)
+        f = _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes)
+        cap_mlp = None
+        if routed and spec is not None and spec.mlp_token_routed:
+            cap_mlp = R.gate_capacity(pol.mlp_token_capacity, pol.student)
+        if (cap_mlp is not None and mode == "train"
+                and not R.is_static(cap_mlp)):
+            # traced-capacity train path: dense compute, rank masking; bar
+            # skipped tokens from expert dispatch so the one-graph result
+            # matches the per-budget gather compile
+            logits = R.token_logits(rp["tok_mlp"], h)
+            scores = jax.nn.sigmoid(logits)
+            keep, wtok = R.token_gate(logits, scores, cap_mlp, mode,
+                                      theta=pol.theta)
+            y = f(h, positions, token_valid=keep, dispatch_frac=cap_mlp)
+            delta = y * wtok[..., None].astype(y.dtype)
+            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
+                                       keep=keep))
+        else:
+            delta, a = R.route_tokens(
+                (rp or {}).get("tok_mlp"), h, f, cap_mlp, mode,
+                positions=positions,
+                impl=spec.routing_impl if spec else "gather",
+                theta=pol.theta if pol is not None else 0.5)
+            auxes.append(a)
         x = x + delta
 
     aux = auxes[0]
@@ -299,24 +374,43 @@ def _pad_cache(k, v, keep, max_len: int, window: int = 0):
 
 # ------------------------------ decode --------------------------------------
 
-def block_decode(kind: str, p, rp, x, cache, t, *, cfg, ecfg, mode: str,
-                 elastic_on: bool, window: int = 0):
+def _decode_token_gate(rp, name, h, cap, pol):
+    """Threshold gate for one decode token: (keep (B,), weight (B,)).
+    capacity >= 1 or student off forces (keep all, weight 1) per row."""
+    logits = R.token_logits(rp[name], h)[:, 0]               # (B,)
+    keep = logits > R.threshold_logit(pol.theta)
+    w = keep * jax.nn.sigmoid(logits)
+    full = R.is_full(R.gate_capacity(cap, pol.student))
+    if R.is_static(full):
+        if full:
+            return jnp.ones_like(keep, bool), jnp.ones_like(w)
+        return keep, w
+    full = jnp.broadcast_to(full, keep.shape)
+    return keep | full, jnp.where(full, 1.0, w)
+
+
+def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
+                 mode: str, elastic_on: bool, window: int = 0):
     """One token. x: (B,1,D); returns (x', new_cache)."""
     B = x.shape[0]
     routed = elastic_on and mode != "base" and rp is not None
     new_cache = dict(cache)
 
     h = norm_apply(p["norm1"], x, cfg.norm)
-    keep, score = None, None
-    if routed and ecfg.mha_token_capacity is not None and "tok_mixer" in rp:
-        logits = R.token_logits(rp["tok_mixer"], h)[:, 0]    # (B,)
-        keep = logits > 0.0
-        score = jax.nn.sigmoid(logits)
+    keep, w1 = None, None
+    if routed and spec.mha_token_routed and "tok_mixer" in rp:
+        keep, w1 = _decode_token_gate(rp, "tok_mixer", h,
+                                      pol.mha_token_capacity, pol)
 
     auxes = []
     if is_attn(kind):
         lora = rp.get("lora") if routed else None
-        hw = _head_weights(rp if routed else None, h, ecfg, auxes)
+        if lora is not None:
+            dcap = R.gate_capacity(pol.mha_token_capacity, pol.student) \
+                if spec.mha_token_routed else None
+            lora = _lora_gate(lora, dcap, pol.student)
+        hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
+                           auxes) if routed else None
         y, new_cache["attn"] = A.attn_decode(
             p["attn"], h, cache["attn"], t, cfg=cfg, window=window,
             head_weights=hw, lora=lora, write=keep)
@@ -327,7 +421,7 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, ecfg, mode: str,
         y, new_cache["rglru"] = G.rglru_decode(p["mixer"], h, cache["rglru"],
                                                cfg, write=keep)
     if keep is not None:
-        y = y * (keep * score)[:, None, None].astype(y.dtype)
+        y = y * w1[:, None, None].astype(y.dtype)
     x = x + y
 
     if kind == "xattn":
@@ -343,28 +437,28 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, ecfg, mode: str,
 
     if has_mlp(kind):
         h = norm_apply(p["norm2"], x, cfg.norm)
-        keep2, score2 = None, None
-        if routed and ecfg.mlp_token_capacity is not None and "tok_mlp" in rp:
-            lg = R.token_logits(rp["tok_mlp"], h)[:, 0]
-            keep2, score2 = lg > 0.0, jax.nn.sigmoid(lg)
+        keep2, w2 = None, None
+        if routed and spec.mlp_token_routed and "tok_mlp" in rp:
+            keep2, w2 = _decode_token_gate(rp, "tok_mlp", h,
+                                           pol.mlp_token_capacity, pol)
         if cfg.moe is not None:
             if routed and "expert" in rp:
                 y, _ = moe_decode(p["mlp"], h, act=cfg.act,
-                                  top_k=ecfg.mlp_expert_topk,
                                   router_w=rp["expert"]["w"],
-                                  normalize_to_m=True)
+                                  normalize_to_m=True,
+                                  **_expert_args(pol, cfg.moe.n_experts))
             else:
                 y, _ = moe_decode(p["mlp"], h, act=cfg.act,
                                   top_k=cfg.moe.top_k)
-        elif routed and "expert" in rp and ecfg.mlp_n_experts:
-            ep = moefy_mlp(p["mlp"], ecfg.mlp_n_experts)
+        elif routed and "expert" in rp and spec.mlp_n_experts:
+            ep = moefy_mlp(p["mlp"], spec.mlp_n_experts)
             y, _ = moe_decode(ep, h, act=cfg.act,
-                              top_k=ecfg.mlp_expert_topk,
-                              router_w=rp["expert"]["w"], normalize_to_m=True)
+                              router_w=rp["expert"]["w"], normalize_to_m=True,
+                              **_expert_args(pol, spec.mlp_n_experts))
         else:
             y = mlp_apply(p["mlp"], h, cfg.act)
         if keep2 is not None:
-            y = y * (keep2 * score2)[:, None, None].astype(y.dtype)
+            y = y * w2[:, None, None].astype(y.dtype)
         x = x + y
     return x, new_cache
 

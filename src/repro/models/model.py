@@ -8,6 +8,14 @@ period is unrolled inside a single jax.lax.scan body — so compile time and
 HLO size stay ~O(one period) even at 88 layers and 512-way SPMD, with exact
 per-kind cost attribution (no lax.switch dual-branch waste). Remainder layers
 run unrolled ("tail").
+
+Elasticity API: every entry point takes ``elastic`` as either the legacy
+``ElasticConfig`` (static; deprecated shim) or the new ``ElasticSpec``, plus
+an optional runtime ``policy`` (``ElasticPolicy`` pytree). When ``policy``
+is passed into a jitted call it is *traced*: one compilation serves every
+compute budget (capacity sweeps, per-request budgets, annealing schedules).
+Policy leaves with a leading layer dim (L, ...) are split per layer and fed
+through the pattern scan, enabling per-layer-group capacity schedules.
 """
 from __future__ import annotations
 
@@ -18,7 +26,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.routing import RouteAux, token_router_init, topk_indices, gather_tokens
+from repro.core.policy import ElasticPolicy, as_spec_policy
+from repro.core.routing import (RouteAux, bcast_to, capacity_k, gate_capacity,
+                                is_full, is_static, gather_tokens,
+                                token_router_init, topk_indices,
+                                topk_mask_dyn)
 from repro.models.blocks import (block_apply, block_cache_init, block_decode,
                                  block_router_init, block_init)
 from repro.models.layers import dense_init, dtype_of, norm_apply, norm_init
@@ -39,16 +51,17 @@ def _total(mesh, axes) -> int:
     return n
 
 
-def build_pattern(cfg, ecfg=None):
-    """Returns (period: tuple[PatternPos], P, R)."""
+def build_pattern(cfg, elastic=None):
+    """Returns (period: tuple[PatternPos], P, R). ``elastic`` is an
+    ElasticSpec or a legacy ElasticConfig (only .layers matters here)."""
     n = cfg.n_layers
     base = math.lcm(len(cfg.mixer_pattern), len(cfg.window_pattern))
-    if ecfg is not None and ecfg.layers == "even":
+    if elastic is not None and elastic.layers == "even":
         base = math.lcm(base, 2)
     period_len = base if base <= n else n
     kinds, wins = cfg.layer_kinds, cfg.layer_windows
-    ecfg_applies = (lambda i: True) if ecfg is None else ecfg.applies_to_layer
-    period = tuple(PatternPos(kinds[j], wins[j], ecfg_applies(j))
+    applies = (lambda i: True) if elastic is None else elastic.applies_to_layer
+    period = tuple(PatternPos(kinds[j], wins[j], applies(j))
                    for j in range(period_len))
     return period, n // period_len, n % period_len
 
@@ -65,10 +78,27 @@ def _split_layers(per_layer: list, period_len: int, P: int):
     return scan, tail
 
 
+# --------------------------- policy threading --------------------------------
+
+def _pol_static(pol) -> bool:
+    """True when every policy leaf is a python number (or no policy): the
+    values are trace-time constants and must NOT be routed through scan /
+    shard_map arguments (that would turn them into tracers and lose the
+    static gather path)."""
+    return pol is None or all(is_static(l) for l in jax.tree.leaves(pol))
+
+
+def _split_policy(pol, n_layers: int, period_len: int, P: int):
+    """Per-layer split of a traced policy with (L, ...) leaves, mirroring
+    the parameter stacking. Returns (scan list, tail list)."""
+    per = [pol.for_layer(i) for i in range(n_layers)]
+    return _split_layers(per, period_len, P)
+
+
 # ------------------------------- init ---------------------------------------
 
-def model_init(key, cfg, ecfg=None):
-    period, P, _ = build_pattern(cfg, ecfg)
+def model_init(key, cfg, elastic=None):
+    period, P, _ = build_pattern(cfg, elastic)
     dt = dtype_of(cfg)
     D, V = cfg.d_model, cfg.padded_vocab
     ks = jax.random.split(key, 8)
@@ -83,27 +113,29 @@ def model_init(key, cfg, ecfg=None):
     if cfg.family in ("encoder", "vlm") or cfg.d_frontend:
         params["in_proj"] = dense_init(ks[3], cfg.d_frontend or D, D, dt)
     if cfg.encoder is not None:
-        params["encoder"] = model_init(ks[4], cfg.encoder, ecfg)
+        params["encoder"] = model_init(ks[4], cfg.encoder, elastic)
         params["encoder"]["in_proj"] = dense_init(
             ks[5], cfg.encoder.d_frontend or cfg.encoder.d_model,
             cfg.encoder.d_model, dt)
     return params
 
 
-def router_init(key, cfg, ecfg):
-    """Trainable ElastiFormer parameter tree (mirrors the layer stacking)."""
-    period, P, _ = build_pattern(cfg, ecfg)
+def router_init(key, cfg, elastic):
+    """Trainable ElastiFormer parameter tree (mirrors the layer stacking).
+    ``elastic``: ElasticSpec or legacy ElasticConfig."""
+    spec, _ = as_spec_policy(elastic)
+    period, P, _ = build_pattern(cfg, spec)
     ks = jax.random.split(key, 4)
     layers = [block_router_init(jax.random.fold_in(ks[0], i),
-                                cfg.layer_kinds[i], cfg, ecfg)
+                                cfg.layer_kinds[i], cfg, spec)
               for i in range(cfg.n_layers)]
     rp = {}
     rp["scan"], rp["tail"] = _split_layers(layers, len(period), P)
-    if ecfg.vlm_token_capacity is not None and (
+    if spec.vlm_routed and (
             cfg.family in ("vlm", "encdec") or cfg.n_image_tokens):
         D = cfg.d_model
-        if ecfg.vlm_router == "mlp":
-            h = ecfg.vlm_router_hidden or D
+        if spec.vlm_router == "mlp":
+            h = spec.vlm_router_hidden or D
             rp["vlm"] = {
                 "w1": dense_init(ks[1], D, h, jnp.float32),
                 "b1": jnp.zeros((h,), jnp.float32),
@@ -113,7 +145,7 @@ def router_init(key, cfg, ecfg):
         else:
             rp["vlm"] = token_router_init(ks[1], D)
     if cfg.encoder is not None:
-        rp["encoder"] = router_init(ks[3], cfg.encoder, ecfg)
+        rp["encoder"] = router_init(ks[3], cfg.encoder, spec)
     return rp
 
 
@@ -130,31 +162,53 @@ def _vlm_logits(rp, emb):
     return emb.astype(jnp.float32) @ rp["w"] + rp["b"]
 
 
-def select_context_tokens(rp, emb, ecfg, mode: str):
+def select_context_tokens(rp, emb, spec, pol, mode: str):
     """Paper §5.3: top-k image/context-token selection before the decoder.
-    Non-causal, so top-k applies at inference too (no BCE aux needed)."""
+    Non-causal, so top-k applies at inference too (no BCE aux needed).
+
+    Static capacity gathers the (B, k, D) subset (smaller decoder xattn);
+    traced capacity keeps full shape and returns a validity mask instead,
+    so one compiled graph serves every context budget."""
     if mode == "base" or rp is None or "vlm" not in rp \
-            or ecfg.vlm_token_capacity is None:
+            or spec is None or not spec.vlm_routed:
         return emb, None
     B, T, D = emb.shape
+    cap = pol.vlm_token_capacity if pol is not None else 1.0
+    cap = gate_capacity(cap, pol.student if pol is not None else None)
     logits = _vlm_logits(rp["vlm"], emb)
     scores = jax.nn.sigmoid(logits)
-    k = max(1, int(math.ceil(ecfg.vlm_token_capacity * T)))
-    idx = topk_indices(scores, k)
-    sel = gather_tokens(emb, idx)
-    w = jnp.take_along_axis(scores, idx, 1)
-    return sel * w[..., None].astype(sel.dtype), None
+    if is_static(cap):
+        if cap >= 1.0:
+            return emb, None
+        k = max(1, int(math.ceil(cap * T)))
+        idx = topk_indices(scores, k)
+        sel = gather_tokens(emb, idx)
+        w = jnp.take_along_axis(scores, idx, 1)
+        return sel * w[..., None].astype(sel.dtype), None
+    keep = topk_mask_dyn(scores, capacity_k(cap, T))
+    full = bcast_to(is_full(cap), keep.ndim)
+    keep = keep | full
+    w = jnp.where(full, 1.0, keep * scores)
+    return emb * w[..., None].astype(emb.dtype), keep
 
 
 # ------------------------------ stack runner ---------------------------------
 
-def _run_stack(params, rparams, x, *, cfg, ecfg, mode, period, causal,
+def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
                enc_kv=None, enc_valid=None, remat=False):
     aux0 = RouteAux.zero()
+    static_pol = _pol_static(pol)
+    layered = (not static_pol) and pol.has_layer_dim
+    n_period, P_ = len(period), (cfg.n_layers // len(period))
+    if layered:
+        pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, n_period, P_)
+    else:
+        pol_scan = pol_tail = None
 
-    def apply_block(ent, lp, lrp, x, enc_kv, enc_valid):
+    def apply_block(ent, lp, lrp, lpol, x, enc_kv, enc_valid):
         return block_apply(
-            ent.kind, lp, lrp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+            ent.kind, lp, lrp, x, cfg=cfg, spec=spec,
+            pol=(pol if static_pol else lpol), mode=mode,
             elastic_on=ent.elastic, window=ent.window, causal=causal,
             enc_kv=enc_kv, enc_valid=enc_valid)
 
@@ -173,18 +227,26 @@ def _run_stack(params, rparams, x, *, cfg, ecfg, mode, period, causal,
     ba = ba if (ba and _total(mesh, ba) > 1
                 and x.shape[0] % _total(mesh, ba) == 0) else ()
 
+    from jax.sharding import PartitionSpec as P
+    # per-request (B,) policy leaves shard with the batch; scalars and
+    # size-1 per-layer leaves replicate
+    B0 = x.shape[0]
+    pol_sample = None if static_pol else (pol.for_layer(0) if layered else pol)
+    pol_specs = P() if pol_sample is None else jax.tree.map(
+        lambda v: P(ba) if (getattr(v, "ndim", 0) >= 1
+                            and v.shape[0] == B0) else P(), pol_sample)
+
     def shard_block(f):
         if not ba:
             return f
 
-        def body(lp, lrp, xx, ekv, evd):
-            y, a = f(lp, lrp, xx, ekv, evd)
+        def body(lp, lrp, lpol, xx, ekv, evd):
+            y, a = f(lp, lrp, lpol, xx, ekv, evd)
             return y, jax.tree.map(lambda s: jax.lax.pmean(s, ba), a)
 
-        from jax.sharding import PartitionSpec as P
-        return jax.shard_map(
+        return _SH.shard_map_compat(
             body, mesh=mesh,
-            in_specs=(P(), P(), P(ba, None, None),
+            in_specs=(P(), P(), pol_specs, P(ba, None, None),
                       P() if enc_kv is None else P(ba, None, None),
                       P() if enc_valid is None else P(ba, None)),
             out_specs=(P(ba, None, None), P()),
@@ -203,10 +265,13 @@ def _run_stack(params, rparams, x, *, cfg, ecfg, mode, period, causal,
 
     def body(carry, xs):
         x, aux = carry
-        lps = xs[0]
-        lrps = xs[1] if has_rp else [None] * len(period)
+        lps = xs["p"]
+        lrps = xs["r"] if has_rp else [None] * len(period)
+        lpols = xs.get("pol")
         for j in range(len(period)):
-            x, a = fns[j](lps[j], lrps[j], x, enc_kv, enc_valid)
+            lpol = lpols[j] if lpols is not None else \
+                (None if static_pol else pol)
+            x, a = fns[j](lps[j], lrps[j], lpol, x, enc_kv, enc_valid)
             aux = aux + a
         return (x, aux), None
 
@@ -214,8 +279,12 @@ def _run_stack(params, rparams, x, *, cfg, ecfg, mode, period, causal,
         assert len(params["scan"]) == len(period), (
             f"param stacking period ({len(params['scan'])}) != apply-time "
             f"pattern period ({len(period)}): init and apply must use the "
-            f"same ecfg.layers mode")
-        xs = (params["scan"], rparams["scan"]) if has_rp else (params["scan"],)
+            f"same elastic layers mode")
+        xs = {"p": params["scan"]}
+        if has_rp:
+            xs["r"] = rparams["scan"]
+        if layered:
+            xs["pol"] = pol_scan
         (x, aux), _ = jax.lax.scan(body, (x, aux0), xs,
                                     unroll=flags.unroll())
     else:
@@ -223,7 +292,8 @@ def _run_stack(params, rparams, x, *, cfg, ecfg, mode, period, causal,
     for i, lp in enumerate(params["tail"]):
         ent = period[i % len(period)]
         lrp = rparams["tail"][i] if has_rp else None
-        x, a = fns[i % len(period)](lp, lrp, x, enc_kv, enc_valid)
+        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+        x, a = fns[i % len(period)](lp, lrp, lpol, x, enc_kv, enc_valid)
         aux = aux + a
     return x, aux
 
@@ -241,43 +311,49 @@ def _logits(params, cfg, x):
     return logits
 
 
-def _context(params, rparams, batch, cfg, ecfg, mode, remat=False):
+def _context(params, rparams, batch, cfg, spec, pol, mode, remat=False):
     """Image/encoder context for xattn layers -> (enc_kv, enc_valid, aux)."""
     if cfg.family == "vlm":
         emb = batch["image_embeds"].astype(dtype_of(cfg)) @ params["in_proj"]
-        emb, valid = select_context_tokens(rparams, emb, ecfg, mode) \
-            if ecfg is not None else (emb, None)
+        emb, valid = select_context_tokens(rparams, emb, spec, pol, mode) \
+            if spec is not None else (emb, None)
         return emb, valid, RouteAux.zero()
     if cfg.encoder is not None:
-        ecfg_enc = ecfg
         enc_p = params["encoder"]
         enc_rp = rparams.get("encoder") if (rparams and mode != "base") else None
         x = batch["frames"].astype(dtype_of(cfg)) @ enc_p["in_proj"]
-        period, _, _ = build_pattern(cfg.encoder, ecfg_enc)
-        x, aux = _run_stack(enc_p, enc_rp, x, cfg=cfg.encoder, ecfg=ecfg_enc,
-                            mode=mode, period=period, causal=False, remat=remat)
+        period, _, _ = build_pattern(cfg.encoder, spec)
+        x, aux = _run_stack(enc_p, enc_rp, x, cfg=cfg.encoder, spec=spec,
+                            pol=pol, mode=mode, period=period, causal=False,
+                            remat=remat)
         x = norm_apply(enc_p["final_norm"], x, cfg.encoder.norm)
-        x, valid = select_context_tokens(rparams, x, ecfg, mode) \
-            if ecfg is not None else (x, None)
+        x, valid = select_context_tokens(rparams, x, spec, pol, mode) \
+            if spec is not None else (x, None)
         return x, valid, aux
     return None, None, RouteAux.zero()
 
 
 def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
-            return_hidden: bool = False, remat: bool = False):
-    """Full-sequence forward. Returns (logits | hidden | embeddings, aux)."""
-    period, _, _ = build_pattern(cfg, ecfg)
+            return_hidden: bool = False, remat: bool = False, policy=None):
+    """Full-sequence forward. Returns (logits | hidden | embeddings, aux).
+
+    ``ecfg``: legacy ElasticConfig (static shim) or new ElasticSpec.
+    ``policy``: optional ElasticPolicy; pass it as a jitted-function argument
+    to serve every compute budget from one compilation."""
+    spec, pol = as_spec_policy(ecfg, policy)
+    period, _, _ = build_pattern(cfg, spec)
     if cfg.family == "encoder":
         x = batch["embeds"].astype(dtype_of(cfg)) @ params["in_proj"]
         rp = rparams if mode != "base" else None
-        x, aux = _run_stack(params, rp, x, cfg=cfg, ecfg=ecfg, mode=mode,
-                            period=period, causal=False, remat=remat)
+        x, aux = _run_stack(params, rp, x, cfg=cfg, spec=spec, pol=pol,
+                            mode=mode, period=period, causal=False,
+                            remat=remat)
         return norm_apply(params["final_norm"], x, cfg.norm), aux
-    enc_kv, enc_valid, aux0 = _context(params, rparams, batch, cfg, ecfg,
-                                       mode, remat)
+    enc_kv, enc_valid, aux0 = _context(params, rparams, batch, cfg, spec,
+                                       pol, mode, remat)
     x = _embed(params, cfg, batch["tokens"])
     rp = rparams if mode != "base" else None
-    x, aux = _run_stack(params, rp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+    x, aux = _run_stack(params, rp, x, cfg=cfg, spec=spec, pol=pol, mode=mode,
                         period=period, causal=True, enc_kv=enc_kv,
                         enc_valid=enc_valid, remat=remat)
     aux = aux + aux0
@@ -300,33 +376,47 @@ def cache_init(cfg, batch: int, max_seq: int):
 
 
 def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
-            max_cache_len: int = 0):
+            max_cache_len: int = 0, policy=None):
     """Forward + cache collection. Returns (logits_last (B,V), caches)."""
-    period, P, _ = build_pattern(cfg, ecfg)
-    enc_kv, enc_valid, _ = _context(params, rparams, batch, cfg, ecfg, mode)
+    spec, pol = as_spec_policy(ecfg, policy)
+    period, P, _ = build_pattern(cfg, spec)
+    enc_kv, enc_valid, _ = _context(params, rparams, batch, cfg, spec, pol,
+                                    mode)
     x = _embed(params, cfg, batch["tokens"])
     S = x.shape[1]
     L = max_cache_len or S
     has_rp = rparams is not None and mode != "base"
+    static_pol = _pol_static(pol)
+    layered = (not static_pol) and pol.has_layer_dim
+    if layered:
+        pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, len(period), P)
 
-    def apply_block(ent, lp, lrp, x):
+    def apply_block(ent, lp, lrp, lpol, x):
         return block_apply(
-            ent.kind, lp, lrp, x, cfg=cfg, ecfg=ecfg, mode=mode,
+            ent.kind, lp, lrp, x, cfg=cfg, spec=spec,
+            pol=(pol if static_pol else lpol), mode=mode,
             elastic_on=ent.elastic, window=ent.window, causal=True,
             enc_kv=enc_kv, enc_valid=enc_valid, collect_cache=True,
             max_cache_len=L)
 
     def body(x, xs):
-        lps = xs[0]
-        lrps = xs[1] if has_rp else [None] * len(period)
+        lps = xs["p"]
+        lrps = xs["r"] if has_rp else [None] * len(period)
+        lpols = xs.get("pol")
         ncs = []
         for j, ent in enumerate(period):
-            x, _, nc = apply_block(ent, lps[j], lrps[j], x)
+            lpol = lpols[j] if lpols is not None else \
+                (None if static_pol else pol)
+            x, _, nc = apply_block(ent, lps[j], lrps[j], lpol, x)
             ncs.append(nc)
         return x, ncs
 
     if params["scan"]:
-        xs = (params["scan"], rparams["scan"]) if has_rp else (params["scan"],)
+        xs = {"p": params["scan"]}
+        if has_rp:
+            xs["r"] = rparams["scan"]
+        if layered:
+            xs["pol"] = pol_scan
         x, scan_caches = jax.lax.scan(body, x, xs, unroll=flags.unroll())
     else:
         scan_caches = []
@@ -334,7 +424,8 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
     for i, lp in enumerate(params["tail"]):
         ent = period[i % len(period)]
         lrp = rparams["tail"][i] if has_rp else None
-        x, _, nc = apply_block(ent, lp, lrp, x)
+        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+        x, _, nc = apply_block(ent, lp, lrp, lpol, x)
         tail_caches.append(nc)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = _logits(params, cfg, x[:, -1])
@@ -342,27 +433,40 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
 
 
 def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
-                mode: str = "infer"):
+                mode: str = "infer", policy=None):
     """One decode step. token: (B,1) i32; t: scalar i32 position.
-    Returns (logits (B,V), new caches)."""
-    period, _, _ = build_pattern(cfg, ecfg)
+    Returns (logits (B,V), new caches). ``policy`` is traced: one compiled
+    decode step serves every (mixed-per-request) budget."""
+    spec, pol = as_spec_policy(ecfg, policy)
+    period, P, _ = build_pattern(cfg, spec)
     x = _embed(params, cfg, token)
     has_rp = rparams is not None and mode != "base"
+    static_pol = _pol_static(pol)
+    layered = (not static_pol) and pol.has_layer_dim
+    if layered:
+        pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, len(period), P)
 
     def body(x, xs):
-        lps, lcs = xs[0], xs[-1]
-        lrps = xs[1] if has_rp else [None] * len(period)
+        lps, lcs = xs["p"], xs["c"]
+        lrps = xs["r"] if has_rp else [None] * len(period)
+        lpols = xs.get("pol")
         ncs = []
         for j, ent in enumerate(period):
+            lpol = lpols[j] if lpols is not None else \
+                (None if static_pol else pol)
             x, nc = block_decode(
-                ent.kind, lps[j], lrps[j], x, lcs[j], t, cfg=cfg, ecfg=ecfg,
-                mode=mode, elastic_on=ent.elastic, window=ent.window)
+                ent.kind, lps[j], lrps[j], x, lcs[j], t, cfg=cfg, spec=spec,
+                pol=(pol if static_pol else lpol), mode=mode,
+                elastic_on=ent.elastic, window=ent.window)
             ncs.append(nc)
         return x, ncs
 
     if params["scan"]:
-        xs = ((params["scan"], rparams["scan"], caches["scan"]) if has_rp
-              else (params["scan"], caches["scan"]))
+        xs = {"p": params["scan"], "c": caches["scan"]}
+        if has_rp:
+            xs["r"] = rparams["scan"]
+        if layered:
+            xs["pol"] = pol_scan
         x, new_scan = jax.lax.scan(body, x, xs, unroll=flags.unroll())
     else:
         new_scan = []
@@ -370,8 +474,10 @@ def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
     for i, lp in enumerate(params["tail"]):
         ent = period[i % len(period)]
         lrp = rparams["tail"][i] if has_rp else None
+        lpol = pol_tail[i] if layered else (None if static_pol else pol)
         x, nc = block_decode(ent.kind, lp, lrp, x, caches["tail"][i], t,
-                             cfg=cfg, ecfg=ecfg, mode=mode,
+                             cfg=cfg, spec=spec,
+                             pol=(pol if static_pol else lpol), mode=mode,
                              elastic_on=ent.elastic, window=ent.window)
         new_tail.append(nc)
     x = norm_apply(params["final_norm"], x, cfg.norm)

@@ -15,7 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.routing import RouteAux, topk_mask
+from repro.core.routing import RouteAux, bcast_to, is_full, topk_mask, \
+    topk_mask_dyn
 from repro.models.layers import act_fn, dense_init, dtype_of, is_gated
 from repro.models import flags
 
@@ -54,9 +55,23 @@ def _expert_ffn(p, x_sel, act):
 
 def moe_apply(
     p, x, *, act: str, top_k: int, router_w=None, normalize_to_m: bool = False,
-    capacity_factor: float = 1.25, seq_chunk: int = 2048,
+    capacity_factor: float = 1.25, seq_chunk: int = 2048, top_k_traced=None,
+    token_valid=None, dispatch_frac=None,
 ):
-    """x: (B,S,D) -> (B,S,D), aux. router_w overrides p['router'] (elastic)."""
+    """x: (B,S,D) -> (B,S,D), aux. router_w overrides p['router'] (elastic).
+
+    ``top_k_traced``: optional traced expert count ((), or (B,)). Dispatch
+    buffers are then sized for ``top_k`` (the static maximum — pass E for
+    the any-budget graph) and experts beyond the traced count are masked
+    out, so one compilation serves every expert budget. A traced count
+    >= E forces uniform weight 1 — the exact (lossless) dense module.
+
+    ``token_valid`` (B,S) bars tokens from dispatch (token-routed callers:
+    skipped tokens must not evict kept ones from expert capacity), and
+    ``dispatch_frac`` (traced token capacity) shrinks the per-expert
+    capacity to what the static *gather* path would have used for the same
+    budget — together they make the one-graph masked composition match the
+    gathered per-budget compile exactly in the single-chunk regime."""
     B, S, D = x.shape
     rw = router_w if router_w is not None else p["router"]
     E = rw.shape[-1]
@@ -70,20 +85,45 @@ def moe_apply(
     if s_pad != S:
         x = jnp.pad(x, [(0, 0), (0, s_pad - S), (0, 0)])
     valid = (jnp.arange(s_pad) < S)
+    tv = None
+    if token_valid is not None:
+        tv = token_valid if s_pad == S else jnp.pad(
+            token_valid, [(0, 0), (0, s_pad - S)])
     cap = int(math.ceil(k * chunk / E * capacity_factor))
     cap = min(chunk, max(4, -(-cap // 4) * 4))
 
-    def one_chunk(xc, vc):
+    def one_chunk(xc, vc, tvc):
         s = xc.shape[1]
         logits = xc.astype(jnp.float32) @ rw                  # (B,s,E)
         probs = jax.nn.softmax(logits, axis=-1)
         w = probs * E if normalize_to_m else probs
-        mask = topk_mask(w, k) & vc[None, :, None]
+        cap_eff = None
+        kept = chunk if dispatch_frac is None else jnp.clip(
+            jnp.ceil(dispatch_frac * chunk - 1e-9), 1, chunk)
+        if top_k_traced is None:
+            mask = topk_mask(w, k) & vc[None, :, None]
+            k_for_cap = k
+        else:
+            kt = jnp.clip(top_k_traced, 1, E)
+            full = bcast_to(is_full(top_k_traced, E), w.ndim)
+            w = jnp.where(full, 1.0, w)
+            mask = topk_mask_dyn(w, kt) & vc[None, :, None]
+            k_for_cap = kt
+        if tvc is not None:
+            mask = mask & tvc[:, :, None]
+        if top_k_traced is not None or dispatch_frac is not None:
+            # per-expert capacity the static path would have compiled for
+            # this budget (buffers stay sized for the static maximum `cap`)
+            ce = jnp.ceil(k_for_cap * kept / E * capacity_factor)
+            cap_eff = jnp.minimum(kept,
+                                  jnp.maximum(4, jnp.ceil(ce / 4) * 4))
         red_frac = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))
         load = E * jnp.sum(red_frac * jnp.mean(probs, axis=(0, 1)))
         sc = jnp.where(mask, w, -jnp.inf)                     # (B,s,E)
         vals, idx = jax.lax.top_k(sc.transpose(0, 2, 1), cap)  # (B,E,C)
         keep = jnp.isfinite(vals)
+        if cap_eff is not None:
+            keep &= jnp.arange(cap)[None, None, :] < bcast_to(cap_eff, 3)
         # dispatch: token gather into (B,E,C,D) buffers (UNweighted)
         x_sel = jnp.take_along_axis(xc[:, None], idx[..., None], axis=2)
         y_buf = _expert_ffn(p, x_sel, act)                    # (B,E,C,D)
@@ -111,9 +151,15 @@ def moe_apply(
 
     xs = x.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
     vs = valid.reshape(n_chunks, chunk)
-    ys, loads = jax.lax.scan(
-        lambda c, xv: (c, one_chunk(*xv)), None, (xs, vs),
-        unroll=flags.unroll())[1]
+    if tv is not None:
+        tvs = tv.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+        ys, loads = jax.lax.scan(
+            lambda c, xv: (c, one_chunk(*xv)), None, (xs, vs, tvs),
+            unroll=flags.unroll())[1]
+    else:
+        ys, loads = jax.lax.scan(
+            lambda c, xv: (c, one_chunk(xv[0], xv[1], None)), None, (xs, vs),
+            unroll=flags.unroll())[1]
     y = ys.transpose(1, 0, 2, 3).reshape(B, s_pad, D)[:, :S]
     if "shared" in p:
         y = y + _dense_ffn(p["shared"], x_orig, act)
@@ -131,9 +177,13 @@ def _dense_ffn(p, x, act):
 
 
 def moe_decode(p, x, *, act: str, top_k: int, router_w=None,
-               normalize_to_m: bool = False):
+               normalize_to_m: bool = False, top_k_traced=None):
     """Decode path (S==1): gather only the selected experts' weights so HBM
-    traffic ∝ top-k experts (memory-roofline critical at 314B scale)."""
+    traffic ∝ top-k experts (memory-roofline critical at 314B scale).
+
+    With ``top_k_traced`` the gather covers the static ``top_k`` maximum and
+    experts ranked beyond the traced count get weight 0 (>= E: all weight 1,
+    the exact dense module) — variable expert budgets on one graph."""
     B, S, D = x.shape
     rw = router_w if router_w is not None else p["router"]
     E = rw.shape[-1]
@@ -142,6 +192,11 @@ def moe_decode(p, x, *, act: str, top_k: int, router_w=None,
     probs = jax.nn.softmax(logits, axis=-1)
     w = probs * E if normalize_to_m else probs
     vals, idx = jax.lax.top_k(w[:, 0], k)                     # (B,k)
+    if top_k_traced is not None:
+        kt = jnp.clip(top_k_traced, 1, E)
+        sel = jnp.arange(k)[None, :] < bcast_to(kt, 2)        # (B,k)
+        full = bcast_to(is_full(top_k_traced, E), 2)
+        vals = jnp.where(full, 1.0, jnp.where(sel, vals, 0.0))
     wi_sel = jnp.take(p["wi"], idx, axis=0)                   # (B,k,D,Fe)
     wo_sel = jnp.take(p["wo"], idx, axis=0)
     h = jnp.einsum("bsd,bkdf->bkf", x, wi_sel)

@@ -24,6 +24,31 @@ def batch_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def shard_map_compat(body, *, mesh, in_specs, out_specs, axis_names=None,
+                     check_vma=False):
+    """Version-compatible shard_map: newer JAX exposes ``jax.shard_map``
+    (axis_names/check_vma kwargs); 0.4.x has only
+    ``jax.experimental.shard_map.shard_map`` (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=check_vma)
+
+
+def abstract_mesh(shape, axes):
+    """Version-compatible ``jax.sharding.AbstractMesh`` constructor: newer
+    JAX takes ``(axis_sizes, axis_names)``, older releases a single
+    ``((name, size), ...)`` shape tuple. Lets tests exercise production
+    (16, 16) axis sizes without 256 devices."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def active_mesh() -> Optional[Mesh]:
     """The mesh installed by `with mesh:` at trace time (None outside)."""
     from jax._src.mesh import thread_resources

@@ -1,10 +1,14 @@
-"""Batched serving loop with elastic (threshold-routed) decode.
+"""Batched serving loop with elastic (threshold-routed) decode and
+per-request compute budgets.
 
 prefill_fn / decode_fn are jitted once per (batch, prompt_len) bucket; the
-engine pads requests into fixed buckets so recompilation is bounded. Decode
-runs the ElastiFormer threshold path (§B.1): per token, each router decides
-with theta=0.5 whether the token enters each module — variable inference
-compute on a static graph.
+engine pads requests into fixed buckets so recompilation is bounded. The
+runtime ``ElasticPolicy`` is passed as a *traced argument*, so budgets never
+recompile: a batch may mix requests at different budgets (policy leaves are
+(B,) arrays; all routing is row-independent) and a request at budget 1.0
+runs the exact frozen teacher. Decode runs the ElastiFormer threshold path
+(§B.1): per token, each router decides with theta whether the token enters
+each module — variable inference compute on a static graph.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import ElasticPolicy, as_spec_policy, solve_budget
 from repro.models import cache_init, decode_step, prefill
 
 
@@ -23,30 +28,75 @@ from repro.models import cache_init, decode_step, prefill
 class GenRequest:
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 32
+    budget: Optional[float] = None   # compute budget in (0, 1]; None = engine default
 
 
 class ServingEngine:
-    """Greedy batched generation over a frozen base model + routers."""
+    """Greedy batched generation over a frozen base model + routers.
 
-    def __init__(self, params, router_params, cfg, ecfg=None,
+    ``elastic``: legacy ElasticConfig or new ElasticSpec. Budgets are
+    resolved to per-request policies by the roofline budget solver and
+    batched into (B,)-leaf ElasticPolicy pytrees.
+    """
+
+    def __init__(self, params, router_params, cfg, elastic=None,
                  mode: str = "infer", batch_size: int = 8,
-                 max_seq: int = 256):
+                 max_seq: int = 256, default_budget: Optional[float] = None,
+                 theta: float = 0.5):
         self.params, self.rp = params, router_params
-        self.cfg, self.ecfg, self.mode = cfg, ecfg, mode
+        self.cfg, self.mode = cfg, mode
+        # base policy = the elastic config's own knobs (threshold routing
+        # with its head/expert top-k); explicit budgets go through the
+        # roofline solver instead. default_budget=None keeps legacy behavior.
+        self.spec, self._base_policy = as_spec_policy(elastic)
+        if self._base_policy is not None:
+            self._base_policy = self._base_policy.replace(theta=theta)
         self.B, self.max_seq = batch_size, max_seq
+        self.default_budget, self.theta = default_budget, theta
+        self._policy_cache: dict = {}
         self._prefill = jax.jit(partial(
-            prefill, cfg=cfg, ecfg=ecfg, mode=mode, max_cache_len=max_seq))
+            prefill, cfg=cfg, ecfg=self.spec, mode=mode,
+            max_cache_len=max_seq))
         self._decode = jax.jit(partial(
-            decode_step, cfg=cfg, ecfg=ecfg, mode=mode))
+            decode_step, cfg=cfg, ecfg=self.spec, mode=mode))
 
+    # ---- budgets -> batched policy ----
+    def _policy_for(self, budget: Optional[float]) -> ElasticPolicy:
+        if budget is None:
+            return self._base_policy
+        key = round(float(budget), 6)
+        if key not in self._policy_cache:
+            self._policy_cache[key] = solve_budget(
+                self.cfg, self.spec, key, theta=self.theta, static=True)
+        return self._policy_cache[key]
+
+    def _batch_policy(self, reqs, budget: Optional[float]):
+        if self.spec is None or self.mode == "base":
+            return None
+        budgets = [(budget if budget is not None else
+                    (r.budget if r.budget is not None else
+                     self.default_budget)) for r in reqs]
+        budgets += [None] * (self.B - len(reqs))         # padding rows
+        return ElasticPolicy.stack([self._policy_for(b) for b in budgets])
+
+    def compile_counts(self) -> dict:
+        """Jit-cache sizes — budgets must NOT add entries (asserted by
+        tests and benchmarks/fig5)."""
+        return {"prefill": self._prefill._cache_size(),
+                "decode": self._decode._cache_size()}
+
+    # ---- generation ----
     def generate(self, requests: List[GenRequest],
-                 extra_inputs: Optional[dict] = None) -> List[np.ndarray]:
+                 extra_inputs: Optional[dict] = None,
+                 budget: Optional[float] = None) -> List[np.ndarray]:
+        """``budget`` overrides every request's budget for this call."""
         out: List[np.ndarray] = []
         for i in range(0, len(requests), self.B):
-            out += self._generate_batch(requests[i:i + self.B], extra_inputs)
+            out += self._generate_batch(requests[i:i + self.B], extra_inputs,
+                                        budget)
         return out
 
-    def _generate_batch(self, reqs, extra_inputs):
+    def _generate_batch(self, reqs, extra_inputs, budget):
         B = self.B
         plen = max(len(r.prompt) for r in reqs)
         toks = np.zeros((B, plen), np.int32)
@@ -55,13 +105,15 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(toks)}
         if extra_inputs:
             batch.update(extra_inputs)
-        logits, caches = self._prefill(self.params, self.rp, batch)
+        policy = self._batch_policy(reqs, budget)
+        logits, caches = self._prefill(self.params, self.rp, batch,
+                                       policy=policy)
         max_new = max(r.max_new_tokens for r in reqs)
         gen = np.zeros((B, max_new), np.int32)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         for t in range(max_new):
             gen[:, t] = np.asarray(tok)[:, 0]
             logits, caches = self._decode(self.params, self.rp, tok, caches,
-                                          jnp.int32(plen + t))
+                                          jnp.int32(plen + t), policy=policy)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         return [gen[j, :reqs[j].max_new_tokens] for j in range(len(reqs))]

@@ -29,6 +29,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.distill import (cosine_distance, distill_loss,
                                 topk_kl_from_gathered)
+from repro.core.policy import as_spec_policy
 from repro.models import forward
 from repro.optim import (AdamWState, EFState, adamw_init, adamw_update,
                          compress_grads, ef_init)
@@ -160,33 +161,40 @@ def lm_loss(logits, tokens):
 
 def make_loss_fn(cfg, ecfg, *, mesh: Optional[Mesh] = None, remat: bool = False,
                  chunked: bool = True, seq_chunk: int = 512):
+    """``ecfg``: legacy ElasticConfig or new ElasticSpec. The returned
+    loss_fn takes an optional ``policy`` (ElasticPolicy pytree) — pass it as
+    a traced argument to anneal capacities during distillation with zero
+    re-jits; omitted, the spec's default (static) policy applies."""
     use_hidden = chunked and cfg.family != "encoder" and cfg.vocab_size > 0
+    spec, default_pol = as_spec_policy(ecfg)
 
-    def loss_fn(router_params, params, batch):
+    def loss_fn(router_params, params, batch, policy=None):
+        pol = policy if policy is not None else default_pol
         if cfg.family == "encoder":
-            t_out, _ = forward(params, None, batch, cfg, ecfg, mode="base")
-            s_out, aux = forward(params, router_params, batch, cfg, ecfg,
-                                 mode="train", remat=remat)
+            t_out, _ = forward(params, None, batch, cfg, spec, mode="base")
+            s_out, aux = forward(params, router_params, batch, cfg, spec,
+                                 mode="train", remat=remat, policy=pol)
             dist = cosine_distance(s_out, jax.lax.stop_gradient(t_out))
         elif use_hidden:
-            h_t, _ = forward(params, None, batch, cfg, ecfg, mode="base",
+            h_t, _ = forward(params, None, batch, cfg, spec, mode="base",
                              return_hidden=True)
-            h_s, aux = forward(params, router_params, batch, cfg, ecfg,
-                               mode="train", return_hidden=True, remat=remat)
-            direction = "rev" if "rev" in ecfg.distill_loss else "fwd"
+            h_s, aux = forward(params, router_params, batch, cfg, spec,
+                               mode="train", return_hidden=True, remat=remat,
+                               policy=pol)
+            direction = "rev" if "rev" in spec.distill_loss else "fwd"
             dist = chunked_topk_kl(
                 h_s, jax.lax.stop_gradient(h_t), _head_matrix(params, cfg),
-                k=ecfg.distill_topk, vocab=cfg.vocab_size, mesh=mesh,
+                k=spec.distill_topk, vocab=cfg.vocab_size, mesh=mesh,
                 seq_chunk=seq_chunk, direction=direction,
-                temp=ecfg.distill_temp,
-                full=ecfg.distill_loss in ("fwd_kl", "rev_kl"))
+                temp=spec.distill_temp,
+                full=spec.distill_loss in ("fwd_kl", "rev_kl"))
         else:
-            t_out, _ = forward(params, None, batch, cfg, ecfg, mode="base")
-            s_out, aux = forward(params, router_params, batch, cfg, ecfg,
-                                 mode="train", remat=remat)
-            dist = distill_loss(s_out, jax.lax.stop_gradient(t_out), ecfg)
-        loss = (dist + ecfg.lambda_load * aux.load
-                + ecfg.lambda_topk * aux.topk)
+            t_out, _ = forward(params, None, batch, cfg, spec, mode="base")
+            s_out, aux = forward(params, router_params, batch, cfg, spec,
+                                 mode="train", remat=remat, policy=pol)
+            dist = distill_loss(s_out, jax.lax.stop_gradient(t_out), spec)
+        loss = (dist + spec.lambda_load * aux.load
+                + spec.lambda_topk * aux.topk)
         return loss, {"loss": loss, "distill": dist, "aux_load": aux.load,
                       "aux_topk": aux.topk, "sel_rate": aux.sel_rate}
     return loss_fn
@@ -197,9 +205,10 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
                     remat: bool = False, chunked: bool = True,
                     compress_axis: Optional[str] = None,
                     microbatch: Optional[int] = None):
-    """Returns train_step(state, params, batch) -> (state, metrics).
-    `params` (frozen base model) is passed per-call so it can live donated/
-    sharded outside the state.
+    """Returns train_step(state, params, batch, policy=None) -> (state,
+    metrics). `params` (frozen base model) is passed per-call so it can live
+    donated/sharded outside the state. `policy` (ElasticPolicy) is likewise
+    per-call and traced: capacity-annealing schedules re-use one compile.
 
     microbatch=M: gradient accumulation over M sequential slices of the
     global batch (lax.scan). Activation live-set scales 1/M; the router
@@ -208,9 +217,9 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
     loss_fn = make_loss_fn(cfg, ecfg, mesh=mesh, remat=remat, chunked=chunked)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def grads_of(rp, params, batch):
+    def grads_of(rp, params, batch, policy):
         if not microbatch or microbatch <= 1:
-            (_, metrics), grads = vg(rp, params, batch)
+            (_, metrics), grads = vg(rp, params, batch, policy)
             return grads, metrics
 
         def slice_mb(t, i):
@@ -220,7 +229,9 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
         def body(carry, i):
             g_acc, m_acc = carry
             mb = {k: slice_mb(v, i) for k, v in batch.items()}
-            (_, metrics), g = vg(rp, params, mb)
+            # NOTE: per-request (B,) policy leaves are not sliced here —
+            # use scalar/per-layer policies with gradient accumulation
+            (_, metrics), g = vg(rp, params, mb, policy)
             g_acc = jax.tree.map(jnp.add, g_acc, g)
             m_acc = jax.tree.map(jnp.add, m_acc, metrics)
             return (g_acc, m_acc), None
@@ -236,8 +247,8 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
         return (jax.tree.map(lambda x: x * inv, g),
                 {k: v * inv for k, v in m.items()})
 
-    def train_step(state: TrainState, params, batch):
-        grads, metrics = grads_of(state.router_params, params, batch)
+    def train_step(state: TrainState, params, batch, policy=None):
+        grads, metrics = grads_of(state.router_params, params, batch, policy)
         ef = state.ef
         if ef is not None:
             grads, ef = compress_grads(grads, ef, axis_name=compress_axis)

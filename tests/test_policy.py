@@ -1,0 +1,200 @@
+"""ElasticSpec/ElasticPolicy API: one compiled model, many budgets.
+
+Covers the PR-1 acceptance properties:
+  * the policy pytree round-trips through jax.jit without retrace;
+  * traced-capacity routing == the old static-capacity routing per budget;
+  * budget 1.0 reproduces the frozen teacher exactly (losslessness), even
+    with trained LoRA adapters (they gate off at full budget);
+  * the legacy ElasticConfig shim maps to identical spec/policy values;
+  * ServingEngine honors per-request budgets, and mixed-budget batches
+    reproduce per-budget separate runs on one compiled decode step.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ElasticConfig, get_config
+from repro.core.policy import (FULL_TOPK, ElasticPolicy, ElasticSpec,
+                               as_spec_policy, capacity_anneal,
+                               policy_from_config, solve_budget,
+                               spec_from_config, _active_fraction)
+from repro.models import forward, model_init, router_init
+from repro.training import GenRequest, ServingEngine
+from tests.conftest import f32
+
+N_EXPERTS = 4
+
+
+def _setup(key, **ecfg_kw):
+    cfg = f32(get_config("toy-lm", "smoke"))
+    ecfg = ElasticConfig(**ecfg_kw)
+    params = model_init(key, cfg, ecfg)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+    return cfg, ecfg, params, rp
+
+
+def _batch(cfg, b=2, s=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s), dtype=np.int32))}
+
+
+FULL_KW = dict(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+               mha_head_topk=2, mlp_n_experts=N_EXPERTS, mlp_expert_topk=2,
+               lora_rank=1)
+
+
+def test_shim_maps_config_to_identical_spec_policy_values():
+    ecfg = ElasticConfig(**FULL_KW, layers="even", distill_loss="rev_kl")
+    spec = spec_from_config(ecfg)
+    pol = policy_from_config(ecfg)
+    assert spec == ElasticSpec(
+        mlp_token_routed=True, mha_token_routed=True, mha_head_routed=True,
+        mlp_n_experts=N_EXPERTS, expert_routed=True, vlm_routed=False,
+        lora_rank=1, layers="even", distill_loss="rev_kl")
+    assert pol.mlp_token_capacity == 0.5
+    assert pol.mha_token_capacity == 0.5
+    assert pol.mha_head_topk == 2
+    assert pol.mlp_expert_topk == 2
+    assert (pol.vlm_token_capacity, pol.theta, pol.student) == (1.0, 0.5, 1.0)
+    # disabled routers map to "all" sentinels
+    off = spec_from_config(ElasticConfig(mlp_token_capacity=None,
+                                         mha_head_topk=None))
+    assert not off.mha_token_routed and not off.mha_head_routed
+    assert policy_from_config(ElasticConfig(mha_head_topk=None)
+                              ).mha_head_topk == FULL_TOPK
+    # the coercion entry point returns the same pair for legacy configs
+    s2, p2 = as_spec_policy(ecfg)
+    assert s2 == spec and p2 == pol
+
+
+def test_policy_jit_roundtrip_no_retrace(key):
+    cfg, ecfg, params, rp = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def fwd(rp, batch, policy):
+        return forward(params, rp, batch, cfg, spec, mode="train",
+                       policy=policy)[0]
+
+    outs = {}
+    for b in (0.25, 0.5, 0.75, 1.0):
+        pol = ElasticPolicy.uniform(b, n_heads=cfg.n_heads,
+                                    n_experts=N_EXPERTS)
+        outs[b] = fwd(rp, batch, pol)
+    assert fwd._cache_size() == 1, "policy pytree must not retrace"
+    # and the budgets genuinely change the computation
+    assert float(jnp.abs(outs[0.25] - outs[1.0]).max()) > 1e-3
+
+
+@pytest.mark.parametrize("budget", [0.25, 0.5, 0.75])
+def test_traced_capacity_equals_static_routing(key, budget):
+    """One traced graph == the per-budget static (gather) compiles."""
+    cfg, ecfg, params, rp = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    batch = _batch(cfg)
+    ec = dataclasses.replace(
+        ecfg, mlp_token_capacity=budget, mha_token_capacity=budget,
+        mha_head_topk=max(1, round(budget * cfg.n_heads)),
+        mlp_expert_topk=max(1, round(budget * N_EXPERTS)))
+    l_static, _ = forward(params, rp, batch, cfg, ec, mode="train")
+    pol = jax.tree.map(jnp.asarray, policy_from_config(ec))
+    l_traced, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                          policy=pol)
+    np.testing.assert_allclose(np.asarray(l_static), np.asarray(l_traced),
+                               atol=1e-4)
+    # inference threshold path too
+    i_static, _ = forward(params, rp, batch, cfg, ec, mode="infer")
+    i_traced, _ = forward(params, rp, batch, cfg, spec, mode="infer",
+                          policy=pol)
+    np.testing.assert_allclose(np.asarray(i_static), np.asarray(i_traced),
+                               atol=1e-4)
+
+
+def test_budget_one_reproduces_frozen_teacher(key):
+    cfg, ecfg, params, rp = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    # make the LoRA adapters non-trivial: losslessness must gate them off
+    flat, td = jax.tree_util.tree_flatten_with_path(rp)
+    flat = [l + 0.1 if "'lora'" in jax.tree_util.keystr(p) else l
+            for p, l in flat]
+    rp = jax.tree_util.tree_unflatten(td, flat)
+    # sanity: the perturbed adapters DO change sub-1 budgets
+    batch0 = _batch(cfg)
+    t0, _ = forward(params, None, batch0, cfg, None, mode="base")
+    p08 = ElasticPolicy.uniform(0.8, n_heads=cfg.n_heads, n_experts=N_EXPERTS)
+    s08, _ = forward(params, rp, batch0, cfg, spec, mode="train", policy=p08)
+    assert float(jnp.abs(s08 - t0).max()) > 1e-3
+    batch = _batch(cfg)
+    teacher, _ = forward(params, None, batch, cfg, None, mode="base")
+    for pol in (ElasticPolicy.uniform(1.0, n_heads=cfg.n_heads,
+                                      n_experts=N_EXPERTS),
+                ElasticPolicy.teacher(),       # student flag off
+                solve_budget(cfg, spec, 1.0)):
+        for mode in ("train", "infer"):
+            out, _ = forward(params, rp, batch, cfg, spec, mode=mode,
+                             policy=pol)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(teacher),
+                                       atol=1e-5)
+
+
+def test_per_layer_policy_schedule(key):
+    cfg, ecfg, params, rp = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    batch = _batch(cfg)
+    L = cfg.n_layers
+    caps = jnp.linspace(0.4, 1.0, L)[:, None]          # (L, 1) schedule
+    pol = ElasticPolicy.uniform(1.0, n_heads=cfg.n_heads,
+                                n_experts=N_EXPERTS).replace(
+        mlp_token_capacity=caps, mha_token_capacity=caps)
+    assert pol.has_layer_dim
+    assert float(pol.for_layer(0).mlp_token_capacity[0]) == pytest.approx(0.4)
+    out, aux = forward(params, rp, batch, cfg, spec, mode="train", policy=pol)
+    assert out.shape[-1] == cfg.padded_vocab
+    assert 0.4 < float(aux.sel_rate) <= 1.0
+
+
+def test_budget_solver_monotone_and_lossless_at_one():
+    cfg = f32(get_config("toy-lm", "smoke"))
+    spec = ElasticSpec(mlp_token_routed=True, mha_token_routed=True,
+                       mha_head_routed=True, mlp_n_experts=N_EXPERTS,
+                       expert_routed=True)
+    fr = [_active_fraction(cfg, spec, s, ctx=1024)
+          for s in (0.2, 0.5, 0.8, 1.0)]
+    assert fr == sorted(fr) and fr[-1] == pytest.approx(1.0)
+    caps = [float(solve_budget(cfg, spec, b).mlp_token_capacity)
+            for b in (0.4, 0.6, 0.8)]
+    assert caps == sorted(caps)
+    full = solve_budget(cfg, spec, 1.0)
+    assert float(full.mlp_token_capacity) == 1.0
+    assert float(full.mha_head_topk) >= cfg.n_heads
+    sched = capacity_anneal(1.0, 0.5, 10)
+    assert sched(0) == pytest.approx(1.0)
+    assert sched(10) == pytest.approx(0.5)
+    assert sched(25) == pytest.approx(0.5)
+
+
+def test_serving_mixed_budget_batch_matches_separate_runs(key):
+    cfg, ecfg, params, rp = _setup(key, **FULL_KW)
+    engine = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                           batch_size=4, max_seq=24)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+               for _ in range(4)]
+    budgets = [0.4, 0.7, 1.0, None]
+    mixed = engine.generate([GenRequest(p, 4, budget=b)
+                             for p, b in zip(prompts, budgets)])
+    for p, b, got in zip(prompts, budgets, mixed):
+        sep = engine.generate([GenRequest(p, 4, budget=b)])[0]
+        np.testing.assert_array_equal(got, sep)
+    # budgets ride the traced policy: exactly one compile each
+    assert engine.compile_counts() == {"prefill": 1, "decode": 1}
+    # budget 1.0 rows emit the frozen teacher's tokens
+    teacher = ServingEngine(params, None, cfg, None, mode="base",
+                            batch_size=4, max_seq=24)
+    t_out = teacher.generate([GenRequest(prompts[2], 4)])[0]
+    np.testing.assert_array_equal(mixed[2], t_out)

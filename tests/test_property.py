@@ -1,5 +1,9 @@
 """Hypothesis property tests on system invariants (deliverable c)."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[dev])")
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

@@ -1,18 +1,18 @@
 """Sharding rule table: divisibility fitting, cache specs, input specs.
 
-Uses AbstractMesh so the production (16,16) axis sizes are exercised
-without 256 devices."""
+Uses AbstractMesh (via the version-compatible ``abstract_mesh`` helper) so
+the production (16,16) axis sizes are exercised without 256 devices."""
 import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.runtime.sharding import (_fit_spec, batch_spec, cache_specs_tree,
-                                    param_specs)
+from repro.runtime.sharding import (_fit_spec, abstract_mesh, batch_spec,
+                                    cache_specs_tree, param_specs)
 
-MESH = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+POD_MESH = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_fit_spec_keeps_divisible():
