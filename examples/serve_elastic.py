@@ -75,6 +75,24 @@ def main():
     print(f"compiles after the budget mix: {el_eng.compile_counts()} "
           f"(budgets never recompile)")
 
+    # continuous batching: the engine's real surface is a request lifecycle —
+    # submit returns a handle, handle.tokens() streams while OTHER requests
+    # decode in their own slots of the same compiled step, cancel frees a
+    # slot mid-flight (see docs/serving.md).
+    print("\n== continuous batching (submit / stream / cancel)")
+    h_stream = el_eng.submit(GenRequest(prompts[0], 12, budget=0.8))
+    h_bg = el_eng.submit(GenRequest(prompts[1], 12, budget=0.4))
+    h_cut = el_eng.submit(GenRequest(prompts[2], 40, budget=0.5))
+    first6 = [tok for tok, _ in zip(h_stream.tokens(), range(6))]
+    print(f"  streamed 6 tokens from req0 while req1/req2 decode: {first6}")
+    el_eng.cancel(h_cut)
+    print(f"  cancelled req2 mid-flight after {len(h_cut.output)} tokens "
+          f"(status={h_cut.status}, slot freed)")
+    h_stream.result(), h_bg.result()
+    print(f"  slot occupancy {el_eng.occupancy:.0%}; compiles "
+          f"{el_eng.compile_counts()} (admissions never recompile; only new "
+          f"prompt lengths add prefill buckets)")
+
 
 if __name__ == "__main__":
     main()

@@ -52,6 +52,7 @@ class ModelConfig:
     act: str = "swiglu"             # swiglu | geglu | gelu
     qkv_bias: bool = False
     tie_embeddings: bool = False
+    eos_id: Optional[int] = None    # stop token; serving default for requests
     rope_theta: float = 10_000.0
     max_seq_len: int = 131_072
     # attention locality: per-pattern-position window size; 0 = global.

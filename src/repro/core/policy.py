@@ -129,6 +129,25 @@ class ElasticPolicy:
             lambda *ls: jnp.stack([jnp.asarray(l, jnp.float32) for l in ls]),
             *policies)
 
+    # ---- per-request (B,) slot rows ----
+    def broadcast_rows(self, batch: int) -> "ElasticPolicy":
+        """Materialize every leaf as a (B,) float32 array — the live slot
+        policy a continuous-batching engine splices admissions into."""
+        return jax.tree.map(
+            lambda v: jnp.broadcast_to(
+                jnp.asarray(v, jnp.float32), (batch,)) + 0.0, self)
+
+    def set_row(self, i, row: "ElasticPolicy") -> "ElasticPolicy":
+        """Splice ``row`` (scalar leaves) into batch row ``i`` of this
+        (B,)-leaf policy. ``i`` may be traced (dynamic_update_index), so
+        admitting a request into a serving slot NEVER recompiles: the row
+        update is part of the one compiled admission graph."""
+        def upd(live, r):
+            live = jnp.asarray(live, jnp.float32)
+            return jax.lax.dynamic_update_index_in_dim(
+                live, jnp.asarray(r, jnp.float32), i, axis=0)
+        return jax.tree.map(upd, self, row)
+
     # ---- per-layer schedules ----
     @property
     def has_layer_dim(self) -> bool:

@@ -1,12 +1,17 @@
-"""Batched serving driver: load (or init) a model + trained routers, run the
-elastic threshold-routed decode over a stream of requests.
+"""Serving driver: load (or init) a model + trained routers, run the elastic
+threshold-routed decode over a stream of requests.
 
 Per-request compute budgets ride on the traced ElasticPolicy: one compiled
 decode step serves every budget, including mixed budgets inside one batch.
 
-python -m repro.launch.serve --arch toy-lm --requests 16 --max-new 32
-python -m repro.launch.serve --arch toy-lm --budget 0.5
-python -m repro.launch.serve --arch toy-lm --budget 0.25,0.5,1.0   # round-robin
+Closed loop (submit everything, drain):
+    python -m repro.launch.serve --arch toy-lm --requests 16 --max-new 32
+    python -m repro.launch.serve --arch toy-lm --budget 0.25,0.5,1.0
+
+Open loop (continuous batching under Poisson arrivals; reports throughput,
+per-request latency, and slot occupancy):
+    python -m repro.launch.serve --arch toy-lm --arrival-rate 8 \
+        --requests 32 --budget 0.4,0.8,1.0
 """
 from __future__ import annotations
 
@@ -28,10 +33,43 @@ def _budget_list(s: str):
         raise argparse.ArgumentTypeError(
             f"--budget expects a float or comma list of floats, got {s!r}")
     for v in vals:
-        if not 0.0 < v:
+        if not 0.0 < v <= 1.0:
             raise argparse.ArgumentTypeError(
-                f"budgets must be positive fractions, got {v}")
+                f"budgets must be fractions in (0, 1], got {v}")
     return vals
+
+
+def open_loop(engine, requests, rate: float, seed: int = 0, arrive=None):
+    """Submit ``requests`` at Poisson arrival times (``rate`` req/s, or an
+    explicit ``arrive`` schedule in seconds) while continuously stepping the
+    engine; returns (handles, elapsed_seconds). Each handle's ``t_submit``
+    is pinned to its *scheduled* arrival, so ``latency`` measures
+    arrival -> last token (queueing included) — the same baseline a
+    lockstep discipline is judged by."""
+    if arrive is None:
+        rng = np.random.default_rng(seed)
+        arrive = np.cumsum(rng.exponential(1.0 / rate, len(requests)))
+    handles = [None] * len(requests)
+    i, t0 = 0, time.perf_counter()
+    while i < len(requests) or engine.has_work:
+        now = time.perf_counter() - t0
+        while i < len(requests) and arrive[i] <= now:
+            handles[i] = engine.submit(requests[i])
+            handles[i].t_submit = t0 + arrive[i]
+            i += 1
+        if engine.step() == 0 and i < len(requests):
+            # idle: sleep until the next arrival
+            wait = arrive[i] - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(min(wait, 0.05))
+    return handles, time.perf_counter() - t0
+
+
+def latency_stats(handles):
+    lat = np.asarray([h.latency for h in handles if h.latency is not None])
+    if lat.size == 0:
+        return 0.0, 0.0
+    return float(lat.mean() * 1e3), float(np.percentile(lat, 95) * 1e3)
 
 
 def main():
@@ -47,6 +85,19 @@ def main():
                     help="per-request compute budget(s) in (0,1]: a float, "
                          "or a comma list assigned round-robin (mixed "
                          "budgets batch together on one compiled step)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop mode: Poisson request arrivals at this "
+                         "rate (req/s); reports per-request latency and "
+                         "slot occupancy on top of throughput")
+    ap.add_argument("--flop-budget", type=float, default=None,
+                    help="per-step FLOP admission budget in full-budget-row "
+                         "units (default: --batch, i.e. slot-limited)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the top-k logits (0 = all)")
+    ap.add_argument("--eos", type=int, default=None,
+                    help="stop token id (default: config eos_id)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -56,22 +107,41 @@ def main():
     rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
     engine = ServingEngine(params, rp, cfg, ecfg, mode=args.mode,
                            batch_size=args.batch,
-                           max_seq=args.prompt_len + args.max_new)
+                           max_seq=args.prompt_len + args.max_new,
+                           eos_id=args.eos,
+                           step_flop_budget=args.flop_budget)
     budgets = args.budget
     rng = np.random.default_rng(0)
     reqs = [GenRequest(rng.integers(0, cfg.vocab_size, args.prompt_len,
                                     dtype=np.int32), args.max_new,
-                       budget=(budgets[i % len(budgets)] if budgets else None))
+                       budget=(budgets[i % len(budgets)] if budgets else None),
+                       temperature=args.temperature, top_k=args.top_k,
+                       seed=i)
             for i in range(args.requests)]
-    t0 = time.perf_counter()
-    outs = engine.generate(reqs)
-    dt = time.perf_counter() - t0
-    n_tok = sum(len(o) for o in outs)
-    print(f"served {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s, mode={args.mode}, "
-          f"budgets={budgets or 'config-default'})")
-    print(f"compiles: {engine.compile_counts()} (budgets never recompile)")
-    print("sample output:", outs[0][:16])
+
+    if args.arrival_rate is not None:
+        # warm the compile caches outside the timed window
+        engine.generate([reqs[0]])
+        engine.scheduler.reset_stats()
+        handles, dt = open_loop(engine, reqs, args.arrival_rate)
+        n_tok = sum(len(h.output) for h in handles)
+        mean_ms, p95_ms = latency_stats(handles)
+        print(f"open loop: {len(reqs)} requests @ {args.arrival_rate} req/s, "
+              f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        print(f"latency: mean {mean_ms:.0f} ms, p95 {p95_ms:.0f} ms; "
+              f"slot occupancy {engine.occupancy:.0%} "
+              f"(budgets={budgets or 'config-default'})")
+    else:
+        t0 = time.perf_counter()
+        outs = engine.generate(reqs)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(o) for o in outs)
+        print(f"served {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s, mode={args.mode}, "
+              f"budgets={budgets or 'config-default'})")
+        print("sample output:", outs[0][:16])
+    print(f"compiles: {engine.compile_counts()} (budgets, slots, and "
+          f"sampling knobs never recompile)")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
-from repro.models.model import (batch_specs, cache_init, cache_specs,
-                                decode_step, forward, model_init, prefill,
-                                router_init, router_param_count,
-                                build_pattern)
+from repro.models.model import (batch_specs, cache_init, cache_insert,
+                                cache_specs, decode_step, forward, model_init,
+                                prefill, prefill_into_slot, router_init,
+                                router_param_count, build_pattern)
 
-__all__ = ["batch_specs", "cache_init", "cache_specs", "decode_step",
-           "forward", "model_init", "prefill", "router_init",
-           "router_param_count", "build_pattern"]
+__all__ = ["batch_specs", "cache_init", "cache_insert", "cache_specs",
+           "decode_step", "forward", "model_init", "prefill",
+           "prefill_into_slot", "router_init", "router_param_count",
+           "build_pattern"]

@@ -273,7 +273,9 @@ def attn_decode(
     use_rope: bool = True, write: Optional[jnp.ndarray] = None,
 ):
     """One decode step. x: (B,1,D); cache: {'k','v': (B,L,K,Dh),
-    'valid': (B,L), 'pos': (B,L) i32}; t: scalar position.
+    'valid': (B,L), 'pos': (B,L) i32}; t: scalar position, or a (B,) i32
+    vector of PER-ROW positions (continuous batching: every serving slot
+    decodes at its own offset inside one compiled step).
 
     The cache is a RING buffer: entry for position p lives at slot p % L.
     Sliding-window layers allocate L = window so a 500k-token decode keeps
@@ -283,22 +285,38 @@ def attn_decode(
     enter the cache.  Returns (out (B,1,D), new_cache)."""
     B = x.shape[0]
     L = cache["k"].shape[1]
-    pos = jnp.full((B, 1), t, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    per_row = t.ndim == 1
+    pos = t[:, None] if per_row else jnp.full((B, 1), t, jnp.int32)
     q = _project_q(p, x, pos, cfg, lora, use_rope)
     k_new, v_new = _project_kv(p, x, pos, cfg, lora, use_rope)
     wr = jnp.ones((B,), bool) if write is None else write
-    slot = jax.lax.rem(t.astype(jnp.int32), jnp.int32(L))
-    old = lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
-    upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
-        c, jnp.where(wr[:, None, None, None], n, old(c)).astype(c.dtype),
-        slot, axis=1)
-    ck = upd(cache["k"], k_new)
-    cv = upd(cache["v"], v_new)
-    # the slot is consumed by position t either way (stale entry evicted)
-    valid = jax.lax.dynamic_update_slice_in_dim(
-        cache["valid"], wr[:, None], slot, axis=1)
-    cpos = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
+    if per_row:
+        # per-row ring slots: scatter each row's k/v into its own slot
+        slots = jax.lax.rem(t, jnp.int32(L))                 # (B,)
+        bi = jnp.arange(B)
+        def upd(c, n):
+            old = c[bi, slots]                               # (B, K, Dh)
+            new = jnp.where(wr[:, None, None], n[:, 0], old).astype(c.dtype)
+            return c.at[bi, slots].set(new)
+        ck = upd(cache["k"], k_new)
+        cv = upd(cache["v"], v_new)
+        # the slot is consumed by position t either way (stale entry evicted)
+        valid = cache["valid"].at[bi, slots].set(wr)
+        cpos = cache["pos"].at[bi, slots].set(t)
+    else:
+        slot = jax.lax.rem(t, jnp.int32(L))
+        old = lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+        upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+            c, jnp.where(wr[:, None, None, None], n, old(c)).astype(c.dtype),
+            slot, axis=1)
+        ck = upd(cache["k"], k_new)
+        cv = upd(cache["v"], v_new)
+        # the slot is consumed by position t either way (stale entry evicted)
+        valid = jax.lax.dynamic_update_slice_in_dim(
+            cache["valid"], wr[:, None], slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
     new_cache = {"k": ck, "v": cv, "valid": valid, "pos": cpos}
     kv_valid = valid & (cpos >= 0)
     if L > BLOCKED_THRESHOLD:

@@ -463,6 +463,21 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
     return x, new_cache
 
 
+def cache_row_insert(full, row, slot, batch_axis: int = 0):
+    """Splice a freshly prefilled single-request block cache (batch dim 1)
+    into row ``slot`` of a live slot-array cache of the same structure.
+
+    ``slot`` may be traced (dynamic_update_slice), so admitting a request
+    into any serving slot reuses ONE compiled insert. Works on any cache
+    pytree (attn k/v/valid/pos rings, ssm/rglru state+conv, xattn context);
+    ``batch_axis`` selects where the batch dim lives (1 for pattern-scan
+    stacked caches with a leading period dim, 0 for tail caches)."""
+    def ins(f, r):
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, r.astype(f.dtype), slot, axis=batch_axis)
+    return jax.tree.map(ins, full, row)
+
+
 def block_cache_init(kind: str, cfg, batch: int, max_seq: int, enc_len: int = 0,
                      window: int = 0):
     c = {}

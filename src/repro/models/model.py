@@ -32,7 +32,8 @@ from repro.core.routing import (RouteAux, bcast_to, capacity_k, gate_capacity,
                                 token_router_init, topk_indices,
                                 topk_mask_dyn)
 from repro.models.blocks import (block_apply, block_cache_init, block_decode,
-                                 block_router_init, block_init)
+                                 block_router_init, block_init,
+                                 cache_row_insert)
 from repro.models.layers import dense_init, dtype_of, norm_apply, norm_init
 from repro.models import flags
 
@@ -432,9 +433,43 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
     return logits, {"scan": scan_caches, "tail": tail_caches}
 
 
+def cache_insert(caches, row_caches, slot):
+    """Splice a single-request cache tree (batch dim 1, collected by
+    ``prefill`` at the slot array's ``max_cache_len``) into batch row
+    ``slot`` of a live slot-array cache. ``slot`` may be traced, so ONE
+    compiled insert serves every slot index."""
+    return {
+        "scan": [cache_row_insert(f, r, slot, batch_axis=1)
+                 for f, r in zip(caches["scan"], row_caches["scan"])],
+        "tail": [cache_row_insert(f, r, slot, batch_axis=0)
+                 for f, r in zip(caches["tail"], row_caches["tail"])],
+    }
+
+
+def prefill_into_slot(params, rparams, batch, caches, slot, cfg, ecfg=None,
+                      mode: str = "infer", max_cache_len: int = 0,
+                      policy=None, live_policy=None):
+    """Admission path for continuous batching: prefill ONE request (batch
+    leaves carry a leading dim of 1) and splice its caches — and its solved
+    per-request policy row — into row ``slot`` of the live slot arrays.
+
+    Everything downstream of the (static) prompt-length bucket is traced:
+    slot index, policy rows, and the live (B,)-leaf ``live_policy`` ride
+    through one compiled graph, so admissions never recompile.
+    Returns (last-token logits (1, V), caches, live_policy)."""
+    logits, row = prefill(params, rparams, batch, cfg, ecfg, mode=mode,
+                          max_cache_len=max_cache_len, policy=policy)
+    caches = cache_insert(caches, row, slot)
+    if live_policy is not None and policy is not None:
+        live_policy = live_policy.set_row(slot, policy)
+    return logits, caches, live_policy
+
+
 def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
                 mode: str = "infer", policy=None):
-    """One decode step. token: (B,1) i32; t: scalar i32 position.
+    """One decode step. token: (B,1) i32; t: scalar i32 position, or (B,)
+    i32 per-row positions (continuous batching: each serving slot decodes
+    at its own offset inside the same compiled step).
     Returns (logits (B,V), new caches). ``policy`` is traced: one compiled
     decode step serves every (mixed-per-request) budget."""
     spec, pol = as_spec_policy(ecfg, policy)

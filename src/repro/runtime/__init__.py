@@ -2,3 +2,4 @@ from repro.runtime import sharding
 from repro.runtime.elastic import make_mesh, rescale_training_state, reshard, valid_mesh_shapes
 from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
                                            StragglerWatchdog, run_resilient)
+from repro.runtime.scheduler import RequestHandle, SlotScheduler

@@ -1,0 +1,195 @@
+"""Request lifecycle + slot scheduler for continuous-batching serving.
+
+The serving engine owns a FIXED array of B decode slots (one compiled decode
+step over all of them, finished/empty slots masked). This module owns the
+host-side bookkeeping around that array:
+
+* ``RequestHandle`` — the lifecycle object ``engine.submit`` returns:
+  QUEUED -> RUNNING -> DONE | CANCELLED, a streaming ``tokens()`` iterator,
+  and per-request latency timestamps.
+
+* ``SlotScheduler`` — FIFO admission of queued requests into free slots,
+  packed against a per-step FLOP budget: each request costs its compute
+  budget (the roofline active-FLOP fraction its ``ElasticPolicy`` was solved
+  for; 1.0 = full teacher row), and admissions stop when the sum over
+  occupied slots would exceed ``flop_budget``. Low-budget requests therefore
+  co-schedule more densely — elasticity is a *scheduling* signal, not just a
+  quality knob. ``flop_budget=None`` means "one full-budget row per slot"
+  (admission limited only by free slots).
+
+The scheduler is deliberately model-free: it never touches jax. The engine
+calls ``admit()`` / ``free()`` / ``tick()`` around its compiled steps.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from typing import Iterator, List, Optional, Tuple
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+
+
+class RequestHandle:
+    """Lifecycle handle for one submitted request.
+
+    ``tokens()`` is a pull-based stream: it yields tokens already produced
+    and, while the request is live, drives ``engine.step()`` to produce
+    more. ``done`` is True once the request finished or was cancelled;
+    ``output`` is the generated tokens so far (a list of ints).
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self, request, engine=None):
+        self.id = next(self._ids)
+        self.request = request
+        self.status = QUEUED
+        self.slot: Optional[int] = None
+        self.output: List[int] = []
+        self.finish_reason: Optional[str] = None   # length | eos | cancelled
+        self.t_submit = time.perf_counter()
+        self.t_first: Optional[float] = None
+        self.t_done: Optional[float] = None
+        self._engine = engine
+
+    @property
+    def done(self) -> bool:
+        return self.status in (DONE, CANCELLED)
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit -> finish wall time in seconds (None while live)."""
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    def append(self, tok: int):
+        if self.t_first is None:
+            self.t_first = time.perf_counter()
+        self.output.append(tok)
+
+    def finish(self, reason: str):
+        self.status = CANCELLED if reason == "cancelled" else DONE
+        self.finish_reason = reason
+        self.t_done = time.perf_counter()
+
+    def tokens(self) -> Iterator[int]:
+        """Stream generated tokens; drives the engine while the request is
+        live (each ``engine.step()`` advances every active slot, so
+        consuming one stream also progresses concurrent requests)."""
+        i = 0
+        while True:
+            while i < len(self.output):
+                yield self.output[i]
+                i += 1
+            if self.done:
+                return
+            if self._engine is None:
+                raise RuntimeError("detached handle cannot stream")
+            self._engine.step()
+
+    def result(self):
+        """Block (stepping the engine) until done; returns the token list."""
+        for _ in self.tokens():
+            pass
+        return list(self.output)
+
+    def __repr__(self):
+        return (f"RequestHandle(id={self.id}, status={self.status}, "
+                f"slot={self.slot}, n_tokens={len(self.output)})")
+
+
+class SlotScheduler:
+    """FIFO admission into a fixed slot array under a per-step FLOP budget.
+
+    ``cost`` of a request = its compute-budget fraction (1.0 for
+    budget-None / teacher rows). Admission packs greedily in arrival order:
+    a request is admitted when a slot is free AND the occupied cost sum
+    stays within ``flop_budget``. If nothing is running and the head
+    request alone exceeds the budget it is admitted anyway (progress
+    guarantee).
+    """
+
+    def __init__(self, n_slots: int, flop_budget: Optional[float] = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self.flop_budget = (float(n_slots) if flop_budget is None
+                            else float(flop_budget))
+        self.slots: List[Optional[RequestHandle]] = [None] * n_slots
+        self.costs: List[float] = [0.0] * n_slots
+        self.queue: deque = deque()
+        # occupancy accounting (slot-steps used / slot-steps available)
+        self.steps = 0
+        self.active_slot_steps = 0
+
+    # ---- queue ----
+    def enqueue(self, handle: RequestHandle, cost: float = 1.0):
+        handle.status = QUEUED
+        self.queue.append((handle, float(cost)))
+
+    def drop_queued(self, handle: RequestHandle) -> bool:
+        """Remove a still-queued handle; True if it was found."""
+        for item in self.queue:
+            if item[0] is handle:
+                self.queue.remove(item)
+                return True
+        return False
+
+    # ---- slots ----
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def used_cost(self) -> float:
+        return sum(c for s, c in zip(self.slots, self.costs) if s is not None)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self) -> List[Tuple[int, RequestHandle]]:
+        """Pop queued requests into free slots under the FLOP budget;
+        returns [(slot, handle)] for the engine to prefill."""
+        out: List[Tuple[int, RequestHandle]] = []
+        used = self.used_cost
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            handle, cost = self.queue[0]
+            over = used + cost > self.flop_budget + 1e-9
+            if over and (used > 0 or out):
+                break               # wait for running work to drain
+            self.queue.popleft()
+            self.slots[slot], self.costs[slot] = handle, cost
+            handle.slot, handle.status = slot, RUNNING
+            used += cost
+            out.append((slot, handle))
+        return out
+
+    def free(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.costs[slot] = 0.0
+
+    def tick(self):
+        """Record one engine step for occupancy accounting."""
+        self.steps += 1
+        self.active_slot_steps += self.active
+
+    def reset_stats(self):
+        """Zero the occupancy counters (e.g. between benchmark windows)."""
+        self.steps = 0
+        self.active_slot_steps = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots active per engine step so far."""
+        if self.steps == 0:
+            return 0.0
+        return self.active_slot_steps / (self.steps * self.n_slots)

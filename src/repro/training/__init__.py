@@ -1,4 +1,4 @@
 from repro.training.train_step import (TrainState, chunked_topk_kl,
                                        init_train_state, lm_loss,
                                        make_loss_fn, make_train_step)
-from repro.training.serve import GenRequest, ServingEngine
+from repro.training.serve import GenRequest, ServingEngine, sample_tokens

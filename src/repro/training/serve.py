@@ -1,19 +1,37 @@
-"""Batched serving loop with elastic (threshold-routed) decode and
-per-request compute budgets.
+"""Continuous-batching serving engine over ONE compiled elastic decode.
 
-prefill_fn / decode_fn are jitted once per (batch, prompt_len) bucket; the
-engine pads requests into fixed buckets so recompilation is bounded. The
-runtime ``ElasticPolicy`` is passed as a *traced argument*, so budgets never
-recompile: a batch may mix requests at different budgets (policy leaves are
-(B,) arrays; all routing is row-independent) and a request at budget 1.0
-runs the exact frozen teacher. Decode runs the ElastiFormer threshold path
-(§B.1): per token, each router decides with theta whether the token enters
-each module — variable inference compute on a static graph.
+Request lifecycle API (the serving contract the paper's input-dependent
+compute implies — per-request budgets are a *scheduling* signal):
+
+    engine = ServingEngine(params, rp, cfg, spec, mode="infer")
+    h = engine.submit(GenRequest(prompt, 64, budget=0.5))
+    for tok in h.tokens():         # streams; drives engine.step()
+        ...
+    engine.cancel(h)               # frees the slot mid-flight
+
+``engine.step()`` runs ONE compiled decode over a fixed array of B slots:
+finished/empty slots are masked, newly admitted requests are prefilled into
+their slot (``models.prefill_into_slot``: single-request prefill + traced
+cache-row insert), and each admission splices its solved per-request policy
+row into the live (B,)-leaf ``ElasticPolicy`` (``ElasticPolicy.set_row``) —
+all inside two jitted entry points whose cache sizes ``compile_counts()``
+reports, so admissions at any mix of budgets never recompile. Admission is
+packed by ``runtime.scheduler.SlotScheduler`` against a per-step FLOP budget
+(roofline cost = the request's budget fraction), so low-budget requests
+co-schedule more densely.
+
+Decode runs the ElastiFormer threshold path (§B.1): per token, each router
+decides with theta whether the token enters each module — variable inference
+compute on a static graph. Sampling (per-request temperature / top-k /
+PRNG seed) is traced inside the compiled step; the default temperature 0.0
+is exact greedy argmax and bit-matches the legacy lockstep engine.
+
+``generate(List[GenRequest])`` remains as a thin synchronous wrapper over
+submit/step (legacy API).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import List, Optional
 
 import jax
@@ -21,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import ElasticPolicy, as_spec_policy, solve_budget
-from repro.models import cache_init, decode_step, prefill
+from repro.models import cache_init, decode_step, prefill_into_slot
+from repro.runtime.scheduler import RequestHandle, SlotScheduler
 
 
 @dataclasses.dataclass
@@ -29,20 +48,93 @@ class GenRequest:
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 32
     budget: Optional[float] = None   # compute budget in (0, 1]; None = engine default
+    eos_id: Optional[int] = None     # stop token; None = engine/config default
+    temperature: float = 0.0         # 0.0 = greedy (bit-matches legacy argmax)
+    top_k: int = 0                   # sample from the top-k logits; 0 = all
+    seed: int = 0                    # per-request PRNG seed (traced)
+
+
+# ------------------------------ sampling -------------------------------------
+
+def sample_tokens(logits, temperature, top_k, seeds, positions):
+    """Per-row sampling inside the compiled step — everything is traced, so
+    one compilation serves every (temperature, top_k, seed) mix.
+
+    logits: (B, V); temperature/top_k/seeds/positions: (B,). Rows with
+    temperature <= 0 take the exact greedy argmax. Sampling is gumbel-max
+    over the top-k logits (rank masking, traced k) at the given temperature;
+    the PRNG key is fold_in(PRNGKey(seed), position-of-the-new-token), so a
+    request's sample stream depends only on its own seed and positions —
+    staggered admission reproduces a solo run exactly.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32)
+    V = lg.shape[-1]
+
+    def sample_branch():
+        # value-threshold top-k (one sort; ties all kept — fine for sampling)
+        k = jnp.clip(jnp.where(top_k <= 0, V, top_k), 1, V)
+        srt = jnp.sort(lg, axis=-1)                      # ascending
+        kth = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
+        mask = lg >= kth
+        keys = jax.vmap(
+            lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t)
+        )(seeds.astype(jnp.uint32), positions.astype(jnp.int32))
+        g = jax.vmap(lambda kk: jax.random.gumbel(kk, (V,), jnp.float32))(keys)
+        z = jnp.where(mask, lg / jnp.maximum(temperature, 1e-6)[..., None] + g,
+                      -jnp.inf)
+        sampled = jnp.argmax(z, axis=-1).astype(jnp.int32)
+        return jnp.where(temperature > 0, sampled, greedy)
+
+    # all-greedy steps (the default) skip the sort + gumbel work at runtime
+    return jax.lax.cond(jnp.any(temperature > 0), sample_branch,
+                        lambda: greedy)
+
+
+def _make_admit_fn(cfg, spec, mode, max_seq):
+    """Admission graph: single-request prefill -> traced cache-row insert ->
+    policy row splice -> sample the first token. One compile per prompt
+    length; slot index, budgets, and sampling knobs are all traced."""
+    def admit(params, rp, batch, caches, slot, policy, live_policy,
+              temperature, top_k, seed, t0):
+        logits, caches, live_policy = prefill_into_slot(
+            params, rp, batch, caches, slot, cfg, spec, mode=mode,
+            max_cache_len=max_seq, policy=policy, live_policy=live_policy)
+        tok = sample_tokens(logits, temperature[None], top_k[None],
+                            seed[None], t0[None])[0]
+        return tok, caches, live_policy
+    return admit
+
+
+def _make_step_fn(cfg, spec, mode):
+    """One decode step over the whole slot array. ``t`` is the (B,) vector
+    of per-slot positions; inactive rows are masked to token 0."""
+    def step(params, rp, tok, caches, t, policy, active,
+             temperature, top_k, seeds):
+        logits, caches = decode_step(params, rp, tok[:, None], caches, t,
+                                     cfg, spec, mode=mode, policy=policy)
+        nxt = sample_tokens(logits, temperature, top_k, seeds, t + 1)
+        return jnp.where(active, nxt, 0).astype(jnp.int32), caches
+    return step
 
 
 class ServingEngine:
-    """Greedy batched generation over a frozen base model + routers.
+    """Continuous-batching generation over a frozen base model + routers.
 
     ``elastic``: legacy ElasticConfig or new ElasticSpec. Budgets are
     resolved to per-request policies by the roofline budget solver and
-    batched into (B,)-leaf ElasticPolicy pytrees.
+    spliced into the live (B,)-leaf ElasticPolicy at admission.
+
+    ``step_flop_budget``: per-step FLOP budget for admission packing, in
+    units of full-budget rows (None = batch_size: limited by slots only).
+    ``eos_id``: default stop token (falls back to ``cfg.eos_id``).
     """
 
     def __init__(self, params, router_params, cfg, elastic=None,
                  mode: str = "infer", batch_size: int = 8,
                  max_seq: int = 256, default_budget: Optional[float] = None,
-                 theta: float = 0.5):
+                 theta: float = 0.5, eos_id: Optional[int] = None,
+                 step_flop_budget: Optional[float] = None):
         self.params, self.rp = params, router_params
         self.cfg, self.mode = cfg, mode
         # base policy = the elastic config's own knobs (threshold routing
@@ -53,67 +145,181 @@ class ServingEngine:
             self._base_policy = self._base_policy.replace(theta=theta)
         self.B, self.max_seq = batch_size, max_seq
         self.default_budget, self.theta = default_budget, theta
+        self.eos_id = eos_id if eos_id is not None else cfg.eos_id
         self._policy_cache: dict = {}
-        self._prefill = jax.jit(partial(
-            prefill, cfg=cfg, ecfg=self.spec, mode=mode,
-            max_cache_len=max_seq))
-        self._decode = jax.jit(partial(
-            decode_step, cfg=cfg, ecfg=self.spec, mode=mode))
+        self._use_policy = self.spec is not None and mode != "base"
 
-    # ---- budgets -> batched policy ----
-    def _policy_for(self, budget: Optional[float]) -> ElasticPolicy:
-        if budget is None:
-            return self._base_policy
-        key = round(float(budget), 6)
-        if key not in self._policy_cache:
-            self._policy_cache[key] = solve_budget(
-                self.cfg, self.spec, key, theta=self.theta, static=True)
-        return self._policy_cache[key]
+        # jitted entry points (cache sizes reported by compile_counts)
+        self._admit_fn = jax.jit(_make_admit_fn(cfg, self.spec, mode, max_seq))
+        self._step_fn = jax.jit(_make_step_fn(cfg, self.spec, mode))
 
-    def _batch_policy(self, reqs, budget: Optional[float]):
-        if self.spec is None or self.mode == "base":
+        # ---- live slot-array state ----
+        B = batch_size
+        self.scheduler = SlotScheduler(B, step_flop_budget)
+        self._caches = cache_init(cfg, B, max_seq)
+        self._live_policy = (self._base_policy.broadcast_rows(B)
+                             if self._use_policy else None)
+        self._tok = jnp.zeros((B,), jnp.int32)
+        self._t = np.zeros((B,), np.int32)        # per-slot decode position
+        self._active = np.zeros((B,), bool)
+        self._temp = np.zeros((B,), np.float32)
+        self._topk = np.zeros((B,), np.int32)
+        self._seeds = np.zeros((B,), np.uint32)
+        self._ngen = np.zeros((B,), np.int64)
+        self._extras: dict = {}                   # handle.id -> extra inputs
+
+    # ---- budgets -> per-request policy rows ----
+    def _policy_for(self, budget: Optional[float]) -> Optional[ElasticPolicy]:
+        if not self._use_policy:
             return None
-        budgets = [(budget if budget is not None else
-                    (r.budget if r.budget is not None else
-                     self.default_budget)) for r in reqs]
-        budgets += [None] * (self.B - len(reqs))         # padding rows
-        return ElasticPolicy.stack([self._policy_for(b) for b in budgets])
+        if budget is None:
+            pol = self._base_policy
+        else:
+            key = round(float(budget), 6)
+            if key not in self._policy_cache:
+                self._policy_cache[key] = solve_budget(
+                    self.cfg, self.spec, key, theta=self.theta, static=True)
+            pol = self._policy_cache[key]
+        # f32 leaves: stable jit avals (no weak-type retraces)
+        return jax.tree.map(lambda v: jnp.asarray(v, jnp.float32), pol)
 
     def compile_counts(self) -> dict:
-        """Jit-cache sizes — budgets must NOT add entries (asserted by
-        tests and benchmarks/fig5)."""
-        return {"prefill": self._prefill._cache_size(),
-                "decode": self._decode._cache_size()}
+        """Jit-cache sizes — admissions at any mix of budgets, slots,
+        temperatures, or seeds must NOT add entries (asserted by tests and
+        benchmarks); only a new prompt length compiles."""
+        return {"prefill": self._admit_fn._cache_size(),
+                "decode": self._step_fn._cache_size()}
 
-    # ---- generation ----
+    # ------------------------- request lifecycle -----------------------------
+
+    def submit(self, request: GenRequest,
+               extra_inputs: Optional[dict] = None) -> RequestHandle:
+        """Queue a request; returns its lifecycle handle. ``extra_inputs``:
+        per-request model inputs with a leading dim of 1 (e.g. one image's
+        ``image_embeds`` row for a VLM)."""
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + request.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds max_seq={self.max_seq}")
+        b = request.budget
+        if b is not None and not 0.0 < b <= 1.0:
+            raise ValueError(f"budget must be in (0, 1], got {b}")
+        handle = RequestHandle(request, engine=self)
+        if extra_inputs:
+            self._extras[handle.id] = {
+                k: jnp.asarray(v) for k, v in extra_inputs.items()}
+        cost = b if b is not None else (self.default_budget or 1.0)
+        self.scheduler.enqueue(handle, cost=min(1.0, float(cost)))
+        return handle
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel a queued or running request; frees its slot immediately.
+        Returns False if the request had already finished."""
+        if handle.done:
+            return False
+        if handle.status == "running" and handle.slot is not None:
+            self.scheduler.free(handle.slot)
+            self._active[handle.slot] = False
+        else:
+            self.scheduler.drop_queued(handle)
+        self._extras.pop(handle.id, None)
+        handle.finish("cancelled")
+        return True
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.active > 0 or self.scheduler.pending > 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.scheduler.occupancy
+
+    # ------------------------------ stepping ---------------------------------
+
+    def _admit_one(self, slot: int, handle: RequestHandle):
+        req = handle.request
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        plen = prompt.size
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        batch.update(self._extras.pop(handle.id, {}))
+        pol_row = self._policy_for(req.budget if req.budget is not None
+                                   else self.default_budget)
+        seed = int(req.seed) & 0xFFFFFFFF        # any python int -> uint32
+        tok0, self._caches, self._live_policy = self._admit_fn(
+            self.params, self.rp, batch, self._caches, jnp.int32(slot),
+            pol_row, self._live_policy,
+            jnp.float32(req.temperature), jnp.int32(req.top_k),
+            jnp.uint32(seed), jnp.int32(plen))
+        self._tok = self._tok.at[slot].set(tok0)
+        self._t[slot] = plen
+        self._active[slot] = True
+        self._temp[slot] = req.temperature
+        self._topk[slot] = req.top_k
+        self._seeds[slot] = seed
+        self._ngen[slot] = 0
+        self._append(slot, handle, int(tok0))
+
+    def _append(self, slot: int, handle: RequestHandle, tok: int):
+        handle.append(tok)
+        self._ngen[slot] += 1
+        eos = (handle.request.eos_id if handle.request.eos_id is not None
+               else self.eos_id)
+        if self._ngen[slot] >= handle.request.max_new_tokens:
+            self._finish(slot, handle, "length")
+        elif eos is not None and tok == int(eos):
+            self._finish(slot, handle, "eos")
+
+    def _finish(self, slot: int, handle: RequestHandle, reason: str):
+        handle.finish(reason)
+        self.scheduler.free(slot)
+        self._active[slot] = False
+
+    def step(self) -> int:
+        """Admit queued requests into free slots, then run ONE compiled
+        decode over the slot array. Returns the number of progress events
+        (admissions + slots that advanced) — admissions count, so a
+        request finishing on its very first (prefill) token is not
+        mistaken for an idle engine. 0 = the engine is truly idle."""
+        admitted = self.scheduler.admit()
+        for slot, handle in admitted:
+            self._admit_one(slot, handle)
+        if not self._active.any():
+            return len(admitted)
+        live = [(s, h) for s, h in enumerate(self.scheduler.slots)
+                if h is not None and self._active[s]]
+        self._tok, self._caches = self._step_fn(
+            self.params, self.rp, self._tok, self._caches,
+            jnp.asarray(self._t), self._live_policy,
+            jnp.asarray(self._active), jnp.asarray(self._temp),
+            jnp.asarray(self._topk), jnp.asarray(self._seeds))
+        toks = np.asarray(self._tok)
+        self.scheduler.tick()
+        for slot, handle in live:
+            self._t[slot] += 1
+            self._append(slot, handle, int(toks[slot]))
+        return len(admitted) + len(live)
+
+    # --------------------------- legacy wrapper ------------------------------
+
     def generate(self, requests: List[GenRequest],
                  extra_inputs: Optional[dict] = None,
                  budget: Optional[float] = None) -> List[np.ndarray]:
-        """``budget`` overrides every request's budget for this call."""
-        out: List[np.ndarray] = []
-        for i in range(0, len(requests), self.B):
-            out += self._generate_batch(requests[i:i + self.B], extra_inputs,
-                                        budget)
-        return out
-
-    def _generate_batch(self, reqs, extra_inputs, budget):
-        B = self.B
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((B, plen), np.int32)
-        for j, r in enumerate(reqs):
-            toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if extra_inputs:
-            batch.update(extra_inputs)
-        policy = self._batch_policy(reqs, budget)
-        logits, caches = self._prefill(self.params, self.rp, batch,
-                                       policy=policy)
-        max_new = max(r.max_new_tokens for r in reqs)
-        gen = np.zeros((B, max_new), np.int32)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        for t in range(max_new):
-            gen[:, t] = np.asarray(tok)[:, 0]
-            logits, caches = self._decode(self.params, self.rp, tok, caches,
-                                          jnp.int32(plen + t), policy=policy)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        return [gen[j, :reqs[j].max_new_tokens] for j in range(len(reqs))]
+        """Synchronous batch API (legacy): submit everything, step until
+        done. ``budget`` overrides every request's budget for this call.
+        ``extra_inputs`` leaves carry a leading dim indexed per request."""
+        handles = []
+        for i, r in enumerate(requests):
+            if budget is not None:
+                r = dataclasses.replace(r, budget=budget)
+            extra = None
+            if extra_inputs:
+                extra = {k: np.asarray(v)[i:i + 1]
+                         for k, v in extra_inputs.items()}
+            handles.append(self.submit(r, extra_inputs=extra))
+        while not all(h.done for h in handles):
+            if self.step() == 0 and not all(h.done for h in handles):
+                raise RuntimeError("serving engine stalled")  # pragma: no cover
+        return [np.asarray(h.output, np.int32) for h in handles]
