@@ -1,0 +1,108 @@
+"""Ragged capacity-bucket execution benchmark -> BENCH_ragged.json.
+
+For each budget in a sweep, lowers the toy-config train-mode forward under
+(a) the ragged capacity-bucket path and (b) the dense rank-masked reference
+path, and records per-step lowered FLOPs (XLA cost analysis — the number the
+CI FLOP gate asserts on) plus wall-clock of the jitted forward. Dense is the
+pre-refactor behavior: every budget costs full-budget compute; ragged FLOPs
+must track the budget.
+
+Usage:
+    python benchmarks/ragged_speedup.py [--smoke] [--out BENCH_ragged.json]
+
+Emits the harness's `name,us_per_call,derived` rows and writes the JSON
+artifact uploaded by CI next to BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "benchmarks")
+from common import emit, timed  # noqa: E402
+
+from repro.configs.elasti_toy import toy_lm  # noqa: E402
+from repro.core.policy import ElasticPolicy, ElasticSpec, ragged_bucket  # noqa: E402
+from repro.launch.hloprof import lowered_flops  # noqa: E402
+from repro.models import forward, model_init, router_init  # noqa: E402
+
+BUDGETS = (1.0, 0.75, 0.5, 0.25)
+
+
+def build(seq: int, batch: int, vocab: int, d_model: int, n_layers: int):
+    cfg = dataclasses.replace(
+        toy_lm(n_layers=n_layers, d_model=d_model, vocab=vocab),
+        dtype="float32")
+    spec = ElasticSpec(mha_token_routed=True, mlp_token_routed=True)
+    key = jax.random.PRNGKey(0)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    rng = np.random.default_rng(0)
+    tokens = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq), dtype=np.int32))}
+    return cfg, spec, params, rp, tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI")
+    ap.add_argument("--out", default="BENCH_ragged.json")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+    seq = args.seq or (128 if args.smoke else 512)
+    cfg, spec, params, rp, batch = build(
+        seq, args.batch, vocab=256, d_model=128, n_layers=4)
+    dense = dataclasses.replace(spec, routing_impl="dense_mask")
+
+    def make_fwd(sp):
+        def f(rp, batch, policy, bucket=None):
+            return forward(params, rp, batch, cfg, sp, mode="train",
+                           policy=policy, bucket=bucket)[0]
+        return f
+
+    f_ragged = make_fwd(spec)
+    f_dense = make_fwd(dense)
+    jit_ragged = jax.jit(f_ragged, static_argnames=("bucket",))
+    jit_dense = jax.jit(f_dense, static_argnames=("bucket",))
+
+    rows = []
+    for b in BUDGETS:
+        pol = jax.tree.map(jnp.asarray, ElasticPolicy.uniform(b))
+        bkt = ragged_bucket(pol, seq)
+        fl_r = lowered_flops(f_ragged, rp, batch, pol, bucket=bkt,
+                             static_argnames=("bucket",))
+        fl_d = lowered_flops(f_dense, rp, batch, pol,
+                             static_argnames=("bucket",))
+        _, us_r = timed(lambda: jit_ragged(rp, batch, pol, bucket=bkt))
+        _, us_d = timed(lambda: jit_dense(rp, batch, pol))
+        rows.append({"budget": b, "bucket": bkt, "seq": seq,
+                     "flops_ragged": fl_r, "flops_dense": fl_d,
+                     "us_ragged": us_r, "us_dense": us_d})
+        emit(f"ragged_fwd_b{b:g}", us_r,
+             f"{fl_r / 1e6:.1f}MF_vs_{fl_d / 1e6:.1f}MF_dense")
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+
+    base = rows[0]
+    half = next(r for r in rows if r["budget"] == 0.5)
+    ratio = half["flops_ragged"] / max(base["flops_ragged"], 1.0)
+    flops = [r["flops_ragged"] for r in rows]
+    assert flops == sorted(flops, reverse=True), \
+        f"ragged FLOPs must decrease with budget: {flops}"
+    assert ratio <= 0.7, f"budget-0.5 FLOP ratio {ratio:.3f} > 0.7"
+    print(f"\nwrote {args.out}: budget-0.5 lowers {ratio:.2f}x the FLOPs of "
+          f"budget-1.0 (dense reference is "
+          f"{half['flops_dense'] / max(rows[0]['flops_dense'], 1.0):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

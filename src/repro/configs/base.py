@@ -182,7 +182,7 @@ class ElasticConfig:
     distill_temp: float = 1.0
     lambda_load: float = 1.0
     lambda_topk: float = 1.0
-    routing_impl: str = "gather"                 # gather | dense_mask
+    routing_impl: str = "ragged"                 # ragged | gather | dense_mask
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0

@@ -17,8 +17,10 @@ The elasticity API is split into two objects:
 
 Policy leaves may be:
   * python floats/ints — trace-time constants (the legacy ``ElasticConfig``
-    path; keeps the static top-k *gather* routing with real FLOP savings,
-    at the cost of one compile per budget);
+    path; top-k routing executes on a ragged capacity bucket by default, so
+    budgets sharing a bucket share a compile — at most
+    ``routing.RAGGED_N_BUCKETS`` graphs — with FLOPs proportional to the
+    bucket);
   * jnp scalars ``()`` — traced, one compile for all budgets;
   * ``(B,)`` arrays — per-request budgets inside one batched step;
   * ``(L, 1)`` / ``(L, B)`` arrays — per-layer schedules (L = n_layers).
@@ -65,7 +67,7 @@ class ElasticSpec:
     distill_temp: float = 1.0
     lambda_load: float = 1.0
     lambda_topk: float = 1.0
-    routing_impl: str = "gather"       # gather | dense_mask (static path only)
+    routing_impl: str = "ragged"       # ragged | gather | dense_mask
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0
@@ -223,6 +225,45 @@ def as_spec_policy(elastic, policy: Optional[ElasticPolicy] = None):
     # legacy ElasticConfig (duck-typed to avoid importing configs here)
     spec = spec_from_config(elastic)
     return spec, (policy if policy is not None else policy_from_config(elastic))
+
+
+# ----------------------- ragged bucket resolution ----------------------------
+
+def ragged_bucket(policy: Optional[ElasticPolicy], s: int,
+                  *, n_buckets: Optional[int] = None,
+                  align: Optional[int] = None) -> Optional[int]:
+    """Host-side bucket solver (sits next to the roofline budget solver):
+    the smallest static capacity bucket covering the policy's token
+    capacities at sequence length ``s``. This is the value to thread — as a
+    STATIC argument — into ``forward`` / ``prefill`` / train steps when the
+    policy itself is traced: each distinct bucket is one compile, and there
+    are at most ``routing.RAGGED_N_BUCKETS`` of them per sequence length.
+
+    Returns None (dense fallback / no bucketing possible) when the policy is
+    abstract (tracers — the budget is genuinely unknown at trace time), in
+    teacher mode, or when the covering bucket is the full sequence."""
+    from repro.core import routing as R
+    if policy is None:
+        return None
+    caps = [policy.mha_token_capacity, policy.mlp_token_capacity,
+            policy.student]
+    vals = []
+    for c in caps:
+        if isinstance(c, jax.core.Tracer):
+            return None
+        vals.append(jnp.asarray(c, jnp.float32))
+    if float(jnp.min(vals[2])) <= 0.0:          # teacher rows: full compute
+        return None
+    cap = max(float(jnp.max(vals[0])), float(jnp.max(vals[1])))
+    if cap >= 1.0:
+        return None
+    kw = {}
+    if n_buckets is not None:
+        kw["n_buckets"] = n_buckets
+    if align is not None:
+        kw["align"] = align
+    b = R.bucket_for(R.capacity_k(cap, s, mxu=True), s, **kw)
+    return b if b < s else None
 
 
 # ------------------------- budget -> capacity solver --------------------------

@@ -7,18 +7,29 @@ Two schemes:
     submodules, straight-through via output scaling, load-balance aux (§B.2).
 
 Capacities and top-k counts come in two flavors (see core/policy.py):
-  * python numbers — trace-time constants; the top-k *gather* path with real
-    FLOP savings is available, at one compile per budget;
-  * traced jnp scalars / (B,) arrays — rank-based validity *masking* at full
-    shapes, so ONE compiled graph serves every budget (and mixed per-request
-    budgets inside one batch). Any capacity >= 1 (or top-k >= M, or
-    ``student <= 0``) short-circuits to the exact unrouted module: router
-    weights are forced to 1, which is the paper's losslessness property.
+  * python numbers — trace-time constants; top-k executes on a *ragged
+    capacity bucket* (default) or exact *gather* buffer with real FLOP
+    savings in the lowered HLO;
+  * traced jnp scalars / (B,) arrays — one compiled graph serves every
+    budget (and mixed per-request budgets inside one batch): with a static
+    ``bucket`` hint the ragged path keeps the FLOP savings (one graph per
+    bucket, <= RAGGED_N_BUCKETS total), without one it falls back to
+    rank-based validity *masking* at full shapes. Any capacity >= 1 (or
+    top-k >= M, or ``student <= 0``) short-circuits to the exact unrouted
+    module: router weights are forced to 1, the paper's losslessness
+    property.
+
+The ragged machinery (``capacity_buckets`` / ``bucket_for`` /
+``ragged_select`` / ``resolve_bucket``) stably partitions the sequence
+valid-first: the selected tokens form a position-ascending prefix of a
+static bucket-sized buffer, the true count rides along as a traced scalar
+that the Pallas kernels use to skip trailing tiles.
 
 All router math is float32 regardless of backbone dtype.
 """
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Callable, NamedTuple, Optional
 
@@ -127,7 +138,9 @@ def capacity_k(capacity, s: int, mxu: bool = False):
     ``mxu``: on long sequences (s >= 1024) round the count up to a multiple
     of 128 (MXU-friendly gather sizes) — the traced path applies the SAME
     rule so one-graph masking selects exactly the tokens the static gather
-    compile would have."""
+    compile would have. Every call site (gather, dense mask, ragged bucket
+    selection) must pass the same ``mxu`` so all three execution paths pick
+    the exact same token set."""
     if is_static(capacity):
         k = int(math.ceil(capacity * s))
         if mxu and s >= 1024:
@@ -137,6 +150,74 @@ def capacity_k(capacity, s: int, mxu: bool = False):
     if mxu and s >= 1024:
         k = jnp.minimum(s, jnp.ceil(k / 128) * 128)
     return jnp.clip(k, 1, s)
+
+
+# --------------------- ragged capacity buckets ------------------------------
+
+RAGGED_N_BUCKETS = 4     # static graphs per sequence length, max
+RAGGED_ALIGN = 128       # MXU lane alignment of bucket sizes
+
+
+def capacity_buckets(s: int, *, n_buckets: int = RAGGED_N_BUCKETS,
+                     align: int = RAGGED_ALIGN):
+    """Static ragged buffer sizes for sequence length ``s``: ``n_buckets``
+    evenly spaced fractions of s, each rounded up to a multiple of ``align``
+    (shrunk on short sequences so buckets stay distinct), capped at s.
+    Every budget maps onto one of these, so the one-compile-per-budget
+    blow-up of the legacy gather path collapses to <= n_buckets graphs."""
+    align = max(1, min(align, -(-s // n_buckets)))
+    out = []
+    for i in range(1, n_buckets + 1):
+        b = -(-s * i // n_buckets)            # ceil(s*i/n)
+        b = min(s, -(-b // align) * align)    # round up to align
+        if not out or b > out[-1]:
+            out.append(b)
+    return tuple(out)
+
+
+def bucket_for(k: int, s: int, *, n_buckets: int = RAGGED_N_BUCKETS,
+               align: int = RAGGED_ALIGN) -> int:
+    """Smallest static bucket >= k tokens (k <= s)."""
+    for b in capacity_buckets(s, n_buckets=n_buckets, align=align):
+        if b >= k:
+            return b
+    return s
+
+
+def ragged_select(scores, k, bucket: int):
+    """Stable valid-first partition for ragged capacity-bucket routing.
+
+    scores: (..., S) router scores; k: top-k count — python int, traced
+    scalar, or per-row (B,); bucket: static buffer size with k <= bucket.
+
+    Returns (idx (..., bucket) i32, valid (..., bucket) bool, count):
+    ``idx[..., :k]`` are the top-k tokens in ascending POSITION order (the
+    exact token set of ``topk_mask_dyn``, ties by position), so causal
+    attention over the buffer prefix is causal attention over the selected
+    tokens; the tail is filled with the remaining (not-selected) tokens,
+    also position-ascending, and masked out by ``valid``. ``count`` is the
+    number of valid prefix rows (python int when k is static) — the traced
+    scalar the Pallas kernels take to skip trailing tiles.
+
+    ``k`` is clamped to ``bucket``: callers must pass a covering bucket
+    (``resolve_bucket`` / ``policy.ragged_bucket`` guarantee it); an
+    undersized one degrades to a well-defined truncation — the top-bucket
+    tokens — with ``keep``/``count``/``valid`` all agreeing on the executed
+    set, never an all-valid mask over silently dropped tokens."""
+    s = scores.shape[-1]
+    k = min(int(k), bucket) if is_static(k) else jnp.minimum(k, bucket)
+    keep = topk_mask_dyn(scores, k)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(keep, pos, pos + s), axis=-1)
+    idx = order[..., :bucket].astype(jnp.int32)
+    if is_static(k):
+        count = max(1, min(int(k), bucket))
+        valid = jnp.broadcast_to(jnp.arange(bucket) < count,
+                                 idx.shape)
+    else:
+        count = jnp.sum(keep, axis=-1).astype(jnp.int32)  # leading dims
+        valid = jnp.arange(bucket) < count[..., None]
+    return idx, valid, count
 
 
 def threshold_logit(theta):
@@ -222,6 +303,37 @@ def scatter_add_tokens(shape_like, idx, vals):
     return y.at[b, idx].add(vals.astype(y.dtype))
 
 
+def _accepts_token_valid(f) -> bool:
+    """True when f's signature exposes the ragged prefix contract
+    (a ``token_valid`` parameter or ``**kwargs``)."""
+    try:
+        params = inspect.signature(f).parameters
+    except (TypeError, ValueError):
+        return False
+    return "token_valid" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+def resolve_bucket(capacity, s: int, bucket=None):
+    """Static ragged buffer size for this trace, or None when the ragged
+    path cannot run (-> dense fallback): static capacities derive it from
+    the capacity itself, traced capacities need the caller's static
+    ``bucket`` hint (which must cover the largest per-row top-k this graph
+    will see). A bucket >= s is dense anyway, so it also returns None."""
+    if capacity is None:
+        return None
+    if is_static(capacity):
+        if capacity >= 1.0:
+            return None
+        kb = bucket_for(capacity_k(capacity, s, mxu=True), s)
+    elif bucket is None:
+        return None
+    else:
+        kb = int(bucket)
+    kb = min(kb, s)
+    return kb if kb < s else None
+
+
 def route_tokens(
     rp,
     x,                      # (B, S, D)
@@ -229,16 +341,24 @@ def route_tokens(
     capacity,               # None | python float (static) | traced scalar/(B,)
     mode: str,              # base | train | infer
     positions=None,         # (S,) int32 positions (for RoPE/causal inside f)
-    impl: str = "gather",
+    impl: str = "ragged",
     theta=0.5,              # inference threshold (policy.theta)
     student=None,           # policy.student: <=0 bypasses routing entirely
+    bucket=None,            # static ragged buffer size (traced capacities)
+    mxu: bool = True,       # capacity_k rounding — same flag on EVERY path
 ):
     """Input subset selection around a module f (residual added by caller).
 
     Returns (delta, aux). delta is f's (router-weighted) contribution.
-    Static capacities keep the top-k gather path (smaller HLO, per-budget
-    compile); traced capacities run dense with rank masking so one compiled
-    graph serves every budget.
+    Three implementations of the train-mode top-k:
+      * ragged (default): gather into a capacity-bucket buffer (static
+        bucket size, traced true count) — FLOPs proportional to the bucket,
+        <= RAGGED_N_BUCKETS compiles per sequence length;
+      * gather: legacy static top-k gather — smallest HLO, one compile PER
+        budget; static capacities only;
+      * dense_mask: full-shape compute with rank masking — one compile for
+        every budget, no FLOP savings (reference/fallback; also serves
+        inference thresholding and traced capacities without a bucket).
     """
     B, S, D = x.shape
     if positions is None:
@@ -252,7 +372,7 @@ def route_tokens(
 
     if (mode == "train" and impl == "gather" and is_static(capacity)
             and is_static(theta) and capacity < 1.0):
-        k = max(1, min(S, int(math.ceil(capacity * S))))
+        k = capacity_k(capacity, S, mxu=mxu)
         idx = topk_indices(scores, k)        # (B, k) ascending
         x_sel = gather_tokens(x, idx)
         pos_sel = positions[idx] if positions.ndim == 1 else jnp.take_along_axis(positions, idx, 1)
@@ -263,9 +383,34 @@ def route_tokens(
         mask = topk_mask(scores, k)
         return delta, RouteAux.of(topk=bce_topk_loss(logits, mask), keep=mask)
 
+    kb = resolve_bucket(capacity, S, bucket) if (
+        mode == "train" and impl == "ragged") else None
+    if kb is not None:
+        k = capacity_k(capacity, S, mxu=mxu)
+        idx, pvalid, cnt = ragged_select(scores, k, kb)
+        x_sel = gather_tokens(x, idx)
+        pos_sel = positions[idx] if positions.ndim == 1 \
+            else jnp.take_along_axis(positions, idx, 1)
+        # Modules that understand the ragged prefix contract (e.g. MoE
+        # dispatch, where masked tail rows must not consume expert
+        # capacity) get the validity mask and true count. Awareness is
+        # declared by the SIGNATURE: expose a ``token_valid`` kwarg (or
+        # **kwargs) — a wrapper that hides it opts its module out, so
+        # wrap ragged-aware modules with functools.wraps or forward the
+        # kwargs explicitly.
+        if _accepts_token_valid(f):
+            y_sel = f(x_sel, pos_sel, token_valid=pvalid, token_count=cnt)
+        else:
+            y_sel = f(x_sel, pos_sel)
+        w_sel = jnp.take_along_axis(scores, idx, axis=1) * pvalid
+        delta = scatter_add_tokens(
+            x, idx, y_sel * w_sel[..., None].astype(y_sel.dtype))
+        keep = topk_mask_dyn(scores, k)
+        return delta, RouteAux.of(topk=bce_topk_loss(logits, keep), keep=keep)
+
     # dense path: full-shape compute, rank/threshold masking (train w/
-    # dense_mask impl, inference, and every traced-capacity case)
-    keep, w = token_gate(logits, scores, capacity, mode, theta=theta)
+    # dense_mask impl, inference, and traced capacities without a bucket)
+    keep, w = token_gate(logits, scores, capacity, mode, theta=theta, mxu=mxu)
     y = f(x, positions)
     delta = y * w[..., None].astype(y.dtype)
     if mode == "train":
@@ -280,11 +425,15 @@ def param_router_init(key, d: int, m: int):
     return {"w": w}
 
 
-def param_route_weights(rp, x, top_k, normalize_to_m: bool = True):
+def param_route_weights(rp, x, top_k, normalize_to_m: bool = True,
+                        valid=None):
     """Alg. 1: w = M * softmax(W_r x); top-k selection mask.
 
     ``top_k`` may be a python int (static) or a traced scalar/(B,) array
-    (rank masking; one compiled graph for every k).
+    (rank masking; one compiled graph for every k). ``valid`` (x's leading
+    dims) excludes rows from the load-balance statistics — ragged bucket
+    buffers pass their prefix mask so the padded tail (whose outputs are
+    weighted to zero anyway) cannot skew the aux loss.
     Returns (weights (...,M) f32, mask (...,M) bool, aux RouteAux).
     With k == M and a uniform router this reproduces the base module exactly
     (weights == 1 everywhere) — the paper's losslessness property.
@@ -297,7 +446,13 @@ def param_route_weights(rp, x, top_k, normalize_to_m: bool = True):
     mask = topk_mask_any(w, k)
     # §B.2 load-balance: E_m[frac_selected(m) * mean_prob(m)] * M
     red = tuple(range(probs.ndim - 1))
-    frac = jnp.mean(mask.astype(jnp.float32), axis=red)
-    mean_p = jnp.mean(probs, axis=red)
+    if valid is None:
+        frac = jnp.mean(mask.astype(jnp.float32), axis=red)
+        mean_p = jnp.mean(probs, axis=red)
+    else:
+        vw = valid.astype(jnp.float32)[..., None]
+        denom = jnp.maximum(jnp.sum(vw), 1.0)
+        frac = jnp.sum(mask * vw, axis=red) / denom
+        mean_p = jnp.sum(probs * vw, axis=red) / denom
     load = m * jnp.sum(frac * mean_p)
     return w, mask, RouteAux.of(load=load)

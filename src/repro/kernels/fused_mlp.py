@@ -8,6 +8,12 @@ round-trips to HBM (F is 3-4x D on the assigned archs); the kernel tiles
 F into VMEM-sized blocks and accumulates the down-projection into an f32
 scratch across the sequential F-grid dimension. Token gather/scatter (the
 top-k routing) stays in XLA — it is bandwidth-trivial next to the matmuls.
+
+Ragged capacity-bucket execution: ``valid_count`` (a scalar-prefetched
+traced count) marks the first N rows as real tokens — token tiles entirely
+past the count are skipped (zero write, no matmuls), the straddling tile
+zeroes its trailing rows. A bucket-sized compile therefore does work
+proportional to the *count*, not the buffer.
 """
 from __future__ import annotations
 
@@ -18,40 +24,57 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
 
-def _kernel(x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
-            act: str, n_fb: int, weighted: bool):
+
+def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
+            act: str, n_fb: int, weighted: bool, block_t: int):
+    it = pl.program_id(0)
     jf = pl.program_id(1)
+    cnt = cnt_ref[0]
+    live = it * block_t < cnt
 
-    @pl.when(jf == 0)
-    def _init():
-        acc_sc[...] = jnp.zeros_like(acc_sc)
+    @pl.when(jnp.logical_not(live) & (jf == n_fb - 1))
+    def _dead():  # tile fully past the valid count: zero write, no compute
+        o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...].astype(jnp.float32)                     # (bt, D)
-    hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)   # (bt, bf)
-    if wg_ref is not None:
-        hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
-        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
-        h = a * hi
-    else:
-        h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
-    acc_sc[...] += jax.lax.dot(h, wo_ref[...].astype(jnp.float32),
-                               preferred_element_type=jnp.float32)
+    @pl.when(live)
+    def _run():
+        @pl.when(jf == 0)
+        def _init():
+            acc_sc[...] = jnp.zeros_like(acc_sc)
 
-    @pl.when(jf == n_fb - 1)
-    def _finish():
-        y = acc_sc[...]
-        if weighted:
-            y = y * tw_ref[...].astype(jnp.float32)[:, :1]
-        o_ref[...] = y.astype(o_ref.dtype)
+        x = x_ref[...].astype(jnp.float32)                     # (bt, D)
+        hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)   # (bt, bf)
+        if wg_ref is not None:
+            hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
+            h = a * hi
+        else:
+            h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
+        acc_sc[...] += jax.lax.dot(h, wo_ref[...].astype(jnp.float32),
+                                   preferred_element_type=jnp.float32)
+
+        @pl.when(jf == n_fb - 1)
+        def _finish():
+            y = acc_sc[...]
+            if weighted:
+                y = y * tw_ref[...].astype(jnp.float32)[:, :1]
+            rows = it * block_t + jax.lax.broadcasted_iota(
+                jnp.int32, y.shape, 0)
+            y = jnp.where(rows < cnt, y, 0.0)
+            o_ref[...] = y.astype(o_ref.dtype)
 
 
 def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
-              block_t: int = 256, block_f: int = 512,
+              block_t: int = 256, block_f: int = 512, valid_count=None,
               interpret: bool = False):
-    """x: (T, D); wi/wg: (D, F); wo: (F, D); token_weights: (T,) or None.
+    """x: (T, D); wi/wg: (D, F); wo: (F, D); token_weights: (T,) or None;
+    valid_count: traced/static count of real leading rows (None = T) —
+    rows >= valid_count produce zeros and their tiles are skipped.
     Returns (T, D)."""
     T, D = x.shape
     F = wi.shape[1]
@@ -60,35 +83,43 @@ def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
     tw = (jnp.ones((T, 1), jnp.float32) if token_weights is None
           else token_weights.reshape(T, 1).astype(jnp.float32))
     tw = jnp.broadcast_to(tw, (T, 128))  # lane-replicated for TPU layout
+    cnt = jnp.clip(jnp.asarray(
+        T if valid_count is None else valid_count, jnp.int32), 0, T)
+    cnt = cnt.reshape(1)
 
     kernel = functools.partial(_kernel, act=act, n_fb=nf,
-                               weighted=token_weights is not None)
+                               weighted=token_weights is not None,
+                               block_t=bt)
     in_specs = [
-        pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
-        pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+        pl.BlockSpec((bt, D), lambda i, j, *_: (i, 0)),
+        pl.BlockSpec((D, bf), lambda i, j, *_: (0, j)),
     ]
     args = [x, wi]
     if wg is not None:
-        in_specs.append(pl.BlockSpec((D, bf), lambda i, j: (0, j)))
+        in_specs.append(pl.BlockSpec((D, bf), lambda i, j, *_: (0, j)))
         args.append(wg)
         kfn = kernel
     else:
-        kfn = lambda x_ref, wi_ref, wo_ref, tw_ref, o_ref, acc: kernel(
-            x_ref, wi_ref, None, wo_ref, tw_ref, o_ref, acc)
+        kfn = lambda cnt_ref, x_ref, wi_ref, wo_ref, tw_ref, o_ref, acc: \
+            kernel(cnt_ref, x_ref, wi_ref, None, wo_ref, tw_ref, o_ref, acc)
     in_specs += [
-        pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
-        pl.BlockSpec((bt, 128), lambda i, j: (i, 0)),
+        pl.BlockSpec((bf, D), lambda i, j, *_: (j, 0)),
+        pl.BlockSpec((bt, 128), lambda i, j, *_: (i, 0)),
     ]
     args += [wo, tw]
 
-    return pl.pallas_call(
-        kfn,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(nt, nf),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        out_specs=pl.BlockSpec((bt, D), lambda i, j, *_: (i, 0)),
         scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+    )
+    return pl.pallas_call(
+        kfn,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(*args)
+    )(cnt, *args)

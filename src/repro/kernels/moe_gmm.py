@@ -11,6 +11,11 @@ Grid (E, C/bc, Fe/bf): expert-major so each expert's weight tiles are
 streamed once per token-block column; the hidden activation is fused in VMEM
 exactly like fused_mlp. Routing weights multiply the output (straight-through
 gradient path of Alg. 1).
+
+Ragged capacity-bucket execution: ``group_counts`` (an (E,) scalar-prefetched
+vector of per-expert valid-slot counts) lets a single bucket-sized compile
+skip every token tile past an expert's true occupancy (`pl.when` on tile
+index vs count) — work proportional to dispatched tokens, not to capacity.
 """
 from __future__ import annotations
 
@@ -21,38 +26,57 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
 
-def _kernel(x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
-            act: str, n_fb: int):
+
+def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
+            act: str, n_fb: int, block_c: int):
+    ie = pl.program_id(0)
+    ic = pl.program_id(1)
     jf = pl.program_id(2)
+    cnt = cnt_ref[ie]
+    live = ic * block_c < cnt
 
-    @pl.when(jf == 0)
-    def _init():
-        acc_sc[...] = jnp.zeros_like(acc_sc)
+    @pl.when(jnp.logical_not(live) & (jf == n_fb - 1))
+    def _dead():  # capacity tile past this expert's occupancy: zeros only
+        o_ref[0] = jnp.zeros_like(o_ref[0])
 
-    x = x_ref[0].astype(jnp.float32)                       # (bc, D)
-    hi = jax.lax.dot(x, wi_ref[0].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    if wg_ref is not None:
-        hg = jax.lax.dot(x, wg_ref[0].astype(jnp.float32),
+    @pl.when(live)
+    def _run():
+        @pl.when(jf == 0)
+        def _init():
+            acc_sc[...] = jnp.zeros_like(acc_sc)
+
+        x = x_ref[0].astype(jnp.float32)                       # (bc, D)
+        hi = jax.lax.dot(x, wi_ref[0].astype(jnp.float32),
                          preferred_element_type=jnp.float32)
-        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
-        h = a * hi
-    else:
-        h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
-    acc_sc[...] += jax.lax.dot(h, wo_ref[0].astype(jnp.float32),
-                               preferred_element_type=jnp.float32)
+        if wg_ref is not None:
+            hg = jax.lax.dot(x, wg_ref[0].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
+            h = a * hi
+        else:
+            h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
+        acc_sc[...] += jax.lax.dot(h, wo_ref[0].astype(jnp.float32),
+                                   preferred_element_type=jnp.float32)
 
-    @pl.when(jf == n_fb - 1)
-    def _finish():
-        o_ref[0] = (acc_sc[...] * w_ref[0].astype(jnp.float32)[:, :1]
-                    ).astype(o_ref.dtype)
+        @pl.when(jf == n_fb - 1)
+        def _finish():
+            y = acc_sc[...] * w_ref[0].astype(jnp.float32)[:, :1]
+            rows = ic * block_c + jax.lax.broadcasted_iota(
+                jnp.int32, y.shape, 0)
+            y = jnp.where(rows < cnt, y, 0.0)
+            o_ref[0] = y.astype(o_ref.dtype)
 
 
 def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
-            block_c: int = 128, block_f: int = 512, interpret: bool = False):
+            block_c: int = 128, block_f: int = 512, group_counts=None,
+            interpret: bool = False):
     """x: (E, C, D) dispatched tokens; wi/wg: (E, D, Fe); wo: (E, Fe, D);
-    weights: (E, C) routing weights (0 for empty capacity slots).
+    weights: (E, C) routing weights (0 for empty capacity slots);
+    group_counts: (E,) per-expert count of real leading slots (None = C) —
+    slots >= the count produce zeros and their tiles are skipped.
     Returns (E, C, D)."""
     E, C, D = x.shape
     Fe = wi.shape[2]
@@ -60,34 +84,41 @@ def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
     nc, nf = pl.cdiv(C, bc), pl.cdiv(Fe, bf)
     w = jnp.ones((E, C), jnp.float32) if weights is None else weights
     w = jnp.broadcast_to(w.astype(jnp.float32)[..., None], (E, C, 128))
+    cnt = (jnp.full((E,), C, jnp.int32) if group_counts is None
+           else jnp.clip(jnp.asarray(group_counts, jnp.int32), 0, C))
+    cnt = jnp.broadcast_to(cnt, (E,))
 
-    kernel = functools.partial(_kernel, act=act, n_fb=nf)
+    kernel = functools.partial(_kernel, act=act, n_fb=nf, block_c=bc)
     in_specs = [
-        pl.BlockSpec((1, bc, D), lambda e, i, j: (e, i, 0)),
-        pl.BlockSpec((1, D, bf), lambda e, i, j: (e, 0, j)),
+        pl.BlockSpec((1, bc, D), lambda e, i, j, *_: (e, i, 0)),
+        pl.BlockSpec((1, D, bf), lambda e, i, j, *_: (e, 0, j)),
     ]
     args = [x, wi]
     if wg is not None:
-        in_specs.append(pl.BlockSpec((1, D, bf), lambda e, i, j: (e, 0, j)))
+        in_specs.append(pl.BlockSpec((1, D, bf), lambda e, i, j, *_: (e, 0, j)))
         args.append(wg)
         kfn = kernel
     else:
-        kfn = lambda x_ref, wi_ref, wo_ref, w_ref, o_ref, acc: kernel(
-            x_ref, wi_ref, None, wo_ref, w_ref, o_ref, acc)
+        kfn = lambda cnt_ref, x_ref, wi_ref, wo_ref, w_ref, o_ref, acc: \
+            kernel(cnt_ref, x_ref, wi_ref, None, wo_ref, w_ref, o_ref, acc)
     in_specs += [
-        pl.BlockSpec((1, bf, D), lambda e, i, j: (e, j, 0)),
-        pl.BlockSpec((1, bc, 128), lambda e, i, j: (e, i, 0)),
+        pl.BlockSpec((1, bf, D), lambda e, i, j, *_: (e, j, 0)),
+        pl.BlockSpec((1, bc, 128), lambda e, i, j, *_: (e, i, 0)),
     ]
     args += [wo, w]
 
-    return pl.pallas_call(
-        kfn,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(E, nc, nf),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bc, D), lambda e, i, j: (e, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((E, C, D), x.dtype),
+        out_specs=pl.BlockSpec((1, bc, D), lambda e, i, j, *_: (e, i, 0)),
         scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+    )
+    return pl.pallas_call(
+        kfn,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, C, D), x.dtype),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(*args)
+    )(cnt, *args)

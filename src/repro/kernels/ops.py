@@ -2,7 +2,9 @@
 
 On TPU backends the pallas_call path is used; elsewhere (this CPU container)
 the kernels run under interpret=True when `force_pallas` (tests) or fall back
-to the jnp reference — bit-compatible semantics either way.
+to the jnp reference — bit-compatible semantics either way. The ragged
+valid-count arguments (`valid_count` / `group_counts` / `kv_count`) are
+traced, so one bucket-sized compile serves every occupancy.
 """
 from __future__ import annotations
 
@@ -21,28 +23,31 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "force_pallas"))
-def flash_attention(q, k, v, kv_valid=None, *, causal=True, window=0,
-                    force_pallas=False):
+def flash_attention(q, k, v, kv_valid=None, kv_count=None, *, causal=True,
+                    window=0, force_pallas=False):
     if _on_tpu() or force_pallas:
         return _flash(q, k, v, causal=causal, window=window,
-                      kv_valid=kv_valid, interpret=not _on_tpu())
+                      kv_valid=kv_valid, kv_count=kv_count,
+                      interpret=not _on_tpu())
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                   kv_valid=kv_valid)
+                                   kv_valid=kv_valid, kv_count=kv_count)
 
 
 @partial(jax.jit, static_argnames=("act", "force_pallas"))
-def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
-              force_pallas=False):
+def fused_mlp(x, wi, wo, wg=None, token_weights=None, valid_count=None, *,
+              act="swiglu", force_pallas=False):
     if _on_tpu() or force_pallas:
         return _fused_mlp(x, wi, wo, wg, token_weights, act=act,
-                          interpret=not _on_tpu())
-    return ref.fused_mlp_ref(x, wi, wo, wg, token_weights, act=act)
+                          valid_count=valid_count, interpret=not _on_tpu())
+    return ref.fused_mlp_ref(x, wi, wo, wg, token_weights, act=act,
+                             valid_count=valid_count)
 
 
 @partial(jax.jit, static_argnames=("act", "force_pallas"))
-def moe_gmm(x, wi, wo, wg=None, weights=None, *, act="swiglu",
-            force_pallas=False):
+def moe_gmm(x, wi, wo, wg=None, weights=None, group_counts=None, *,
+            act="swiglu", force_pallas=False):
     if _on_tpu() or force_pallas:
         return _moe_gmm(x, wi, wo, wg, weights, act=act,
-                        interpret=not _on_tpu())
-    return ref.moe_gmm_ref(x, wi, wo, wg, weights, act=act)
+                        group_counts=group_counts, interpret=not _on_tpu())
+    return ref.moe_gmm_ref(x, wi, wo, wg, weights, act=act,
+                           group_counts=group_counts)

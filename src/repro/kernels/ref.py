@@ -1,5 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (the correctness ground truth
-that tests/test_kernels.py sweeps shapes/dtypes against)."""
+that tests/test_kernels.py sweeps shapes/dtypes against). The ragged
+valid-count arguments mirror the kernels' scalar-prefetch contract: rows
+past the count produce exact zeros."""
 from __future__ import annotations
 
 import jax
@@ -9,8 +11,9 @@ NEG_INF = -1e30
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
-                        sm_scale=None):
-    """q: (B,Sq,H,Dh); k,v: (B,Sk,K,Dh) -> (B,Sq,H,Dh). Dense softmax."""
+                        sm_scale=None, kv_count=None):
+    """q: (B,Sq,H,Dh); k,v: (B,Sk,K,Dh) -> (B,Sq,H,Dh). Dense softmax.
+    kv_count: scalar or (B,) ragged prefix count over the q/kv buffers."""
     B, Sq, H, Dh = q.shape
     Sk, K = k.shape[1], k.shape[2]
     G = H // K
@@ -27,17 +30,27 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
     mask = jnp.broadcast_to(mask, (B, 1, 1, Sq, Sk))
     if kv_valid is not None:
         mask = mask & kv_valid[:, None, None, None, :]
+    if kv_count is not None:
+        cnt = jnp.broadcast_to(jnp.asarray(kv_count, jnp.int32).reshape(-1),
+                               (B,))
+        mask = mask & (kpos < cnt[:, None, None, None, None])
     s = jnp.where(mask, s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bkgqs,bskd->bqkgd", a, v.astype(jnp.float32))
-    return ctx.reshape(B, Sq, H, Dh).astype(q.dtype)
+    ctx = ctx.reshape(B, Sq, H, Dh)
+    if kv_count is not None:
+        ctx = jnp.where(
+            jnp.arange(Sq)[None, :, None, None] < cnt[:, None, None, None],
+            ctx, 0.0)
+    return ctx.astype(q.dtype)
 
 
 def _act(name):
     return jax.nn.silu if name == "swiglu" else jax.nn.gelu
 
 
-def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu"):
+def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
+                  valid_count=None):
     xf = x.astype(jnp.float32)
     h = xf @ wi.astype(jnp.float32)
     if wg is not None:
@@ -48,10 +61,13 @@ def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu"):
     y = h @ wo.astype(jnp.float32)
     if token_weights is not None:
         y = y * token_weights.astype(jnp.float32)[:, None]
+    if valid_count is not None:
+        y = jnp.where(jnp.arange(x.shape[0])[:, None] < valid_count, y, 0.0)
     return y.astype(x.dtype)
 
 
-def moe_gmm_ref(x, wi, wo, wg=None, weights=None, *, act="swiglu"):
+def moe_gmm_ref(x, wi, wo, wg=None, weights=None, *, act="swiglu",
+                group_counts=None):
     xf = x.astype(jnp.float32)
     h = jnp.einsum("ecd,edf->ecf", xf, wi.astype(jnp.float32))
     if wg is not None:
@@ -62,4 +78,8 @@ def moe_gmm_ref(x, wi, wo, wg=None, weights=None, *, act="swiglu"):
     y = jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32))
     if weights is not None:
         y = y * weights.astype(jnp.float32)[..., None]
+    if group_counts is not None:
+        cnt = jnp.asarray(group_counts, jnp.int32)
+        y = jnp.where(jnp.arange(x.shape[1])[None, :, None] < cnt[:, None, None],
+                      y, 0.0)
     return y.astype(x.dtype)

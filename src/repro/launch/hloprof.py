@@ -68,6 +68,25 @@ def biggest_tensors(hlo: str, n: int = 15):
     return out[:n]
 
 
+def compiled_flops(compiled) -> float:
+    """Total lowered FLOPs of a jax ``Compiled`` (XLA cost analysis).
+    This is the number the ragged FLOP-regression gate asserts on: a
+    capacity-bucket compile must lower FEWER flops at lower budgets."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0))
+
+
+def lowered_flops(fn, *args, static_argnames=(), **kwargs) -> float:
+    """jit-lower ``fn`` on ``args``/``kwargs`` and return its compiled FLOPs
+    (no execution). ``static_argnames`` forwards to jax.jit — pass the
+    ragged ``bucket`` through it."""
+    import jax
+    jitted = jax.jit(fn, static_argnames=static_argnames)
+    return compiled_flops(jitted.lower(*args, **kwargs).compile())
+
+
 def top_table(prof: dict, n: int = 20) -> str:
     rows = sorted(prof.items(), key=lambda kv: -kv[1]["bytes"])[:n]
     total = sum(v["bytes"] for v in prof.values())

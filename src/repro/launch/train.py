@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_elastic
-from repro.core.policy import as_spec_policy, capacity_anneal, solve_budget
+from repro.core.policy import (as_spec_policy, capacity_anneal, ragged_bucket,
+                               solve_budget)
 from repro.data import LMDataPipeline
 from repro.launch.mesh import make_production_mesh
 from repro.models import model_init, router_init, router_param_count
@@ -58,7 +59,7 @@ def build_trainer(arch: str, *, variant: str = "full", mesh=None,
         remat=remat, chunked=cfg.vocab_size > 0,
         compress_axis="pod" if (compression and mesh is not None
                                 and "pod" in mesh.axis_names) else None),
-        donate_argnums=(0,))
+        donate_argnums=(0,), static_argnames=("bucket",))
     pipe = LMDataPipeline(vocab=cfg.vocab_size, seq_len=seq_len,
                           global_batch=global_batch, seed=seed)
     return cfg, ecfg, params, state, step_fn, pipe
@@ -98,7 +99,14 @@ def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
         def policy_at(step: int):
             b = round(sched(step), 4)
             if b not in cache:   # solver output as traced jnp leaves
-                cache[b] = solve_budget(cfg, spec, b)
+                # ragged: the STATIC capacity bucket rides beside the traced
+                # policy — the whole anneal schedule costs one compile per
+                # bucket (<= routing.RAGGED_N_BUCKETS), each doing work
+                # proportional to its bucket instead of full dense shapes
+                pol = solve_budget(cfg, spec, b)
+                bkt = (ragged_bucket(pol, seq_len)
+                       if spec.routing_impl == "ragged" else None)
+                cache[b] = (pol, bkt)
             return cache[b]
 
     def do_step(step: int) -> dict:
@@ -106,8 +114,9 @@ def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
         if policy_at is None:
             box["state"], m = step_fn(box["state"], params, batch)
         else:
-            box["state"], m = step_fn(box["state"], params, batch,
-                                      policy_at(step))
+            pol, bkt = policy_at(step)
+            box["state"], m = step_fn(box["state"], params, batch, pol,
+                                      bucket=bkt)
         box["metrics"] = {k: float(v) for k, v in m.items()}
         if step % 10 == 0:
             log.info("step %d %s", step, box["metrics"])

@@ -10,9 +10,11 @@ Elasticity is split into a static ``ElasticSpec`` (which routers exist —
 shapes params and HLO) and a runtime ``ElasticPolicy`` (capacities, head/
 expert top-k, decode threshold theta, teacher/student flag) — see
 core/policy.py. Policy leaves that are python numbers are trace-time
-constants (the legacy static path, with top-k *gather* routing and real FLOP
-savings); traced leaves run full-shape compute with rank masking so ONE
-compiled block serves every budget, including per-request (B,) budgets.
+constants (ragged capacity-bucket or legacy gather routing, real FLOP
+savings); traced leaves serve every budget — including per-request (B,)
+budgets — from ONE compiled block per ragged bucket (with a static
+``bucket`` hint; see core/routing), or from a single full-shape rank-masked
+graph without one.
 
 Modes:
   base  : frozen pretrained model (the distillation teacher) — routers off.
@@ -21,8 +23,8 @@ Modes:
 
 Token routing semantics per mixer family:
   attention : top-k tokens attend among themselves (MoD semantics) — the
-              gather path delivers real FLOP savings in the lowered HLO;
-              the masked path computes the same math at full shapes.
+              ragged/gather paths deliver real FLOP savings in the lowered
+              HLO; the masked path computes the same math at full shapes.
   ssm/rglru : skipped tokens leave the recurrent state untouched (dt=0 /
               a=1 exact pass-through); dense-masked in both train and infer
               so train/infer semantics coincide.
@@ -136,12 +138,12 @@ def _lora_gate(lora, cap, student):
     return {**lora, "scale": 1.0 - jnp.asarray(full, jnp.float32)}
 
 
-def _head_weights(rp, h, spec, pol, cfg, auxes):
+def _head_weights(rp, h, spec, pol, cfg, auxes, valid=None):
     if rp is None or spec is None or "head" not in rp \
             or not spec.mha_head_routed:
         return None
     k = R.gate_topk(pol.mha_head_topk, pol.student, cfg.n_heads)
-    w, m, a = R.param_route_weights(rp["head"], h, k)
+    w, m, a = R.param_route_weights(rp["head"], h, k, valid=valid)
     auxes.append(a)
     hw = w * m
     full = R.is_full(k, cfg.n_heads)
@@ -151,12 +153,14 @@ def _head_weights(rp, h, spec, pol, cfg, auxes):
 
 
 def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
-    """Returns f(h_sub, pos_sub[, token_valid, dispatch_frac]) for the
-    MLP/MoE sub-block. The masked (traced-capacity) token-routing path hands
-    in ``token_valid``/``dispatch_frac`` so skipped tokens cannot evict kept
-    ones from expert capacity and the dispatch buffers match what the static
-    gather path would have compiled for the same budget."""
-    def f(h, _pos, token_valid=None, dispatch_frac=None):
+    """Returns f(h_sub, pos_sub[, token_valid, dispatch_frac, token_count])
+    for the MLP/MoE sub-block. The masked (traced-capacity) token-routing
+    path hands in ``token_valid``/``dispatch_frac`` so skipped tokens cannot
+    evict kept ones from expert capacity; the ragged bucket path hands in
+    ``token_valid``/``token_count`` (prefix buffers) — either way the
+    dispatch buffers match what the static gather path would have compiled
+    for the same budget."""
+    def f(h, _pos, token_valid=None, dispatch_frac=None, token_count=None):
         if cfg.moe is not None:
             if elastic_on and rp and "expert" in rp and mode != "base":
                 y, a = moe_apply(
@@ -164,14 +168,14 @@ def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
                     router_w=rp["expert"]["w"], normalize_to_m=True,
                     capacity_factor=cfg.moe.capacity_factor,
                     seq_chunk=cfg.moe.seq_chunk, token_valid=token_valid,
-                    dispatch_frac=dispatch_frac,
+                    dispatch_frac=dispatch_frac, token_count=token_count,
                     **_expert_args(pol, cfg.moe.n_experts))
             else:
                 y, a = moe_apply(
                     p["mlp"], h, act=cfg.act, top_k=cfg.moe.top_k,
                     capacity_factor=cfg.moe.capacity_factor,
                     seq_chunk=cfg.moe.seq_chunk, token_valid=token_valid,
-                    dispatch_frac=dispatch_frac)
+                    dispatch_frac=dispatch_frac, token_count=token_count)
             auxes.append(a)
             return y
         if (elastic_on and rp and "expert" in rp and mode != "base"
@@ -184,7 +188,7 @@ def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
                 ep, h, act=cfg.act,
                 router_w=rp["expert"]["w"], normalize_to_m=True,
                 seq_chunk=512, token_valid=token_valid,
-                dispatch_frac=dispatch_frac,
+                dispatch_frac=dispatch_frac, token_count=token_count,
                 **_expert_args(pol, spec.mlp_n_experts))
             auxes.append(a)
             return y
@@ -198,9 +202,14 @@ def block_apply(
     kind: str, p, rp, x, *, cfg, spec, pol=None, mode: str, elastic_on: bool,
     window: int = 0, positions=None, causal: bool = True,
     enc_kv=None, enc_valid=None, collect_cache: bool = False,
-    max_cache_len: int = 0,
+    max_cache_len: int = 0, bucket=None,
 ):
-    """x: (B,S,D) -> (x', aux[, cache]). Pre-norm residual block."""
+    """x: (B,S,D) -> (x', aux[, cache]). Pre-norm residual block.
+
+    ``bucket``: static ragged buffer size hint for traced-capacity token
+    routing under ``spec.routing_impl == "ragged"`` (see core/policy.
+    ragged_bucket). It must cover the largest per-row top-k this graph will
+    see; None falls back to the dense rank-masked path."""
     B, Seq, D = x.shape
     auxes = [R.RouteAux.zero()]
     if positions is None:
@@ -246,6 +255,34 @@ def block_apply(
             auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
                                        keep=keep))
             if collect_cache:  # scatter k/v back to full positions
+                k = _scatter_kv(k, idx, B, Seq)
+                v = _scatter_kv(v, idx, B, Seq)
+        elif (mode == "train" and spec.routing_impl == "ragged"
+              and (Kb := R.resolve_bucket(cap, Seq, bucket)) is not None):
+            # ragged capacity bucket: selected tokens gathered valid-first
+            # (position-ascending prefix), tail filled + masked. Static caps
+            # derive the bucket here (budgets sharing a bucket share the
+            # compile); traced caps ride the caller's static bucket hint.
+            logits = R.token_logits(rp["tok_mixer"], h)
+            scores = jax.nn.sigmoid(logits)
+            kk = _round_k(cap, Seq)
+            idx, pvalid, _ = R.ragged_select(scores, kk, Kb)
+            h_sel = R.gather_tokens(h, idx)
+            pos_sel = jnp.take_along_axis(
+                jnp.broadcast_to(positions, (B, Seq)), idx, 1)
+            hw = _head_weights(rp, h_sel, spec, pol, cfg, auxes,
+                               valid=pvalid)
+            y_sel, k, v = A.attn_apply(p["attn"], h_sel, cfg=cfg,
+                                       positions=pos_sel, causal=causal,
+                                       window=window, kv_valid=pvalid,
+                                       head_weights=hw, lora=lora)
+            w_sel = jnp.take_along_axis(scores, idx, 1) * pvalid
+            delta = R.scatter_add_tokens(
+                x, idx, y_sel * w_sel[..., None].astype(y_sel.dtype))
+            keep = R.topk_mask_dyn(scores, kk)
+            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
+                                       keep=keep))
+            if collect_cache:  # scatter valid k/v back to full positions
                 k = _scatter_kv(k, idx, B, Seq)
                 v = _scatter_kv(v, idx, B, Seq)
         else:  # threshold (infer/prefill), dense_mask, or traced capacity
@@ -314,24 +351,29 @@ def block_apply(
         if routed and spec is not None and spec.mlp_token_routed:
             cap_mlp = R.gate_capacity(pol.mlp_token_capacity, pol.student)
         if (cap_mlp is not None and mode == "train"
-                and not R.is_static(cap_mlp)):
-            # traced-capacity train path: dense compute, rank masking; bar
-            # skipped tokens from expert dispatch so the one-graph result
-            # matches the per-budget gather compile
+                and not R.is_static(cap_mlp)
+                and R.resolve_bucket(cap_mlp, Seq, bucket) is None):
+            # traced capacity without a covering bucket: dense compute, rank
+            # masking; bar skipped tokens from expert dispatch so the
+            # one-graph result matches the per-budget gather compile
             logits = R.token_logits(rp["tok_mlp"], h)
             scores = jax.nn.sigmoid(logits)
             keep, wtok = R.token_gate(logits, scores, cap_mlp, mode,
-                                      theta=pol.theta)
+                                      theta=pol.theta, mxu=True)
             y = f(h, positions, token_valid=keep, dispatch_frac=cap_mlp)
             delta = y * wtok[..., None].astype(y.dtype)
             auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
                                        keep=keep))
         else:
+            # ragged capacity buckets (static or traced+bucket), legacy
+            # gather, dense_mask, and inference thresholding all live in
+            # route_tokens; f is ragged-aware (token_valid/token_count), so
+            # the bucket tail is barred from MoE expert dispatch there
             delta, a = R.route_tokens(
                 (rp or {}).get("tok_mlp"), h, f, cap_mlp, mode,
                 positions=positions,
                 impl=spec.routing_impl if spec else "gather",
-                theta=pol.theta if pol is not None else 0.5)
+                theta=pol.theta if pol is not None else 0.5, bucket=bucket)
             auxes.append(a)
         x = x + delta
 

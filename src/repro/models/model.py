@@ -196,7 +196,7 @@ def select_context_tokens(rp, emb, spec, pol, mode: str):
 # ------------------------------ stack runner ---------------------------------
 
 def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
-               enc_kv=None, enc_valid=None, remat=False):
+               enc_kv=None, enc_valid=None, remat=False, bucket=None):
     aux0 = RouteAux.zero()
     static_pol = _pol_static(pol)
     layered = (not static_pol) and pol.has_layer_dim
@@ -211,7 +211,7 @@ def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
             ent.kind, lp, lrp, x, cfg=cfg, spec=spec,
             pol=(pol if static_pol else lpol), mode=mode,
             elastic_on=ent.elastic, window=ent.window, causal=causal,
-            enc_kv=enc_kv, enc_valid=enc_valid)
+            enc_kv=enc_kv, enc_valid=enc_valid, bucket=bucket)
 
     # §Perf H2: under a mesh, run each block shard_map-MANUAL over the batch
     # axes (model axis stays auto for GSPMD tensor parallelism). This makes
@@ -324,6 +324,10 @@ def _context(params, rparams, batch, cfg, spec, pol, mode, remat=False):
         enc_rp = rparams.get("encoder") if (rparams and mode != "base") else None
         x = batch["frames"].astype(dtype_of(cfg)) @ enc_p["in_proj"]
         period, _, _ = build_pattern(cfg.encoder, spec)
+        # NOTE: no `bucket` here — the caller's bucket is solved for the
+        # DECODER sequence length; an undersized bucket would silently drop
+        # selected encoder tokens. Traced encoder capacities take the dense
+        # fallback (static ones still derive their own bucket inline).
         x, aux = _run_stack(enc_p, enc_rp, x, cfg=cfg.encoder, spec=spec,
                             pol=pol, mode=mode, period=period, causal=False,
                             remat=remat)
@@ -335,12 +339,16 @@ def _context(params, rparams, batch, cfg, spec, pol, mode, remat=False):
 
 
 def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
-            return_hidden: bool = False, remat: bool = False, policy=None):
+            return_hidden: bool = False, remat: bool = False, policy=None,
+            bucket=None):
     """Full-sequence forward. Returns (logits | hidden | embeddings, aux).
 
     ``ecfg``: legacy ElasticConfig (static shim) or new ElasticSpec.
     ``policy``: optional ElasticPolicy; pass it as a jitted-function argument
-    to serve every compute budget from one compilation."""
+    to serve every compute budget from one compilation.
+    ``bucket``: static ragged capacity-bucket size for traced policies under
+    ``routing_impl == "ragged"`` (see core/policy.ragged_bucket) — one
+    compile per bucket, FLOPs proportional to the bucket."""
     spec, pol = as_spec_policy(ecfg, policy)
     period, _, _ = build_pattern(cfg, spec)
     if cfg.family == "encoder":
@@ -348,7 +356,7 @@ def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
         rp = rparams if mode != "base" else None
         x, aux = _run_stack(params, rp, x, cfg=cfg, spec=spec, pol=pol,
                             mode=mode, period=period, causal=False,
-                            remat=remat)
+                            remat=remat, bucket=bucket)
         return norm_apply(params["final_norm"], x, cfg.norm), aux
     enc_kv, enc_valid, aux0 = _context(params, rparams, batch, cfg, spec,
                                        pol, mode, remat)
@@ -356,7 +364,7 @@ def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
     rp = rparams if mode != "base" else None
     x, aux = _run_stack(params, rp, x, cfg=cfg, spec=spec, pol=pol, mode=mode,
                         period=period, causal=True, enc_kv=enc_kv,
-                        enc_valid=enc_valid, remat=remat)
+                        enc_valid=enc_valid, remat=remat, bucket=bucket)
     aux = aux + aux0
     x = norm_apply(params["final_norm"], x, cfg.norm)
     if return_hidden:
@@ -377,8 +385,9 @@ def cache_init(cfg, batch: int, max_seq: int):
 
 
 def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
-            max_cache_len: int = 0, policy=None):
-    """Forward + cache collection. Returns (logits_last (B,V), caches)."""
+            max_cache_len: int = 0, policy=None, bucket=None):
+    """Forward + cache collection. Returns (logits_last (B,V), caches).
+    ``bucket``: static ragged capacity-bucket hint (train-mode prefill)."""
     spec, pol = as_spec_policy(ecfg, policy)
     period, P, _ = build_pattern(cfg, spec)
     enc_kv, enc_valid, _ = _context(params, rparams, batch, cfg, spec, pol,
@@ -398,7 +407,7 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
             pol=(pol if static_pol else lpol), mode=mode,
             elastic_on=ent.elastic, window=ent.window, causal=True,
             enc_kv=enc_kv, enc_valid=enc_valid, collect_cache=True,
-            max_cache_len=L)
+            max_cache_len=L, bucket=bucket)
 
     def body(x, xs):
         lps = xs["p"]
@@ -448,7 +457,7 @@ def cache_insert(caches, row_caches, slot):
 
 def prefill_into_slot(params, rparams, batch, caches, slot, cfg, ecfg=None,
                       mode: str = "infer", max_cache_len: int = 0,
-                      policy=None, live_policy=None):
+                      policy=None, live_policy=None, bucket=None):
     """Admission path for continuous batching: prefill ONE request (batch
     leaves carry a leading dim of 1) and splice its caches — and its solved
     per-request policy row — into row ``slot`` of the live slot arrays.
@@ -458,7 +467,8 @@ def prefill_into_slot(params, rparams, batch, caches, slot, cfg, ecfg=None,
     through one compiled graph, so admissions never recompile.
     Returns (last-token logits (1, V), caches, live_policy)."""
     logits, row = prefill(params, rparams, batch, cfg, ecfg, mode=mode,
-                          max_cache_len=max_cache_len, policy=policy)
+                          max_cache_len=max_cache_len, policy=policy,
+                          bucket=bucket)
     caches = cache_insert(caches, row, slot)
     if live_policy is not None and policy is not None:
         live_policy = live_policy.set_row(slot, policy)

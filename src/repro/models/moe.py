@@ -56,7 +56,7 @@ def _expert_ffn(p, x_sel, act):
 def moe_apply(
     p, x, *, act: str, top_k: int, router_w=None, normalize_to_m: bool = False,
     capacity_factor: float = 1.25, seq_chunk: int = 2048, top_k_traced=None,
-    token_valid=None, dispatch_frac=None,
+    token_valid=None, dispatch_frac=None, token_count=None,
 ):
     """x: (B,S,D) -> (B,S,D), aux. router_w overrides p['router'] (elastic).
 
@@ -71,8 +71,19 @@ def moe_apply(
     ``dispatch_frac`` (traced token capacity) shrinks the per-expert
     capacity to what the static *gather* path would have used for the same
     budget — together they make the one-graph masked composition match the
-    gathered per-budget compile exactly in the single-chunk regime."""
+    gathered per-budget compile exactly in the single-chunk regime.
+
+    ``token_count`` is the ragged capacity-bucket contract: x is a bucket
+    buffer whose first N rows (per batch row, () or (B,)) are real tokens.
+    It derives the dispatch shrink (``dispatch_frac = count / S``) so a
+    bucket-sized compile dispatches exactly what the per-budget gather
+    compile would have."""
     B, S, D = x.shape
+    if token_count is not None and dispatch_frac is None:
+        if isinstance(token_count, (int, float)):
+            dispatch_frac = float(token_count) / S
+        else:
+            dispatch_frac = jnp.asarray(token_count, jnp.float32) / S
     rw = router_w if router_w is not None else p["router"]
     E = rw.shape[-1]
     k = min(top_k, E)
@@ -117,8 +128,18 @@ def moe_apply(
             ce = jnp.ceil(k_for_cap * kept / E * capacity_factor)
             cap_eff = jnp.minimum(kept,
                                   jnp.maximum(4, jnp.ceil(ce / 4) * 4))
-        red_frac = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))
-        load = E * jnp.sum(red_frac * jnp.mean(probs, axis=(0, 1)))
+        # load-balance stats over REAL tokens only: chunk padding and the
+        # ragged bucket's invalid tail must not dilute the denominator
+        # (else budgets sharing a bucket train against a weaker signal
+        # than the per-budget gather compile would have)
+        stat_w = jnp.broadcast_to(vc[None, :, None].astype(jnp.float32),
+                                  mask.shape[:2] + (1,))
+        if tvc is not None:
+            stat_w = stat_w * tvc[:, :, None].astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(stat_w), 1.0)
+        red_frac = jnp.sum(mask * stat_w, axis=(0, 1)) / denom
+        load = E * jnp.sum(
+            red_frac * jnp.sum(probs * stat_w, axis=(0, 1)) / denom)
         sc = jnp.where(mask, w, -jnp.inf)                     # (B,s,E)
         vals, idx = jax.lax.top_k(sc.transpose(0, 2, 1), cap)  # (B,E,C)
         keep = jnp.isfinite(vals)

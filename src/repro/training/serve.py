@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import ElasticPolicy, as_spec_policy, solve_budget
+from repro.core.policy import (ElasticPolicy, as_spec_policy, ragged_bucket,
+                               solve_budget)
 from repro.models import cache_init, decode_step, prefill_into_slot
 from repro.runtime.scheduler import RequestHandle, SlotScheduler
 
@@ -93,13 +94,18 @@ def sample_tokens(logits, temperature, top_k, seeds, positions):
 
 def _make_admit_fn(cfg, spec, mode, max_seq):
     """Admission graph: single-request prefill -> traced cache-row insert ->
-    policy row splice -> sample the first token. One compile per prompt
-    length; slot index, budgets, and sampling knobs are all traced."""
+    policy row splice -> sample the first token. One compile per (prompt
+    length, capacity bucket); slot index, budgets, and sampling knobs are
+    all traced. ``bucket`` is static and only non-None for top-k (train
+    mode) prefill under ragged routing, where it caps the compile count at
+    routing.RAGGED_N_BUCKETS per prompt length while the prefill FLOPs
+    track the budget."""
     def admit(params, rp, batch, caches, slot, policy, live_policy,
-              temperature, top_k, seed, t0):
+              temperature, top_k, seed, t0, bucket=None):
         logits, caches, live_policy = prefill_into_slot(
             params, rp, batch, caches, slot, cfg, spec, mode=mode,
-            max_cache_len=max_seq, policy=policy, live_policy=live_policy)
+            max_cache_len=max_seq, policy=policy, live_policy=live_policy,
+            bucket=bucket)
         tok = sample_tokens(logits, temperature[None], top_k[None],
                             seed[None], t0[None])[0]
         return tok, caches, live_policy
@@ -150,7 +156,8 @@ class ServingEngine:
         self._use_policy = self.spec is not None and mode != "base"
 
         # jitted entry points (cache sizes reported by compile_counts)
-        self._admit_fn = jax.jit(_make_admit_fn(cfg, self.spec, mode, max_seq))
+        self._admit_fn = jax.jit(_make_admit_fn(cfg, self.spec, mode, max_seq),
+                                 static_argnames=("bucket",))
         self._step_fn = jax.jit(_make_step_fn(cfg, self.spec, mode))
 
         # ---- live slot-array state ----
@@ -186,7 +193,9 @@ class ServingEngine:
     def compile_counts(self) -> dict:
         """Jit-cache sizes — admissions at any mix of budgets, slots,
         temperatures, or seeds must NOT add entries (asserted by tests and
-        benchmarks); only a new prompt length compiles."""
+        benchmarks); only a new prompt length compiles (and, for top-k
+        train-mode prefill under ragged routing, a new capacity bucket —
+        at most routing.RAGGED_N_BUCKETS per length)."""
         return {"prefill": self._admit_fn._cache_size(),
                 "decode": self._step_fn._cache_size()}
 
@@ -247,12 +256,20 @@ class ServingEngine:
         batch.update(self._extras.pop(handle.id, {}))
         pol_row = self._policy_for(req.budget if req.budget is not None
                                    else self.default_budget)
+        # ragged capacity bucket: static, resolved per admission from the
+        # (host-concrete) policy row. Only top-k routing (train mode) uses
+        # it — threshold (infer) prefill stays dense, so infer engines keep
+        # exactly one prefill compile per prompt length.
+        bucket = None
+        if (self._use_policy and self.mode == "train"
+                and self.spec.routing_impl == "ragged"):
+            bucket = ragged_bucket(pol_row, plen)
         seed = int(req.seed) & 0xFFFFFFFF        # any python int -> uint32
         tok0, self._caches, self._live_policy = self._admit_fn(
             self.params, self.rp, batch, self._caches, jnp.int32(slot),
             pol_row, self._live_policy,
             jnp.float32(req.temperature), jnp.int32(req.top_k),
-            jnp.uint32(seed), jnp.int32(plen))
+            jnp.uint32(seed), jnp.int32(plen), bucket=bucket)
         self._tok = self._tok.at[slot].set(tok0)
         self._t[slot] = plen
         self._active[slot] = True

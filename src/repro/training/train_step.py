@@ -164,23 +164,29 @@ def make_loss_fn(cfg, ecfg, *, mesh: Optional[Mesh] = None, remat: bool = False,
     """``ecfg``: legacy ElasticConfig or new ElasticSpec. The returned
     loss_fn takes an optional ``policy`` (ElasticPolicy pytree) — pass it as
     a traced argument to anneal capacities during distillation with zero
-    re-jits; omitted, the spec's default (static) policy applies."""
+    re-jits; omitted, the spec's default (static) policy applies — and an
+    optional ``bucket`` (python int, STATIC: jit with
+    static_argnames=("bucket",)): the ragged capacity-bucket size covering
+    the policy's token budgets (core/policy.ragged_bucket), so the student
+    forward lowers FLOPs proportional to the bucket. One compile per bucket,
+    <= routing.RAGGED_N_BUCKETS total across a whole anneal schedule."""
     use_hidden = chunked and cfg.family != "encoder" and cfg.vocab_size > 0
     spec, default_pol = as_spec_policy(ecfg)
 
-    def loss_fn(router_params, params, batch, policy=None):
+    def loss_fn(router_params, params, batch, policy=None, bucket=None):
         pol = policy if policy is not None else default_pol
         if cfg.family == "encoder":
             t_out, _ = forward(params, None, batch, cfg, spec, mode="base")
             s_out, aux = forward(params, router_params, batch, cfg, spec,
-                                 mode="train", remat=remat, policy=pol)
+                                 mode="train", remat=remat, policy=pol,
+                                 bucket=bucket)
             dist = cosine_distance(s_out, jax.lax.stop_gradient(t_out))
         elif use_hidden:
             h_t, _ = forward(params, None, batch, cfg, spec, mode="base",
                              return_hidden=True)
             h_s, aux = forward(params, router_params, batch, cfg, spec,
                                mode="train", return_hidden=True, remat=remat,
-                               policy=pol)
+                               policy=pol, bucket=bucket)
             direction = "rev" if "rev" in spec.distill_loss else "fwd"
             dist = chunked_topk_kl(
                 h_s, jax.lax.stop_gradient(h_t), _head_matrix(params, cfg),
@@ -191,7 +197,8 @@ def make_loss_fn(cfg, ecfg, *, mesh: Optional[Mesh] = None, remat: bool = False,
         else:
             t_out, _ = forward(params, None, batch, cfg, spec, mode="base")
             s_out, aux = forward(params, router_params, batch, cfg, spec,
-                                 mode="train", remat=remat, policy=pol)
+                                 mode="train", remat=remat, policy=pol,
+                                 bucket=bucket)
             dist = distill_loss(s_out, jax.lax.stop_gradient(t_out), spec)
         loss = (dist + spec.lambda_load * aux.load
                 + spec.lambda_topk * aux.topk)
@@ -205,10 +212,13 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
                     remat: bool = False, chunked: bool = True,
                     compress_axis: Optional[str] = None,
                     microbatch: Optional[int] = None):
-    """Returns train_step(state, params, batch, policy=None) -> (state,
-    metrics). `params` (frozen base model) is passed per-call so it can live
-    donated/sharded outside the state. `policy` (ElasticPolicy) is likewise
-    per-call and traced: capacity-annealing schedules re-use one compile.
+    """Returns train_step(state, params, batch, policy=None, bucket=None)
+    -> (state, metrics). `params` (frozen base model) is passed per-call so
+    it can live donated/sharded outside the state. `policy` (ElasticPolicy)
+    is likewise per-call and traced: capacity-annealing schedules re-use one
+    compile. `bucket` is the STATIC ragged capacity-bucket hint (jit the
+    step with static_argnames=("bucket",)): mixed-budget / annealed training
+    stays at one graph per bucket while lowered FLOPs track the budget.
 
     microbatch=M: gradient accumulation over M sequential slices of the
     global batch (lax.scan). Activation live-set scales 1/M; the router
@@ -217,9 +227,9 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
     loss_fn = make_loss_fn(cfg, ecfg, mesh=mesh, remat=remat, chunked=chunked)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def grads_of(rp, params, batch, policy):
+    def grads_of(rp, params, batch, policy, bucket):
         if not microbatch or microbatch <= 1:
-            (_, metrics), grads = vg(rp, params, batch, policy)
+            (_, metrics), grads = vg(rp, params, batch, policy, bucket)
             return grads, metrics
 
         def slice_mb(t, i):
@@ -231,7 +241,7 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
             mb = {k: slice_mb(v, i) for k, v in batch.items()}
             # NOTE: per-request (B,) policy leaves are not sliced here —
             # use scalar/per-layer policies with gradient accumulation
-            (_, metrics), g = vg(rp, params, mb, policy)
+            (_, metrics), g = vg(rp, params, mb, policy, bucket)
             g_acc = jax.tree.map(jnp.add, g_acc, g)
             m_acc = jax.tree.map(jnp.add, m_acc, metrics)
             return (g_acc, m_acc), None
@@ -247,8 +257,10 @@ def make_train_step(cfg, ecfg, *, lr, weight_decay: float = 0.0,
         return (jax.tree.map(lambda x: x * inv, g),
                 {k: v * inv for k, v in m.items()})
 
-    def train_step(state: TrainState, params, batch, policy=None):
-        grads, metrics = grads_of(state.router_params, params, batch, policy)
+    def train_step(state: TrainState, params, batch, policy=None,
+                   bucket=None):
+        grads, metrics = grads_of(state.router_params, params, batch, policy,
+                                  bucket)
         ef = state.ef
         if ef is not None:
             grads, ef = compress_grads(grads, ef, axis_name=compress_axis)

@@ -76,6 +76,79 @@ def test_moe_gmm_sweep(E, C, D, Fe, gated, dtype, key):
                                np.asarray(want, np.float32), **TOLS[dtype])
 
 
+@pytest.mark.parametrize("count", [1, 100, 130, 256])
+def test_flash_attention_kv_count_ragged(count, key):
+    """Traced valid-token count: keys/queries past it are skipped/zeroed."""
+    B, S, H, K, Dh = 2, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, K, Dh))
+    v = jax.random.normal(ks[2], (B, S, K, Dh))
+    got = flash_attention(q, k, v, causal=True, kv_count=jnp.int32(count),
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, kv_count=count)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-5)
+    assert not np.asarray(got[:, count:]).any(), "tail rows must be zero"
+    # the count is a hard prefix: it must equal full attention on the prefix
+    full = ref.flash_attention_ref(q[:, :count], k[:, :count], v[:, :count],
+                                   causal=True)
+    np.testing.assert_allclose(np.asarray(got[:, :count], np.float32),
+                               np.asarray(full, np.float32), atol=2e-5)
+
+
+def test_flash_attention_per_row_kv_count(key):
+    """(B,) counts: every batch row is cut at its own prefix length."""
+    B, S, H, K, Dh = 3, 256, 4, 4, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, K, Dh))
+    v = jax.random.normal(ks[2], (B, S, K, Dh))
+    cnt = jnp.asarray([7, 130, 256], jnp.int32)
+    got = flash_attention(q, k, v, causal=True, window=96, kv_count=cnt,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=96,
+                                   kv_count=cnt)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-5)
+
+
+@pytest.mark.parametrize("count", [1, 100, 256, 300])
+def test_fused_mlp_valid_count_ragged(count, key):
+    T, D, F = 300, 64, 256
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D))
+    wi = (jax.random.normal(ks[1], (D, F)) * 0.05)
+    wo = (jax.random.normal(ks[2], (F, D)) * 0.05)
+    wg = (jax.random.normal(ks[3], (D, F)) * 0.05)
+    tw = jax.random.uniform(ks[4], (T,))
+    got = fused_mlp(x, wi, wo, wg, tw, act="swiglu",
+                    valid_count=jnp.int32(count), interpret=True)
+    want = ref.fused_mlp_ref(x, wi, wo, wg, tw, act="swiglu",
+                             valid_count=count)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    assert not np.asarray(got[count:]).any()
+
+
+def test_moe_gmm_group_counts_ragged(key):
+    """(E,) per-expert occupancy: capacity slots past it are zeroed."""
+    E, C, D, Fe = 4, 128, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (E, C, D))
+    wi = (jax.random.normal(ks[1], (E, D, Fe)) * 0.05)
+    wo = (jax.random.normal(ks[2], (E, Fe, D)) * 0.05)
+    w = jax.random.uniform(ks[4], (E, C))
+    cnt = jnp.asarray([0, 5, 100, 128], jnp.int32)
+    got = moe_gmm(x, wi, wo, None, w, act="gelu", group_counts=cnt,
+                  interpret=True)
+    want = ref.moe_gmm_ref(x, wi, wo, None, w, act="gelu", group_counts=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    for e in range(E):
+        assert not np.asarray(got[e, int(cnt[e]):]).any()
+
+
 def test_flash_matches_model_blocked_sdpa(key):
     """The Pallas kernel, the blocked jnp path, and the dense path agree."""
     from repro.models.attention import blocked_sdpa, sdpa, _mask

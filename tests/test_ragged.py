@@ -1,0 +1,242 @@
+"""Ragged capacity-bucket execution (ISSUE 3).
+
+Covers the acceptance properties:
+  * FLOP-regression gate: on the toy config, ragged budget-0.5 lowers
+    <= 0.7x the FLOPs of budget-1.0, FLOPs decrease monotonically across
+    budgets {1.0, 0.75, 0.5, 0.25}, and the dense reference path stays flat
+    (the gap this PR exists to close);
+  * the three execution paths (ragged / gather / dense) agree on outputs
+    and router gradients, across static and traced capacities;
+  * per-request (B,) mixed budgets in one ragged batch match per-row runs;
+  * budget 1.0 under the ragged default remains the bit-exact teacher;
+  * ServingEngine keeps {prefill: 1, decode: 1} compile counts per bucket
+    set across mixed budgets with the ragged default spec.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ElasticConfig
+from repro.configs.elasti_toy import toy_lm
+from repro.core.policy import (ElasticPolicy, ElasticSpec, ragged_bucket,
+                               spec_from_config, policy_from_config)
+from repro.core.routing import RAGGED_N_BUCKETS, capacity_buckets
+from repro.launch.hloprof import lowered_flops
+from repro.models import forward, model_init, router_init
+from repro.training import GenRequest, ServingEngine
+from tests.conftest import f32
+
+N_EXPERTS = 4
+FULL_KW = dict(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+               mha_head_topk=2, mlp_n_experts=N_EXPERTS, mlp_expert_topk=2,
+               lora_rank=1)
+
+
+def _setup(key, s=24, **ecfg_kw):
+    cfg = f32(toy_lm())
+    ecfg = ElasticConfig(**ecfg_kw)
+    params = model_init(key, cfg, ecfg)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, s), dtype=np.int32))}
+    return cfg, ecfg, params, rp, batch
+
+
+# --------------------------- FLOP regression gate ----------------------------
+
+def _flops_at(params, rp, batch, cfg, spec, budget):
+    pol = ElasticPolicy.uniform(budget, static=True)
+    return lowered_flops(
+        lambda rp, b: forward(params, rp, b, cfg, spec, mode="train",
+                              policy=pol)[0], rp, batch)
+
+
+def test_flop_gate_ragged_budget_half_saves_30pct(key):
+    """The whole point of the PR: lowered FLOPs must track the budget.
+    Guards against silent densification of the ragged path."""
+    # small vocab so the (fixed) lm-head matmul doesn't drown the layers
+    cfg = f32(toy_lm(vocab=256))
+    spec = ElasticSpec(mha_token_routed=True, mlp_token_routed=True)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    batch = {"tokens": jnp.zeros((2, 256), jnp.int32)}
+
+    fl = {b: _flops_at(params, rp, batch, cfg, spec, b)
+          for b in (1.0, 0.75, 0.5, 0.25)}
+    assert fl[0.5] <= 0.7 * fl[1.0], fl
+    assert fl[1.0] > fl[0.75] > fl[0.5] > fl[0.25], fl
+    # the dense reference path is flat — the gap this refactor closes
+    dense = dataclasses.replace(spec, routing_impl="dense_mask")
+    fd = {b: _flops_at(params, rp, batch, cfg, dense, b) for b in (1.0, 0.5)}
+    assert fd[0.5] > 0.95 * fd[1.0], fd
+
+
+def test_flop_gate_traced_policy_with_bucket(key):
+    """Traced policies + static bucket hint: same FLOP savings, and budgets
+    sharing a bucket share ONE compile."""
+    cfg = f32(toy_lm(vocab=256))
+    spec = ElasticSpec(mha_token_routed=True, mlp_token_routed=True)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    batch = {"tokens": jnp.zeros((2, 256), jnp.int32)}
+
+    def fwd(rp, batch, policy, bucket=None):
+        return forward(params, rp, batch, cfg, spec, mode="train",
+                       policy=policy, bucket=bucket)[0]
+
+    def traced_flops(budget):
+        pol = jax.tree.map(jnp.asarray, ElasticPolicy.uniform(budget))
+        return lowered_flops(fwd, rp, batch, pol,
+                             bucket=ragged_bucket(pol, 256),
+                             static_argnames=("bucket",))
+
+    f_half, f_full = traced_flops(0.5), traced_flops(1.0)
+    assert f_half <= 0.7 * f_full
+    # one jit entry per bucket, not per budget
+    jitted = jax.jit(fwd, static_argnames=("bucket",))
+    for b in (0.30, 0.40, 0.45, 0.5):   # all land in the same bucket
+        pol = jax.tree.map(jnp.asarray, ElasticPolicy.uniform(b))
+        jitted(rp, batch, pol, bucket=ragged_bucket(pol, 256))
+    assert jitted._cache_size() == 1
+    assert len(capacity_buckets(256)) <= RAGGED_N_BUCKETS
+
+
+# ------------------------- execution-path parity ----------------------------
+
+# 0.4 lands OFF a bucket boundary (k=10 < bucket=12 at s=24): the invalid
+# tail is non-empty, exercising the masked-slop regime
+@pytest.mark.parametrize("budget", [0.25, 0.4, 0.5, 0.75])
+def test_ragged_matches_gather_static(key, budget):
+    cfg, ecfg, params, rp, batch = _setup(key, **FULL_KW)
+    kw = dict(mlp_token_capacity=budget, mha_token_capacity=budget,
+              mha_head_topk=max(1, round(budget * cfg.n_heads)),
+              mlp_n_experts=N_EXPERTS,
+              mlp_expert_topk=max(1, round(budget * N_EXPERTS)), lora_rank=1)
+    e_r = ElasticConfig(**kw)                              # ragged default
+    e_g = dataclasses.replace(e_r, routing_impl="gather")
+    l_r, a_r = forward(params, rp, batch, cfg, e_r, mode="train")
+    l_g, a_g = forward(params, rp, batch, cfg, e_g, mode="train")
+    np.testing.assert_allclose(np.asarray(l_r), np.asarray(l_g), atol=1e-4)
+    np.testing.assert_allclose(float(a_r.sel_rate), float(a_g.sel_rate),
+                               rtol=1e-5)
+
+
+def test_ragged_traced_bucket_matches_static_and_dense(key):
+    cfg, ecfg, params, rp, batch = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    l_s, _ = forward(params, rp, batch, cfg, ecfg, mode="train")
+    pol = jax.tree.map(jnp.asarray, policy_from_config(ecfg))
+    s = batch["tokens"].shape[1]
+    l_t, _ = forward(params, rp, batch, cfg, spec, mode="train", policy=pol,
+                     bucket=ragged_bucket(pol, s))
+    np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_t), atol=1e-4)
+    # no bucket hint -> dense rank-masked fallback, same math
+    l_d, _ = forward(params, rp, batch, cfg, spec, mode="train", policy=pol)
+    np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_d), atol=1e-4)
+
+
+def test_ragged_router_grads_match_gather(key):
+    # capacity 0.4: k=10 < bucket=12, so aux statistics (load/topk) must
+    # exclude the invalid tail to match the gather compile
+    cfg, ecfg, params, rp, batch = _setup(
+        key, **{**FULL_KW, "mlp_token_capacity": 0.4,
+                "mha_token_capacity": 0.4})
+    e_g = dataclasses.replace(ecfg, routing_impl="gather")
+
+    def loss(rp, e):
+        out, aux = forward(params, rp, batch, cfg, e, mode="train")
+        return jnp.sum(out ** 2) * 1e-6 + aux.topk + aux.load
+
+    g_r = jax.grad(loss)(rp, ecfg)
+    g_g = jax.grad(loss)(rp, e_g)
+    for pr, pg in zip(jax.tree.leaves(g_r), jax.tree.leaves(g_g)):
+        np.testing.assert_allclose(np.asarray(pr), np.asarray(pg), atol=1e-4)
+    assert sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g_r)) > 0
+
+
+def test_ragged_mixed_per_request_budgets_match_solo_rows(key):
+    """One (B,)-policy ragged batch (bucket covering the largest budget)
+    reproduces each row's own smaller-bucket compile exactly."""
+    cfg, ecfg, params, rp, batch = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    s = batch["tokens"].shape[1]
+    budgets = (0.25, 0.75)
+    pols = [ElasticPolicy.uniform(b, n_heads=cfg.n_heads,
+                                  n_experts=N_EXPERTS) for b in budgets]
+    mixed = ElasticPolicy.stack(pols)
+    l_m, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                     policy=mixed, bucket=ragged_bucket(mixed, s))
+    for i, b in enumerate(budgets):
+        row = jax.tree.map(jnp.asarray, pols[i])
+        l_i, _ = forward(params, rp, {"tokens": batch["tokens"][i:i + 1]},
+                         cfg, spec, mode="train", policy=row,
+                         bucket=ragged_bucket(row, s))
+        np.testing.assert_allclose(np.asarray(l_m[i:i + 1]),
+                                   np.asarray(l_i), atol=1e-4)
+
+
+def test_ragged_budget_one_is_bit_exact_teacher(key):
+    cfg, ecfg, params, rp, batch = _setup(key, **FULL_KW)
+    spec = spec_from_config(ecfg)
+    assert spec.routing_impl == "ragged"
+    teacher, _ = forward(params, None, batch, cfg, None, mode="base")
+    for pol in (ElasticPolicy.uniform(1.0, n_heads=cfg.n_heads,
+                                      n_experts=N_EXPERTS),
+                ElasticPolicy.teacher()):
+        out, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                         policy=pol)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(teacher),
+                                   atol=1e-5)
+    # static full budget through the ragged impl is also lossless
+    assert ragged_bucket(ElasticPolicy.uniform(1.0), 24) is None
+
+
+# ------------------------------- serving ------------------------------------
+
+def test_serving_ragged_spec_keeps_compile_counts_flat(key):
+    """Acceptance: with routing_impl="ragged", compile_counts() stays
+    {prefill: 1, decode: 1} per bucket set across mixed budgets (threshold
+    decode/prefill never buckets; only train-mode top-k prefill would add
+    <= RAGGED_N_BUCKETS entries)."""
+    cfg, ecfg, params, rp, batch = _setup(key, **FULL_KW)
+    assert ecfg.routing_impl == "ragged"
+    engine = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                           batch_size=4, max_seq=24)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+               for _ in range(4)]
+    budgets = [0.4, 0.7, 1.0, None]
+    mixed = engine.generate([GenRequest(p, 4, budget=b)
+                             for p, b in zip(prompts, budgets)])
+    for p, b, got in zip(prompts, budgets, mixed):
+        sep = engine.generate([GenRequest(p, 4, budget=b)])[0]
+        np.testing.assert_array_equal(got, sep)
+    assert engine.compile_counts() == {"prefill": 1, "decode": 1}
+
+
+def test_serving_train_mode_buckets_prefill(key):
+    """Train-mode (top-k) admissions resolve a static capacity bucket per
+    request: prefill compiles per bucket (<= RAGGED_N_BUCKETS per prompt
+    length, never per budget) and mixed-budget outputs still match solo
+    runs."""
+    cfg, ecfg, params, rp, batch = _setup(key, **FULL_KW)
+    engine = ServingEngine(params, rp, cfg, ecfg, mode="train",
+                           batch_size=4, max_seq=24)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+               for _ in range(3)]
+    budgets = [0.3, 0.35, 0.8]          # first two share a bucket
+    mixed = engine.generate([GenRequest(p, 4, budget=b)
+                             for p, b in zip(prompts, budgets)])
+    counts = engine.compile_counts()
+    assert counts["decode"] == 1
+    assert counts["prefill"] <= RAGGED_N_BUCKETS
+    solo = ServingEngine(params, rp, cfg, ecfg, mode="train",
+                         batch_size=4, max_seq=24)
+    for p, b, got in zip(prompts, budgets, mixed):
+        np.testing.assert_array_equal(
+            got, solo.generate([GenRequest(p, 4, budget=b)])[0])

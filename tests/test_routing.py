@@ -99,6 +99,132 @@ def test_bce_topk_loss_direction(key):
         R.bce_topk_loss(logits, bad))
 
 
+def test_capacity_buckets_and_bucket_for():
+    """Bucket sizes are distinct, increasing, aligned, and end at S."""
+    bks = R.capacity_buckets(4096)
+    assert bks == (1024, 2048, 3072, 4096)
+    assert all(b % 128 == 0 for b in bks)
+    small = R.capacity_buckets(24)
+    assert small[-1] == 24 and len(small) <= 4
+    assert list(small) == sorted(set(small))
+    for s in (24, 256, 1000, 4096):
+        for k in (1, s // 3, s - 1, s):
+            b = R.bucket_for(k, s)
+            assert k <= b <= s
+            # smallest covering bucket
+            assert all(bb >= b or bb < k for bb in R.capacity_buckets(s))
+
+
+def test_ragged_select_partition(key):
+    """Prefix = the exact top-k token set in ascending position order."""
+    scores = jax.random.uniform(key, (3, 40))
+    k, bucket = 13, 20
+    idx, valid, count = R.ragged_select(scores, k, bucket)
+    assert count == k and idx.shape == (3, bucket)
+    assert bool(valid[:, :k].all()) and not bool(valid[:, k:].any())
+    pref = np.asarray(idx[:, :k])
+    assert (np.diff(pref, axis=-1) > 0).all(), "prefix must be causal order"
+    topk = np.asarray(R.topk_indices(scores, k))
+    np.testing.assert_array_equal(pref, topk)
+    # tail holds distinct non-selected tokens (scatter-safe)
+    full = np.asarray(idx)
+    assert all(len(set(r)) == bucket for r in full)
+    # traced per-row k
+    kb = jnp.asarray([5.0, 13.0, 20.0])
+    idx2, valid2, count2 = R.ragged_select(scores, kb, bucket)
+    np.testing.assert_array_equal(np.asarray(count2), [5, 13, 20])
+    np.testing.assert_array_equal(
+        np.asarray(valid2.sum(-1)), [5, 13, 20])
+    np.testing.assert_array_equal(
+        np.asarray(idx2[1, :13]), topk[1])
+
+
+def _route_setup(key, d=16, s=24, b=2):
+    rp = R.token_router_init(key, d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (d, d)) * 0.1
+    return rp, x, (lambda h, pos: h @ w)
+
+
+def test_route_tokens_ragged_matches_gather_and_dense(key):
+    """All three execution paths select the same tokens and weights."""
+    rp, x, f = _route_setup(key)
+    # 0.4 sits off the bucket grid (k=10 < bucket=12): non-empty tail
+    for cap in (0.25, 0.4, 0.5, 0.75):
+        y_g, a_g = R.route_tokens(rp, x, f, cap, "train", impl="gather")
+        y_d, a_d = R.route_tokens(rp, x, f, cap, "train", impl="dense_mask")
+        y_r, a_r = R.route_tokens(rp, x, f, cap, "train", impl="ragged")
+        np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_g),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_d),
+                                   atol=1e-5)
+        np.testing.assert_allclose(float(a_r.topk), float(a_g.topk),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(a_r.sel_rate), float(a_d.sel_rate),
+                                   rtol=1e-5)
+
+
+def test_route_tokens_ragged_traced_capacity_and_bucket(key):
+    """A traced capacity + static bucket reproduces the static compile,
+    including per-request (B,) mixed budgets in one batch."""
+    rp, x, f = _route_setup(key)
+    y_s, _ = R.route_tokens(rp, x, f, 0.5, "train", impl="ragged")
+    y_t, _ = R.route_tokens(rp, x, f, jnp.asarray(0.5), "train",
+                            impl="ragged", bucket=12)
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_t), atol=1e-5)
+    # traced capacity with NO bucket falls back to the dense path (same math)
+    y_nb, _ = R.route_tokens(rp, x, f, jnp.asarray(0.5), "train",
+                             impl="ragged")
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_nb), atol=1e-5)
+    # per-request budgets: each row matches its own static run
+    caps = jnp.asarray([0.25, 0.75])
+    y_b, _ = R.route_tokens(rp, x, f, caps, "train", impl="ragged",
+                            bucket=18)
+    for i, c in enumerate((0.25, 0.75)):
+        y_i, _ = R.route_tokens(rp, x[i:i + 1], f, float(c), "train",
+                                impl="ragged")
+        np.testing.assert_allclose(np.asarray(y_b[i:i + 1]),
+                                   np.asarray(y_i), atol=1e-5)
+
+
+def test_route_tokens_ragged_gradients_flow(key):
+    """Straight-through grads reach the router through the bucket gather."""
+    d = 8
+    rp = R.token_router_init(key, d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, d))
+    f = lambda h, pos: jnp.tanh(h)
+
+    def loss(rp, impl, bucket=None, cap=0.5):
+        y, aux = R.route_tokens(rp, x, f, cap, "train", impl=impl,
+                                bucket=bucket)
+        return jnp.sum(y ** 2) + aux.topk
+
+    g_r = jax.grad(loss)(rp, "ragged")
+    g_g = jax.grad(loss)(rp, "gather")
+    assert float(jnp.abs(g_r["w"]).sum()) > 0
+    np.testing.assert_allclose(np.asarray(g_r["w"]), np.asarray(g_g["w"]),
+                               atol=1e-5)
+    g_t = jax.grad(loss)(rp, "ragged", 8, jnp.asarray(0.5))
+    np.testing.assert_allclose(np.asarray(g_r["w"]), np.asarray(g_t["w"]),
+                               atol=1e-5)
+
+
+def test_param_route_weights_valid_mask_excludes_tail(key):
+    """Ragged tail rows must not contribute to the load-balance aux."""
+    d, m = 16, 4
+    rp = R.param_router_init(key, d, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, d))
+    pad = jnp.concatenate([x, 100.0 * jnp.ones((2, 4, d))], axis=1)
+    valid = jnp.arange(12)[None, :] < 8
+    _, _, a_ref = R.param_route_weights(rp, x, top_k=2)
+    _, _, a_msk = R.param_route_weights(rp, pad, top_k=2,
+                                        valid=jnp.broadcast_to(valid, (2, 12)))
+    np.testing.assert_allclose(float(a_msk.load), float(a_ref.load),
+                               rtol=1e-5)
+    _, _, a_bad = R.param_route_weights(rp, pad, top_k=2)
+    assert abs(float(a_bad.load) - float(a_ref.load)) > 1e-6
+
+
 def test_load_balance_penalizes_collapse():
     """Switch-style load loss: collapsed routing (all tokens -> expert 0)
     must score higher than a decisively balanced router."""
