@@ -39,6 +39,32 @@ def timed(fn, *args, iters: int = 3):
     return out, (time.perf_counter() - t0) / iters * 1e6
 
 
+def timed_median_grid(cells, iters: int = 7, warmup: int = 2):
+    """Paired wall-clock comparison of several thunks: every cell is warmed
+    up (untimed), then the timed iterations run ROUND-ROBIN across cells —
+    cell A's i-th sample and cell B's i-th sample are adjacent in time, so
+    machine noise (CPU contention, frequency scaling) hits every cell with
+    the same distribution instead of whichever happened to run last.
+    ``cells``: {name: thunk}; returns {name: (min_us, median_us)} of
+    per-iteration block_until_ready-bracketed timings, warmup excluded.
+    On shared CI hosts the MIN is the robust cost estimate (external
+    contention only ever adds time); the median documents typical latency."""
+    for fn in cells.values():
+        out = None
+        for _ in range(max(1, warmup)):
+            out = fn()
+        jax.block_until_ready(out)
+    times = {name: [] for name in cells}
+    for _ in range(iters):
+        for name, fn in cells.items():
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out)
+            times[name].append((time.perf_counter() - t0) * 1e6)
+    return {name: (float(np.min(ts)), float(np.median(ts)))
+            for name, ts in times.items()}
+
+
 def toy_cfg(**kw):
     cfg = get_config("toy-lm")
     return dataclasses.replace(cfg, dtype="float32", **kw)

@@ -5,13 +5,25 @@ For each budget in a sweep, lowers the toy-config train-mode forward under
 path, and records per-step lowered FLOPs (XLA cost analysis — the number the
 CI FLOP gate asserts on) plus wall-clock of the jitted forward. Dense is the
 pre-refactor behavior: every budget costs full-budget compute; ragged FLOPs
-must track the budget.
+must track the budget — and, since the RoutingPlan/identity-path refactor,
+so must WALL-CLOCK (the gates at the bottom are the CI regression fence):
+
+  * budget 1.0 rides the identity graph — no partition/gather/scatter at
+    all — so it must stay within 1.15x of the dense teacher forward;
+  * budget 0.5 must be strictly faster than the dense budget-1.0 forward
+    (FLOP savings that don't reach the clock are the bug this fence holds).
+
+Timing methodology: explicit warmup excluded from the timed region, every
+timed iteration bracketed by block_until_ready, each budget's ragged/dense
+cells sampled ROUND-ROBIN so time-varying machine noise hits both equally
+(``common.timed_median_grid`` — the pre-refactor sequential timing is how
+a 0.53x-FLOP forward once "measured" slower than dense). Rows report the
+min-of-N as ``us_*`` (the robust graph-cost estimate on shared CI hosts,
+where contention only ever adds time) plus the median-of-N as
+``us_*_med``, and carry the resolved kernel backend.
 
 Usage:
     python benchmarks/ragged_speedup.py [--smoke] [--out BENCH_ragged.json]
-
-Emits the harness's `name,us_per_call,derived` rows and writes the JSON
-artifact uploaded by CI next to BENCH_serving.json.
 """
 from __future__ import annotations
 
@@ -25,10 +37,11 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, "benchmarks")
-from common import emit, timed  # noqa: E402
+from common import emit, timed_median_grid  # noqa: E402
 
 from repro.configs.elasti_toy import toy_lm  # noqa: E402
 from repro.core.policy import ElasticPolicy, ElasticSpec, ragged_bucket  # noqa: E402
+from repro.kernels.ops import resolve_backend  # noqa: E402
 from repro.launch.hloprof import lowered_flops  # noqa: E402
 from repro.models import forward, model_init, router_init  # noqa: E402
 
@@ -56,11 +69,22 @@ def main():
     ap.add_argument("--out", default="BENCH_ragged.json")
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=7,
+                    help="timed iterations (min + median reported)")
+    ap.add_argument("--attempts", type=int, default=4,
+                    help="re-time passes on a wall-clock gate miss "
+                         "(contention only inflates; best min kept)")
     args = ap.parse_args()
-    seq = args.seq or (128 if args.smoke else 512)
+    # smoke stays >= 384: below that the toy forward is dominated by
+    # per-op XLA-CPU overheads (the ragged graph carries ~1.8x the op
+    # count for its plan machinery) and fusion-shape luck, turning the
+    # wall-clock gates into a lottery; from ~384 compute dominates and
+    # the ratios track FLOPs (0.46x at seq 512, budget 0.5)
+    seq = args.seq or (384 if args.smoke else 512)
     cfg, spec, params, rp, batch = build(
         seq, args.batch, vocab=256, d_model=128, n_layers=4)
     dense = dataclasses.replace(spec, routing_impl="dense_mask")
+    backend = resolve_backend(spec.kernel_backend)
 
     def make_fwd(sp):
         def f(rp, batch, policy, bucket=None):
@@ -71,22 +95,63 @@ def main():
     f_ragged = make_fwd(spec)
     f_dense = make_fwd(dense)
     jit_ragged = jax.jit(f_ragged, static_argnames=("bucket",))
-    jit_dense = jax.jit(f_dense, static_argnames=("bucket",))
+    # one jit object PER dense cell: the dense graph is budget-independent,
+    # and sharing one executable across all four budget cells would hand it
+    # 4x the executions per round-robin pass — a systematic icache/branch
+    # hotness edge over the per-bucket ragged executables it is compared to
+    jit_dense_cells = {b: jax.jit(f_dense, static_argnames=("bucket",))
+                       for b in BUDGETS}
 
-    rows = []
+    # ONE round-robin grid over every (impl, budget) cell: all the gate
+    # comparisons below — including the cross-budget ragged(0.5) vs
+    # dense(1.0) one — are between samples interleaved in time, so
+    # drifting machine load cannot favor whichever cell ran in a quieter
+    # minute
+    cells, meta = {}, {}
     for b in BUDGETS:
         pol = jax.tree.map(jnp.asarray, ElasticPolicy.uniform(b))
         bkt = ragged_bucket(pol, seq)
-        fl_r = lowered_flops(f_ragged, rp, batch, pol, bucket=bkt,
-                             static_argnames=("bucket",))
-        fl_d = lowered_flops(f_dense, rp, batch, pol,
-                             static_argnames=("bucket",))
-        _, us_r = timed(lambda: jit_ragged(rp, batch, pol, bucket=bkt))
-        _, us_d = timed(lambda: jit_dense(rp, batch, pol))
+        meta[b] = (bkt,
+                   lowered_flops(f_ragged, rp, batch, pol, bucket=bkt,
+                                 static_argnames=("bucket",)),
+                   lowered_flops(f_dense, rp, batch, pol,
+                                 static_argnames=("bucket",)))
+        cells[("ragged", b)] = (
+            lambda pol=pol, bkt=bkt: jit_ragged(rp, batch, pol, bucket=bkt))
+        cells[("dense", b)] = (
+            lambda pol=pol, b=b: jit_dense_cells[b](rp, batch, pol))
+
+    def gates_pass(us):
+        r10, d10 = us[("ragged", 1.0)][0], us[("dense", 1.0)][0]
+        return (r10 <= 1.15 * d10
+                and us[("ragged", 0.5)][0] < d10)
+
+    # Shared CI hosts show +-20% minute-scale load swings even on min-of-N
+    # (four IDENTICAL dense graphs can spread 49-66ms in one pass), and
+    # contention only ever INFLATES a timing — so on a gate miss, re-time
+    # (compiles are cached; this is seconds) and keep each cell's best
+    # observed min. A genuinely regressed graph keeps failing; a noisy
+    # window does not.
+    us = timed_median_grid(cells, iters=args.iters)
+    for _ in range(args.attempts - 1):
+        # the retries only serve the ref-backend CI gates asserted below
+        if backend != "ref" or gates_pass(us):
+            break
+        again = timed_median_grid(cells, iters=args.iters, warmup=1)
+        us = {k: (min(us[k][0], again[k][0]), min(us[k][1], again[k][1]))
+              for k in us}
+
+    rows = []
+    for b in BUDGETS:
+        bkt, fl_r, fl_d = meta[b]
         rows.append({"budget": b, "bucket": bkt, "seq": seq,
+                     "backend": backend,
                      "flops_ragged": fl_r, "flops_dense": fl_d,
-                     "us_ragged": us_r, "us_dense": us_d})
-        emit(f"ragged_fwd_b{b:g}", us_r,
+                     "us_ragged": us[("ragged", b)][0],
+                     "us_dense": us[("dense", b)][0],
+                     "us_ragged_med": us[("ragged", b)][1],
+                     "us_dense_med": us[("dense", b)][1]})
+        emit(f"ragged_fwd_b{b:g}", us[("ragged", b)][0],
              f"{fl_r / 1e6:.1f}MF_vs_{fl_d / 1e6:.1f}MF_dense")
 
     with open(args.out, "w") as f:
@@ -99,9 +164,26 @@ def main():
     assert flops == sorted(flops, reverse=True), \
         f"ragged FLOPs must decrease with budget: {flops}"
     assert ratio <= 0.7, f"budget-0.5 FLOP ratio {ratio:.3f} > 0.7"
+    # ---- wall-clock regression gates (the FLOPs -> latency fence) ----
+    # On the CPU ref backend these are deterministic enough for CI: the
+    # identity graph must not cost more than the dense teacher, and a
+    # half-budget ragged forward must beat the dense full-budget one.
+    if backend == "ref":
+        assert base["us_ragged"] <= 1.15 * base["us_dense"], (
+            f"identity path regressed: ragged(1.0) {base['us_ragged']:.0f}us"
+            f" > 1.15x dense(1.0) {base['us_dense']:.0f}us")
+        assert half["us_ragged"] < base["us_dense"], (
+            f"FLOP savings not reaching the clock: ragged(0.5) "
+            f"{half['us_ragged']:.0f}us >= dense(1.0) "
+            f"{base['us_dense']:.0f}us")
+        detail = ", ".join(f"{r['budget']:g}: {r['us_ragged']:.0f}"
+                           for r in rows)
+        print("wall-clock by budget (us): " + detail)
     print(f"\nwrote {args.out}: budget-0.5 lowers {ratio:.2f}x the FLOPs of "
           f"budget-1.0 (dense reference is "
-          f"{half['flops_dense'] / max(rows[0]['flops_dense'], 1.0):.2f}x)")
+          f"{half['flops_dense'] / max(rows[0]['flops_dense'], 1.0):.2f}x); "
+          f"ragged(0.5) {half['us_ragged']:.0f}us vs dense(1.0) "
+          f"{base['us_dense']:.0f}us [{backend}]")
 
 
 if __name__ == "__main__":

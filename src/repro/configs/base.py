@@ -183,6 +183,7 @@ class ElasticConfig:
     lambda_load: float = 1.0
     lambda_topk: float = 1.0
     routing_impl: str = "ragged"                 # ragged | gather | dense_mask
+    kernel_backend: str = "auto"                 # auto | pallas | interpret | ref
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0

@@ -68,6 +68,11 @@ class ElasticSpec:
     lambda_load: float = 1.0
     lambda_topk: float = 1.0
     routing_impl: str = "ragged"       # ragged | gather | dense_mask
+    # How the model hot path EXECUTES: "pallas" = real TPU kernels,
+    # "interpret" = pallas interpreter (CPU kernel verification), "ref" =
+    # jnp references/twins (fast CPU path), "auto" = pallas on TPU, ref
+    # elsewhere. Static: changing it recompiles (it swaps the HLO).
+    kernel_backend: str = "auto"       # auto | pallas | interpret | ref
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0
@@ -189,6 +194,7 @@ def spec_from_config(ecfg) -> ElasticSpec:
         lambda_load=ecfg.lambda_load,
         lambda_topk=ecfg.lambda_topk,
         routing_impl=ecfg.routing_impl,
+        kernel_backend=getattr(ecfg, "kernel_backend", "auto"),
     )
 
 
@@ -237,11 +243,22 @@ def ragged_bucket(policy: Optional[ElasticPolicy], s: int,
     capacities at sequence length ``s``. This is the value to thread — as a
     STATIC argument — into ``forward`` / ``prefill`` / train steps when the
     policy itself is traced: each distinct bucket is one compile, and there
-    are at most ``routing.RAGGED_N_BUCKETS`` of them per sequence length.
+    are at most ``routing.RAGGED_N_BUCKETS`` of them per sequence length
+    (plus the identity graph).
 
-    Returns None (dense fallback / no bucketing possible) when the policy is
-    abstract (tracers — the budget is genuinely unknown at trace time), in
-    teacher mode, or when the covering bucket is the full sequence."""
+    Returns:
+      * an int ``b < s`` — the covering capacity bucket;
+      * ``routing.IDENTITY_BUCKET`` — the IDENTITY fast path: every row of
+        the policy is at full budget (capacity >= 1) or in teacher mode,
+        so the compiled graph skips partition + gather + scatter entirely
+        and runs the bit-exact teacher math (this is what makes budget-1.0
+        rows as fast as the unrouted model — the token routers still emit
+        their aux losses). A sentinel, not a size, so it can never collide
+        with a real bucket at a different sequence length;
+      * ``None`` — no static plan possible: the policy is abstract (tracers
+        — the budget is genuinely unknown at trace time), rows MIX full and
+        partial budgets, or the covering bucket would be the full sequence
+        without every row being full. Dense rank-masked fallback."""
     from repro.core import routing as R
     if policy is None:
         return None
@@ -252,16 +269,19 @@ def ragged_bucket(policy: Optional[ElasticPolicy], s: int,
         if isinstance(c, jax.core.Tracer):
             return None
         vals.append(jnp.asarray(c, jnp.float32))
-    if float(jnp.min(vals[2])) <= 0.0:          # teacher rows: full compute
-        return None
-    cap = max(float(jnp.max(vals[0])), float(jnp.max(vals[1])))
-    if cap >= 1.0:
-        return None
+    # effective per-row capacity: teacher rows (student <= 0) force 1.0
+    cap_rows = jnp.maximum(vals[0], vals[1])
+    eff = jnp.where(vals[2] <= 0.0, 1.0, cap_rows)
+    if float(jnp.min(eff)) >= 1.0:
+        return R.IDENTITY_BUCKET                # identity: all rows full
+    if float(jnp.max(eff)) >= 1.0:
+        return None                             # mixed full/partial rows
     kw = {}
     if n_buckets is not None:
         kw["n_buckets"] = n_buckets
     if align is not None:
         kw["align"] = align
+    cap = float(jnp.max(eff))
     b = R.bucket_for(R.capacity_k(cap, s, mxu=True), s, **kw)
     return b if b < s else None
 

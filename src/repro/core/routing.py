@@ -20,10 +20,15 @@ Capacities and top-k counts come in two flavors (see core/policy.py):
     property.
 
 The ragged machinery (``capacity_buckets`` / ``bucket_for`` /
-``ragged_select`` / ``resolve_bucket``) stably partitions the sequence
+``make_plan`` / ``resolve_bucket``) stably partitions the sequence
 valid-first: the selected tokens form a position-ascending prefix of a
 static bucket-sized buffer, the true count rides along as a traced scalar
-that the Pallas kernels use to skip trailing tiles.
+that the Pallas kernels use to skip trailing tiles. A block's full routing
+decision is one ``RoutingPlan`` — gather indices, inverse scatter
+permutation, validity, count, membership — derived from a SINGLE sort and
+shared by every student in the block; ``resolve_bucket`` returning the
+full sequence length is the identity fast path (full budget: skip the
+partition entirely).
 
 All router math is float32 regardless of backbone dtype.
 """
@@ -115,9 +120,36 @@ def bcast_to(v, ndim: int):
     return v.reshape(v.shape + (1,) * (ndim - v.ndim))
 
 
+# Trace-time counter over the sorts issued by the routing machinery (the
+# test hook behind the "one RoutingPlan sort per block" invariant). Every
+# argsort in this module MUST go through _argsort so the counter is honest.
+PLAN_SORT_COUNT = 0
+
+
+def _argsort(x, axis: int = -1):
+    global PLAN_SORT_COUNT
+    PLAN_SORT_COUNT += 1
+    return jnp.argsort(x, axis=axis)
+
+
+def invert_permutation(perm):
+    """Inverse of a batched permutation along the last axis WITHOUT a second
+    sort: inv[..., perm[..., i]] = i via an int32 scatter (O(S) vs the
+    O(S log S) argsort-of-argsort it replaces)."""
+    s = perm.shape[-1]
+    flat = perm.reshape(-1, s)
+    b = jnp.arange(flat.shape[0])[:, None]
+    ar = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), flat.shape)
+    inv = jnp.zeros_like(flat).at[b, flat].set(ar)
+    return inv.reshape(perm.shape)
+
+
 def token_ranks(scores):
-    """Descending rank of each entry along the last axis (0 = largest)."""
-    return jnp.argsort(jnp.argsort(-scores, axis=-1), axis=-1)
+    """Descending rank of each entry along the last axis (0 = largest).
+    ONE sort: the inverse permutation is derived by scatter, not by the
+    legacy argsort(argsort(-scores)) double sort (bit-identical: jnp.argsort
+    is stable, so ties still break by ascending position)."""
+    return invert_permutation(_argsort(-scores, axis=-1))
 
 
 def topk_mask_dyn(scores, k):
@@ -157,6 +189,13 @@ def capacity_k(capacity, s: int, mxu: bool = False):
 RAGGED_N_BUCKETS = 4     # static graphs per sequence length, max
 RAGGED_ALIGN = 128       # MXU lane alignment of bucket sizes
 
+# Sentinel bucket hint meaning "every row is at FULL budget": compile the
+# identity graph (no partition/gather/scatter — bit-exact teacher math).
+# Deliberately not a valid buffer size, so a real bucket solved for one
+# sequence length can never be mistaken for the identity assertion when a
+# shorter batch happens to match it.
+IDENTITY_BUCKET = -1
+
 
 def capacity_buckets(s: int, *, n_buckets: int = RAGGED_N_BUCKETS,
                      align: int = RAGGED_ALIGN):
@@ -184,40 +223,109 @@ def bucket_for(k: int, s: int, *, n_buckets: int = RAGGED_N_BUCKETS,
     return s
 
 
+class RoutingPlan(NamedTuple):
+    """One block's token-routing decision, derived from a SINGLE sort.
+
+    The plan is the shared currency of the routed-execution layer: the
+    attention and MLP/MoE students of a block consume the same plan instead
+    of each re-deriving ranks (a double argsort), the valid-first partition
+    (another argsort), and a scatter permutation per component.
+
+    idx   : (..., bucket) i32 — gather indices; the selected tokens form a
+            position-ascending prefix (causal attention over the prefix IS
+            causal attention over the selected tokens), the tail holds the
+            remaining tokens (position-ascending) and is masked by `valid`.
+    inv   : (..., S) i32 — inverse scatter permutation: token position ->
+            buffer slot (>= bucket: the token was dropped entirely). Turns
+            the scatter-back into a cheap gather (`plan_scatter`).
+    valid : (..., bucket) bool — prefix validity of the buffer rows.
+    count : python int (static k) or (...,) i32 — true selected count; the
+            scalar-prefetched ragged argument of the Pallas kernels.
+    keep  : (..., S) bool — membership mask (BCE aux target / kv validity).
+    bucket: static buffer size. bucket == S with every row kept is the
+            identity plan — callers fast-path it and skip gather/scatter.
+    """
+    idx: jnp.ndarray
+    inv: jnp.ndarray
+    valid: jnp.ndarray
+    count: object
+    keep: jnp.ndarray
+    bucket: int
+
+
+def make_plan(scores, k, bucket: int) -> RoutingPlan:
+    """Build a RoutingPlan from router scores with ONE sort.
+
+    scores: (..., S); k: top-k count — python int, traced scalar, or
+    per-row (B,); bucket: static buffer size (k is clamped to it).
+
+    Derivation: one stable argsort of -scores gives the descending order;
+    ranks are its inverse permutation (scatter, not a second sort); the
+    valid-first destination of every token is a cumsum over the keep mask;
+    the gather permutation is that destination's inverse (another scatter).
+    Total: 1 sort + 2 int32 scatters + 2 cumsums, replacing the legacy
+    3-sort chain (token_ranks x2 + ragged_select's partition argsort)."""
+    s = scores.shape[-1]
+    ranks = token_ranks(scores)                       # ONE sort (counted)
+    if is_static(k):
+        kk = max(1, min(int(k), bucket))
+        keep = ranks < kk
+        count = kk
+    else:
+        kk = jnp.minimum(k, bucket)
+        keep = ranks < bcast_to(kk, scores.ndim)
+        count = jnp.sum(keep, axis=-1).astype(jnp.int32)
+    nk = jnp.cumsum(keep.astype(jnp.int32), axis=-1)
+    n_keep = nk[..., -1:]
+    dest = jnp.where(keep, nk - 1,
+                     n_keep + jnp.cumsum((~keep).astype(jnp.int32), -1) - 1)
+    perm = invert_permutation(dest)                   # scatter, not a sort
+    idx = perm[..., :bucket].astype(jnp.int32)
+    if is_static(k):
+        valid = jnp.broadcast_to(jnp.arange(bucket) < count, idx.shape)
+    else:
+        valid = jnp.arange(bucket) < count[..., None]
+    return RoutingPlan(idx, dest.astype(jnp.int32), valid, count, keep,
+                       bucket)
+
+
+def plan_gather(x, plan: RoutingPlan):
+    """x: (B, S, ...) -> (B, bucket, ...) selected-first buffer."""
+    return gather_tokens(x, plan.idx)
+
+
+def plan_scatter(plan: RoutingPlan, shape_like, vals):
+    """Inverse of plan_gather as a GATHER by the plan's inverse permutation
+    (no scatter-add: XLA lowers batched scatter-adds to f32 upcasts plus
+    full-buffer copies). vals: (B, bucket, ...) already weighted; rows the
+    plan dropped (inv >= bucket) and the masked tail contribute zeros."""
+    b = plan.bucket
+    safe = jnp.minimum(plan.inv, b - 1)
+    expand = (slice(None), slice(None)) + (None,) * (vals.ndim - 2)
+    out = jnp.take_along_axis(vals, safe[expand], axis=1)
+    live = (plan.inv < b) & plan.keep
+    return jnp.where(live[expand], out, 0).astype(shape_like.dtype)
+
+
 def ragged_select(scores, k, bucket: int):
     """Stable valid-first partition for ragged capacity-bucket routing.
 
-    scores: (..., S) router scores; k: top-k count — python int, traced
-    scalar, or per-row (B,); bucket: static buffer size with k <= bucket.
-
-    Returns (idx (..., bucket) i32, valid (..., bucket) bool, count):
-    ``idx[..., :k]`` are the top-k tokens in ascending POSITION order (the
-    exact token set of ``topk_mask_dyn``, ties by position), so causal
-    attention over the buffer prefix is causal attention over the selected
-    tokens; the tail is filled with the remaining (not-selected) tokens,
-    also position-ascending, and masked out by ``valid``. ``count`` is the
-    number of valid prefix rows (python int when k is static) — the traced
-    scalar the Pallas kernels take to skip trailing tiles.
+    Legacy entry point, now a thin view over ``make_plan`` (one sort instead
+    of three). Returns (idx (..., bucket) i32, valid (..., bucket) bool,
+    count): ``idx[..., :k]`` are the top-k tokens in ascending POSITION
+    order (the exact token set of ``topk_mask_dyn``, ties by position), the
+    tail is filled with the remaining tokens and masked out by ``valid``;
+    ``count`` is the number of valid prefix rows (python int when k is
+    static) — the traced scalar the Pallas kernels take to skip trailing
+    tiles.
 
     ``k`` is clamped to ``bucket``: callers must pass a covering bucket
     (``resolve_bucket`` / ``policy.ragged_bucket`` guarantee it); an
     undersized one degrades to a well-defined truncation — the top-bucket
     tokens — with ``keep``/``count``/``valid`` all agreeing on the executed
     set, never an all-valid mask over silently dropped tokens."""
-    s = scores.shape[-1]
-    k = min(int(k), bucket) if is_static(k) else jnp.minimum(k, bucket)
-    keep = topk_mask_dyn(scores, k)
-    pos = jnp.arange(s, dtype=jnp.int32)
-    order = jnp.argsort(jnp.where(keep, pos, pos + s), axis=-1)
-    idx = order[..., :bucket].astype(jnp.int32)
-    if is_static(k):
-        count = max(1, min(int(k), bucket))
-        valid = jnp.broadcast_to(jnp.arange(bucket) < count,
-                                 idx.shape)
-    else:
-        count = jnp.sum(keep, axis=-1).astype(jnp.int32)  # leading dims
-        valid = jnp.arange(bucket) < count[..., None]
-    return idx, valid, count
+    plan = make_plan(scores, k, bucket)
+    return plan.idx, plan.valid, plan.count
 
 
 def threshold_logit(theta):
@@ -314,23 +422,41 @@ def _accepts_token_valid(f) -> bool:
         p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
-def resolve_bucket(capacity, s: int, bucket=None):
-    """Static ragged buffer size for this trace, or None when the ragged
-    path cannot run (-> dense fallback): static capacities derive it from
-    the capacity itself, traced capacities need the caller's static
-    ``bucket`` hint (which must cover the largest per-row top-k this graph
-    will see). A bucket >= s is dense anyway, so it also returns None."""
+def resolve_bucket(capacity, s: int, bucket=None, impl: str = "ragged"):
+    """Static plan buffer size for this trace. Returns one of:
+
+      * ``None``  — no static plan possible: dense rank-masked fallback
+        (traced capacity without a bucket hint, or a bucket that would
+        round up to the full sequence without being full-budget);
+      * ``s``     — the IDENTITY fast path: the caller asserts every row is
+        at full budget (static capacity >= 1, or ``policy.ragged_bucket``
+        returned ``s`` after checking the concrete policy host-side), so
+        partition + gather + scatter are skipped entirely and the block
+        runs the bit-exact teacher math;
+      * ``0 < b < s`` — plan buffer size: the ragged capacity bucket, or
+        the exact MXU-rounded top-k count under ``impl == "gather"``.
+
+    Static capacities derive the size inline; traced capacities ride the
+    caller's static ``bucket`` hint (which must cover the largest per-row
+    top-k this graph will see). The identity assertion travels as the
+    distinct ``IDENTITY_BUCKET`` sentinel (what ``policy.ragged_bucket``
+    returns after checking the concrete policy host-side) — an ordinary
+    hint that merely reaches ``s`` (solved for a longer sequence, applied
+    to a shorter batch) degrades to the dense fallback like the pre-plan
+    code, never to the unrouted graph."""
     if capacity is None:
         return None
     if is_static(capacity):
         if capacity >= 1.0:
-            return None
-        kb = bucket_for(capacity_k(capacity, s, mxu=True), s)
-    elif bucket is None:
+            return s
+        k = capacity_k(capacity, s, mxu=True)
+        kb = min(s, k if impl == "gather" else bucket_for(k, s))
+        return kb if kb < s else None
+    if bucket is None:
         return None
-    else:
-        kb = int(bucket)
-    kb = min(kb, s)
+    kb = int(bucket)
+    if kb == IDENTITY_BUCKET:
+        return s
     return kb if kb < s else None
 
 
@@ -348,6 +474,13 @@ def route_tokens(
     mxu: bool = True,       # capacity_k rounding — same flag on EVERY path
 ):
     """Input subset selection around a module f (residual added by caller).
+
+    This is the standalone single-component API (and the model's inference
+    thresholding path). The model's train-mode hot path does NOT come
+    through here: ``models/blocks.block_apply`` inlines the same
+    plan/identity semantics so one RoutingPlan can be SHARED across a
+    block's components — keep the two in sync (tests/test_routing.py
+    pins this function, tests/test_backend.py pins the block-level grid).
 
     Returns (delta, aux). delta is f's (router-weighted) contribution.
     Three implementations of the train-mode top-k:
@@ -370,27 +503,22 @@ def route_tokens(
     logits = token_logits(rp, x)            # (B, S)
     scores = jax.nn.sigmoid(logits)
 
-    if (mode == "train" and impl == "gather" and is_static(capacity)
-            and is_static(theta) and capacity < 1.0):
-        k = capacity_k(capacity, S, mxu=mxu)
-        idx = topk_indices(scores, k)        # (B, k) ascending
-        x_sel = gather_tokens(x, idx)
-        pos_sel = positions[idx] if positions.ndim == 1 else jnp.take_along_axis(positions, idx, 1)
-        y_sel = f(x_sel, pos_sel)
-        w_sel = jnp.take_along_axis(scores, idx, axis=1)
-        y_sel = y_sel * w_sel[..., None].astype(y_sel.dtype)
-        delta = scatter_add_tokens(x, idx, y_sel)
-        mask = topk_mask(scores, k)
-        return delta, RouteAux.of(topk=bce_topk_loss(logits, mask), keep=mask)
-
-    kb = resolve_bucket(capacity, S, bucket) if (
-        mode == "train" and impl == "ragged") else None
+    kb = None
+    if mode == "train" and impl in ("ragged", "gather"):
+        if impl == "ragged" or (is_static(capacity) and is_static(theta)):
+            kb = resolve_bucket(capacity, S, bucket, impl=impl)
+    if kb == S:
+        # identity fast path: full budget on every row — skip partition,
+        # gather, and scatter entirely (bit-exact: weights would be 1.0)
+        keep = jnp.ones((B, S), bool)
+        return f(x, positions), RouteAux.of(
+            topk=bce_topk_loss(logits, keep), keep=keep)
     if kb is not None:
         k = capacity_k(capacity, S, mxu=mxu)
-        idx, pvalid, cnt = ragged_select(scores, k, kb)
-        x_sel = gather_tokens(x, idx)
-        pos_sel = positions[idx] if positions.ndim == 1 \
-            else jnp.take_along_axis(positions, idx, 1)
+        plan = make_plan(scores, k, kb)      # the ONE sort of this call
+        x_sel = plan_gather(x, plan)
+        pos_sel = positions[plan.idx] if positions.ndim == 1 \
+            else jnp.take_along_axis(positions, plan.idx, 1)
         # Modules that understand the ragged prefix contract (e.g. MoE
         # dispatch, where masked tail rows must not consume expert
         # capacity) get the validity mask and true count. Awareness is
@@ -399,14 +527,15 @@ def route_tokens(
         # wrap ragged-aware modules with functools.wraps or forward the
         # kwargs explicitly.
         if _accepts_token_valid(f):
-            y_sel = f(x_sel, pos_sel, token_valid=pvalid, token_count=cnt)
+            y_sel = f(x_sel, pos_sel, token_valid=plan.valid,
+                      token_count=plan.count)
         else:
             y_sel = f(x_sel, pos_sel)
-        w_sel = jnp.take_along_axis(scores, idx, axis=1) * pvalid
-        delta = scatter_add_tokens(
-            x, idx, y_sel * w_sel[..., None].astype(y_sel.dtype))
-        keep = topk_mask_dyn(scores, k)
-        return delta, RouteAux.of(topk=bce_topk_loss(logits, keep), keep=keep)
+        w_sel = jnp.take_along_axis(scores, plan.idx, axis=1) * plan.valid
+        delta = plan_scatter(plan, x,
+                             y_sel * w_sel[..., None].astype(y_sel.dtype))
+        return delta, RouteAux.of(topk=bce_topk_loss(logits, plan.keep),
+                                  keep=plan.keep)
 
     # dense path: full-shape compute, rank/threshold masking (train w/
     # dense_mask impl, inference, and traced capacities without a bucket)

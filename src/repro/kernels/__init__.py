@@ -1,3 +1,5 @@
-from repro.kernels.ops import flash_attention, fused_mlp, moe_gmm
+from repro.kernels.ops import (decode_attention, flash_attention, fused_mlp,
+                               fused_mlp_routed, moe_gmm, resolve_backend)
 
-__all__ = ["flash_attention", "fused_mlp", "moe_gmm"]
+__all__ = ["decode_attention", "flash_attention", "fused_mlp",
+           "fused_mlp_routed", "moe_gmm", "resolve_backend"]

@@ -1,0 +1,142 @@
+"""Pallas TPU decode attention over the serving engine's RING KV cache —
+the one-token-per-slot hot path of the continuous-batching decode step.
+
+Unlike prefill flash attention, the ring cache is NOT position-ordered:
+entry for absolute position p lives at slot p % L, empty slots carry
+pos == -1, and every serving slot decodes at its own offset t[b]. So the
+kernel masks by the cache's absolute-position array instead of by array
+index: a key at slot j is attendable iff
+
+    kv_pos[b, j] >= 0            (slot ever written)
+    kv_pos[b, j] <= t[b]         (causal at this slot's position)
+    t[b] - kv_pos[b, j] < window (sliding window, if any)
+    kv_valid[b, j]               (ElastiFormer token routing: skipped
+                                  tokens never entered the cache)
+
+Per-slot positions ride scalar prefetch; one (B, H, L/block) grid with an
+online-softmax f32 accumulator carried across the kv-block dimension, GQA
+via the head-major block index map — the decode twin of
+kernels/flash_attention.py, shaped for Sq == 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
+def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, o_ref,
+            m_sc, l_sc, acc_sc, *, window: int, sm_scale: float, n_kb: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    t = t_ref[ib]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                      # (1, bk)
+    pos = pos_ref[0][None, :]                             # (1, bk) i32
+    mask = (pos >= 0) & (pos <= t)
+    if window and window > 0:
+        mask &= (t - pos) < window
+    if valid_ref is not None:
+        mask &= valid_ref[0][None, :] > 0
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_sc[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_sc[:, 0] = l_sc[:, 0] * alpha + jnp.sum(p, axis=1)
+    m_sc[:, 0] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)
+    v = jnp.where(mask[0][:, None], v, 0.0)   # masked rows: 0 * NaN guard
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kb - 1)
+    def _finish():
+        l = jnp.maximum(l_sc[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_pos, t, *, window: int = 0, kv_valid=None,
+                     block_k: int = 128, sm_scale: float | None = None,
+                     interpret: bool = False):
+    """q: (B, 1, H, Dh); k, v: (B, L, K, Dh) ring caches; kv_pos: (B, L)
+    i32 absolute positions (-1 = empty slot); t: (B,) i32 per-slot decode
+    positions; kv_valid: (B, L) bool (routing validity). Returns
+    (B, 1, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    L, K = k.shape[1], k.shape[2]
+    G = H // K
+    sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
+    bk = min(block_k, L)
+    nkb = pl.cdiv(L, bk)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
+    # pad slots carry pos == -1 -> masked, so block padding is inert
+    pos = kv_pos.astype(jnp.int32)
+    if nkb * bk != L:
+        pad = nkb * bk - L
+        pos = jnp.pad(pos, [(0, 0), (0, pad)], constant_values=-1)
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, [(0, 0), (0, pad)])
+
+    qt = q.transpose(0, 2, 1, 3)                          # (B,H,1,Dh)
+    kt = k.transpose(0, 2, 1, 3)                          # (B,K,L,Dh)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, window=window, sm_scale=sm_scale,
+                               n_kb=nkb)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bk, Dh), lambda b, h, j, *_: (b, h // G, j, 0)),
+        pl.BlockSpec((1, 1, bk, Dh), lambda b, h, j, *_: (b, h // G, j, 0)),
+        pl.BlockSpec((1, bk), lambda b, h, j, *_: (b, j)),
+    ]
+    args = [qt, kt, vt, pos]
+    if kv_valid is not None:
+        in_specs.append(pl.BlockSpec((1, bk), lambda b, h, j, *_: (b, j)))
+        args.append(kv_valid.astype(jnp.int32))
+        kfn = kernel
+    else:
+        kfn = lambda t_ref, q_ref, k_ref, v_ref, pos_ref, *rest: \
+            kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, None, *rest)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nkb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, 1, Dh), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, LANES), jnp.float32),
+            pltpu.VMEM((1, LANES), jnp.float32),
+            pltpu.VMEM((1, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kfn,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(t, *args)
+    return out.transpose(0, 2, 1, 3)

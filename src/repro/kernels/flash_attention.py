@@ -13,9 +13,14 @@ scalar-prefetched) marks the first N tokens of the q/kv buffers as real —
 kv blocks entirely past the count are skipped, q blocks past it write zeros
 without computing, and the straddling block masks per-position. A
 bucket-sized compile therefore does work quadratic in the *count*, not the
-buffer. The ragged token-routing gather (core/routing.ragged_select) keeps
-selected tokens position-ascending in the prefix, so array-index causal
-masking inside the kernel IS causal masking over the selected tokens.
+buffer. The ragged token-routing gather (core/routing.make_plan — the
+block-shared RoutingPlan whose traced count IS this kernel's ``kv_count``)
+keeps selected tokens position-ascending in the prefix, so array-index
+causal masking inside the kernel IS causal masking over the selected
+tokens. The model hot path reaches this kernel through kernels/ops.py
+under ``ElasticSpec.kernel_backend`` ("pallas" on TPU, "interpret" for CPU
+verification); sliding-window masking is index-based, so windowed GATHERED
+attention stays on the jnp twin (models/attention._kernel_ok).
 """
 from __future__ import annotations
 

@@ -6,14 +6,26 @@ y[t] = w[t] * ( act(x[t] @ Wg) * (x[t] @ Wi) ) @ Wo
 Fusing both matmuls + activation means the (T, F) hidden activation never
 round-trips to HBM (F is 3-4x D on the assigned archs); the kernel tiles
 F into VMEM-sized blocks and accumulates the down-projection into an f32
-scratch across the sequential F-grid dimension. Token gather/scatter (the
-top-k routing) stays in XLA — it is bandwidth-trivial next to the matmuls.
+scratch across the sequential F-grid dimension.
 
-Ragged capacity-bucket execution: ``valid_count`` (a scalar-prefetched
-traced count) marks the first N rows as real tokens — token tiles entirely
-past the count are skipped (zero write, no matmuls), the straddling tile
-zeroes its trailing rows. A bucket-sized compile therefore does work
-proportional to the *count*, not the buffer.
+Two entry points:
+
+* ``fused_mlp`` — x is a (T, D) or batched (B, T, D) buffer (the routed
+  capacity-bucket buffer a RoutingPlan gathered in XLA). ``valid_count``
+  (scalar or per-row (B,), scalar-prefetched) marks the first N rows as
+  real tokens — token tiles entirely past the count are skipped (zero
+  write, no matmuls), the straddling tile zeroes its trailing rows. A
+  bucket-sized compile therefore does work proportional to the *count*,
+  not the buffer.
+
+* ``fused_mlp_routed`` — index-prefetch gather/scatter fusion: x stays the
+  FULL (B, S, D) residual stream and the RoutingPlan's gather indices ride
+  scalar prefetch; each grid step pulls its selected row straight from x
+  via the BlockSpec index_map and writes the weighted output back to the
+  row's original position, so the bucket-sized student buffer never
+  materializes in HBM at all. (Row-granular tiles trade MXU utilisation
+  for zero gather/scatter traffic — the right trade when the bucket is
+  bandwidth- rather than FLOP-bound.)
 """
 from __future__ import annotations
 
@@ -28,11 +40,23 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
+def _ffn_block(x, wi_ref, wg_ref, *, act: str):
+    hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    if wg_ref is not None:
+        hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
+        return a * hi
+    return jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
+
+
 def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
             act: str, n_fb: int, weighted: bool, block_t: int):
-    it = pl.program_id(0)
-    jf = pl.program_id(1)
-    cnt = cnt_ref[0]
+    ib = pl.program_id(0)
+    it = pl.program_id(1)
+    jf = pl.program_id(2)
+    cnt = cnt_ref[ib]
     live = it * block_t < cnt
 
     @pl.when(jnp.logical_not(live) & (jf == n_fb - 1))
@@ -45,81 +69,190 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
         def _init():
             acc_sc[...] = jnp.zeros_like(acc_sc)
 
-        x = x_ref[...].astype(jnp.float32)                     # (bt, D)
-        hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)   # (bt, bf)
-        if wg_ref is not None:
-            hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
-                             preferred_element_type=jnp.float32)
-            a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
-            h = a * hi
-        else:
-            h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
-        acc_sc[...] += jax.lax.dot(h, wo_ref[...].astype(jnp.float32),
-                                   preferred_element_type=jnp.float32)
+        x = x_ref[0].astype(jnp.float32)                       # (bt, D)
+        acc_sc[...] += jax.lax.dot(
+            _ffn_block(x, wi_ref, wg_ref, act=act),
+            wo_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
 
         @pl.when(jf == n_fb - 1)
         def _finish():
             y = acc_sc[...]
             if weighted:
-                y = y * tw_ref[...].astype(jnp.float32)[:, :1]
+                y = y * tw_ref[0].astype(jnp.float32)[:, :1]
             rows = it * block_t + jax.lax.broadcasted_iota(
                 jnp.int32, y.shape, 0)
             y = jnp.where(rows < cnt, y, 0.0)
-            o_ref[...] = y.astype(o_ref.dtype)
+            o_ref[0] = y.astype(o_ref.dtype)
 
 
 def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
               block_t: int = 256, block_f: int = 512, valid_count=None,
               interpret: bool = False):
-    """x: (T, D); wi/wg: (D, F); wo: (F, D); token_weights: (T,) or None;
-    valid_count: traced/static count of real leading rows (None = T) —
-    rows >= valid_count produce zeros and their tiles are skipped.
-    Returns (T, D)."""
-    T, D = x.shape
+    """x: (T, D) or (B, T, D); wi/wg: (D, F); wo: (F, D); token_weights:
+    (T,) / (B, T) or None; valid_count: traced/static count of real leading
+    rows — scalar or per-row (B,); None = T. Rows >= the count produce
+    zeros and their tiles are skipped. Returns x-shaped output."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+        if token_weights is not None:
+            token_weights = jnp.asarray(token_weights).reshape(1, -1)
+    B, T, D = x.shape
     F = wi.shape[1]
     bt, bf = min(block_t, T), min(block_f, F)
     nt, nf = pl.cdiv(T, bt), pl.cdiv(F, bf)
-    tw = (jnp.ones((T, 1), jnp.float32) if token_weights is None
-          else token_weights.reshape(T, 1).astype(jnp.float32))
-    tw = jnp.broadcast_to(tw, (T, 128))  # lane-replicated for TPU layout
+    if token_weights is None:
+        tw = jnp.ones((B, T, 1), jnp.float32)
+    else:  # (T,) broadcasts across the batch; (B, T) is per-row
+        tw = jnp.broadcast_to(
+            jnp.asarray(token_weights, jnp.float32).reshape(-1, T), (B, T)
+        ).reshape(B, T, 1)
+    tw = jnp.broadcast_to(tw, (B, T, 128))  # lane-replicated for TPU layout
     cnt = jnp.clip(jnp.asarray(
         T if valid_count is None else valid_count, jnp.int32), 0, T)
-    cnt = cnt.reshape(1)
+    cnt = jnp.broadcast_to(cnt.reshape(-1), (B,))
 
     kernel = functools.partial(_kernel, act=act, n_fb=nf,
                                weighted=token_weights is not None,
                                block_t=bt)
     in_specs = [
-        pl.BlockSpec((bt, D), lambda i, j, *_: (i, 0)),
-        pl.BlockSpec((D, bf), lambda i, j, *_: (0, j)),
+        pl.BlockSpec((1, bt, D), lambda b, i, j, *_: (b, i, 0)),
+        pl.BlockSpec((D, bf), lambda b, i, j, *_: (0, j)),
     ]
     args = [x, wi]
     if wg is not None:
-        in_specs.append(pl.BlockSpec((D, bf), lambda i, j, *_: (0, j)))
+        in_specs.append(pl.BlockSpec((D, bf), lambda b, i, j, *_: (0, j)))
         args.append(wg)
         kfn = kernel
     else:
         kfn = lambda cnt_ref, x_ref, wi_ref, wo_ref, tw_ref, o_ref, acc: \
             kernel(cnt_ref, x_ref, wi_ref, None, wo_ref, tw_ref, o_ref, acc)
     in_specs += [
-        pl.BlockSpec((bf, D), lambda i, j, *_: (j, 0)),
-        pl.BlockSpec((bt, 128), lambda i, j, *_: (i, 0)),
+        pl.BlockSpec((bf, D), lambda b, i, j, *_: (j, 0)),
+        pl.BlockSpec((1, bt, 128), lambda b, i, j, *_: (b, i, 0)),
     ]
     args += [wo, tw]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nt, nf),
+        grid=(B, nt, nf),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bt, D), lambda i, j, *_: (i, 0)),
+        out_specs=pl.BlockSpec((1, bt, D), lambda b, i, j, *_: (b, i, 0)),
         scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kfn,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cnt, *args)
+    return out[0] if squeeze else out
+
+
+def _routed_kernel(cnt_ref, idx_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref,
+                   o_ref, acc_sc, *, act: str, n_fb: int):
+    ib = pl.program_id(0)
+    it = pl.program_id(1)
+    jf = pl.program_id(2)
+    cnt = cnt_ref[ib]
+    live = it < cnt
+
+    @pl.when((it == 0) & (jf == 0))
+    def _zero():  # first visit of this batch row's output slab
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(live)
+    def _run():
+        @pl.when(jf == 0)
+        def _init():
+            acc_sc[...] = jnp.zeros_like(acc_sc)
+
+        x = x_ref[0].astype(jnp.float32)                        # (1, D)
+        acc_sc[...] += jax.lax.dot(
+            _ffn_block(x, wi_ref, wg_ref, act=act),
+            wo_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(jf == n_fb - 1)
+        def _finish():  # scatter: write the row back at its token position
+            y = acc_sc[...] * tw_ref[0, 0, 0]
+            row = idx_ref[ib, it]
+            o_ref[0, pl.ds(row, 1), :] = y.astype(o_ref.dtype)
+
+
+def fused_mlp_routed(x, idx, wi, wo, wg=None, token_weights=None, *,
+                     act: str = "swiglu", block_f: int = 512,
+                     valid_count=None, interpret: bool = False):
+    """Index-prefetch gather/scatter-fused routed MLP.
+
+    x: (B, S, D) FULL residual-stream input; idx: (B, Kb) i32 RoutingPlan
+    gather indices (each row a subset of 0..S-1, no duplicates);
+    token_weights: (B, Kb) router weights (already zeroed on the invalid
+    tail); valid_count: scalar or (B,) true selected count (None = Kb).
+    Returns the (B, S, D) DELTA: weighted MLP outputs scattered back to
+    their token positions, zeros everywhere else. The (B, Kb, D) student
+    buffer of the gather-in-XLA path never exists in HBM: the plan indices
+    ride scalar prefetch, each grid step's BlockSpec index_map gathers the
+    selected row directly from x, and the output store is the inverse
+    scatter. Grid steps past the valid count skip compute entirely.
+
+    VMEM contract: one batch row's FULL (S, D) output slab stays resident
+    across its grid steps, so this kernel only compiles/profits while
+    S * D * itemsize fits the VMEM budget alongside the weight tiles —
+    callers gate on blocks.ROUTED_MLP_SLAB_BYTES and fall back to
+    gather-in-XLA + the batched ``fused_mlp`` above."""
+    B, S, D = x.shape
+    Kb = idx.shape[-1]
+    F = wi.shape[1]
+    bf = min(block_f, F)
+    nf = pl.cdiv(F, bf)
+    tw = (jnp.ones((B, Kb), jnp.float32) if token_weights is None
+          else token_weights.astype(jnp.float32))
+    tw = tw.reshape(B, Kb, 1, 1)  # SMEM-friendly per-row scalar
+    cnt = jnp.clip(jnp.asarray(
+        Kb if valid_count is None else valid_count, jnp.int32), 0, Kb)
+    cnt = jnp.broadcast_to(cnt.reshape(-1), (B,))
+    idx = jnp.clip(idx.astype(jnp.int32), 0, S - 1)
+
+    kernel = functools.partial(_routed_kernel, act=act, n_fb=nf)
+    # x gather happens IN THE INDEX MAP: block (1,1,D) at row idx[b, t]
+    in_specs = [
+        pl.BlockSpec((1, 1, D), lambda b, t, j, cnt_ref, idx_ref:
+                     (b, idx_ref[b, t], 0)),
+        pl.BlockSpec((D, bf), lambda b, t, j, *_: (0, j)),
+    ]
+    args = [x, wi]
+    if wg is not None:
+        in_specs.append(pl.BlockSpec((D, bf), lambda b, t, j, *_: (0, j)))
+        args.append(wg)
+        kfn = kernel
+    else:
+        kfn = lambda cnt_ref, idx_ref, x_ref, wi_ref, wo_ref, tw_ref, o_ref, \
+            acc: kernel(cnt_ref, idx_ref, x_ref, wi_ref, None, wo_ref,
+                        tw_ref, o_ref, acc)
+    in_specs += [
+        pl.BlockSpec((bf, D), lambda b, t, j, *_: (j, 0)),
+        pl.BlockSpec((1, 1, 1, 1), lambda b, t, j, *_: (b, t, 0, 0)),
+    ]
+    args += [wo, tw]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kb, nf),
+        in_specs=in_specs,
+        # whole per-batch-row output slab stays resident; rows are stored
+        # at their scattered positions as their F-accumulation completes
+        out_specs=pl.BlockSpec((1, S, D), lambda b, t, j, *_: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
     )
     return pl.pallas_call(
         kfn,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), x.dtype),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(cnt, *args)
+    )(cnt, idx, *args)

@@ -32,15 +32,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
 
 def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
             act: str, n_fb: int, block_c: int):
-    ie = pl.program_id(0)
-    ic = pl.program_id(1)
-    jf = pl.program_id(2)
-    cnt = cnt_ref[ie]
+    ib = pl.program_id(0)
+    ie = pl.program_id(1)
+    ic = pl.program_id(2)
+    jf = pl.program_id(3)
+    cnt = cnt_ref[ib, ie]
     live = ic * block_c < cnt
 
     @pl.when(jnp.logical_not(live) & (jf == n_fb - 1))
     def _dead():  # capacity tile past this expert's occupancy: zeros only
-        o_ref[0] = jnp.zeros_like(o_ref[0])
+        o_ref[0, 0] = jnp.zeros_like(o_ref[0, 0])
 
     @pl.when(live)
     def _run():
@@ -48,7 +49,7 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
         def _init():
             acc_sc[...] = jnp.zeros_like(acc_sc)
 
-        x = x_ref[0].astype(jnp.float32)                       # (bc, D)
+        x = x_ref[0, 0].astype(jnp.float32)                    # (bc, D)
         hi = jax.lax.dot(x, wi_ref[0].astype(jnp.float32),
                          preferred_element_type=jnp.float32)
         if wg_ref is not None:
@@ -63,62 +64,74 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
 
         @pl.when(jf == n_fb - 1)
         def _finish():
-            y = acc_sc[...] * w_ref[0].astype(jnp.float32)[:, :1]
+            y = acc_sc[...] * w_ref[0, 0].astype(jnp.float32)[:, :1]
             rows = ic * block_c + jax.lax.broadcasted_iota(
                 jnp.int32, y.shape, 0)
             y = jnp.where(rows < cnt, y, 0.0)
-            o_ref[0] = y.astype(o_ref.dtype)
+            o_ref[0, 0] = y.astype(o_ref.dtype)
 
 
 def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
             block_c: int = 128, block_f: int = 512, group_counts=None,
             interpret: bool = False):
-    """x: (E, C, D) dispatched tokens; wi/wg: (E, D, Fe); wo: (E, Fe, D);
-    weights: (E, C) routing weights (0 for empty capacity slots);
-    group_counts: (E,) per-expert count of real leading slots (None = C) —
-    slots >= the count produce zeros and their tiles are skipped.
-    Returns (E, C, D)."""
-    E, C, D = x.shape
+    """x: (E, C, D) or batched (B, E, C, D) dispatched tokens; wi/wg:
+    (E, D, Fe); wo: (E, Fe, D) — expert weights are shared across the batch
+    dim; weights: (E, C) / (B, E, C) routing weights (0 for empty capacity
+    slots); group_counts: (E,) / (B, E) per-expert count of real leading
+    slots (None = C) — slots >= the count produce zeros and their tiles are
+    skipped. Returns x-shaped output."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+        if weights is not None:
+            weights = jnp.asarray(weights)[None]
+        if group_counts is not None:
+            group_counts = jnp.asarray(group_counts).reshape(1, -1)
+    B, E, C, D = x.shape
     Fe = wi.shape[2]
     bc, bf = min(block_c, C), min(block_f, Fe)
     nc, nf = pl.cdiv(C, bc), pl.cdiv(Fe, bf)
-    w = jnp.ones((E, C), jnp.float32) if weights is None else weights
-    w = jnp.broadcast_to(w.astype(jnp.float32)[..., None], (E, C, 128))
-    cnt = (jnp.full((E,), C, jnp.int32) if group_counts is None
+    w = jnp.ones((B, E, C), jnp.float32) if weights is None else weights
+    w = jnp.broadcast_to(w.astype(jnp.float32)[..., None], (B, E, C, 128))
+    cnt = (jnp.full((B, E), C, jnp.int32) if group_counts is None
            else jnp.clip(jnp.asarray(group_counts, jnp.int32), 0, C))
-    cnt = jnp.broadcast_to(cnt, (E,))
+    cnt = jnp.broadcast_to(cnt, (B, E))
 
     kernel = functools.partial(_kernel, act=act, n_fb=nf, block_c=bc)
     in_specs = [
-        pl.BlockSpec((1, bc, D), lambda e, i, j, *_: (e, i, 0)),
-        pl.BlockSpec((1, D, bf), lambda e, i, j, *_: (e, 0, j)),
+        pl.BlockSpec((1, 1, bc, D), lambda b, e, i, j, *_: (b, e, i, 0)),
+        pl.BlockSpec((1, D, bf), lambda b, e, i, j, *_: (e, 0, j)),
     ]
     args = [x, wi]
     if wg is not None:
-        in_specs.append(pl.BlockSpec((1, D, bf), lambda e, i, j, *_: (e, 0, j)))
+        in_specs.append(
+            pl.BlockSpec((1, D, bf), lambda b, e, i, j, *_: (e, 0, j)))
         args.append(wg)
         kfn = kernel
     else:
         kfn = lambda cnt_ref, x_ref, wi_ref, wo_ref, w_ref, o_ref, acc: \
             kernel(cnt_ref, x_ref, wi_ref, None, wo_ref, w_ref, o_ref, acc)
     in_specs += [
-        pl.BlockSpec((1, bf, D), lambda e, i, j, *_: (e, j, 0)),
-        pl.BlockSpec((1, bc, 128), lambda e, i, j, *_: (e, i, 0)),
+        pl.BlockSpec((1, bf, D), lambda b, e, i, j, *_: (e, j, 0)),
+        pl.BlockSpec((1, 1, bc, 128), lambda b, e, i, j, *_: (b, e, i, 0)),
     ]
     args += [wo, w]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(E, nc, nf),
+        grid=(B, E, nc, nf),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bc, D), lambda e, i, j, *_: (e, i, 0)),
+        out_specs=pl.BlockSpec((1, 1, bc, D),
+                               lambda b, e, i, j, *_: (b, e, i, 0)),
         scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32)],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kfn,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((E, C, D), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, E, C, D), x.dtype),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(cnt, *args)
+    return out[0] if squeeze else out

@@ -1,53 +1,265 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + the kernel-backend switch.
 
-On TPU backends the pallas_call path is used; elsewhere (this CPU container)
-the kernels run under interpret=True when `force_pallas` (tests) or fall back
-to the jnp reference — bit-compatible semantics either way. The ragged
-valid-count arguments (`valid_count` / `group_counts` / `kv_count`) are
-traced, so one bucket-sized compile serves every occupancy.
+The model hot path dispatches through these wrappers under a *backend*
+resolved from ``ElasticSpec.kernel_backend``:
+
+  * ``"pallas"``    — real pallas_call (TPU; falls back to the interpreter
+                      when the host has no TPU, so the same graph traces
+                      everywhere);
+  * ``"interpret"`` — pallas_call under interpret=True (CPU verification of
+                      the exact kernel logic, incl. the scalar-prefetch
+                      ragged skip paths);
+  * ``"ref"``       — the pure-jnp oracles in kernels/ref.py (and the jnp
+                      twins inside the model, which are the same math) —
+                      the fast CPU path;
+  * ``"auto"``/None — "pallas" on TPU backends, "ref" elsewhere.
+
+The ragged valid-count arguments (``valid_count`` / ``group_counts`` /
+``kv_count``) are traced, so one bucket-sized compile serves every
+occupancy. Kernel-backed ops carry a custom VJP that replays the jnp
+reference backward (the standard arrangement while the hand-written
+backward kernels don't exist): forward runs the kernel, gradients are the
+reference's — numerically the kernels and references agree to float
+tolerance, so training under ``interpret``/``pallas`` matches ``ref``.
+
+Tests may monkeypatch the kernel modules' entry points; dispatch goes
+through the module attributes (``_fused_mlp_mod.fused_mlp`` etc.) so a
+patch is observed at trace time.
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import numpy as np
 
+import repro.kernels.decode_attention as _decode_mod
+import repro.kernels.flash_attention as _flash_mod
+import repro.kernels.fused_mlp as _fused_mlp_mod
+import repro.kernels.moe_gmm as _moe_gmm_mod
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.fused_mlp import fused_mlp as _fused_mlp
-from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
+
+BACKENDS = ("pallas", "interpret", "ref")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "force_pallas"))
-def flash_attention(q, k, v, kv_valid=None, kv_count=None, *, causal=True,
-                    window=0, force_pallas=False):
-    if _on_tpu() or force_pallas:
-        return _flash(q, k, v, causal=causal, window=window,
-                      kv_valid=kv_valid, kv_count=kv_count,
-                      interpret=not _on_tpu())
+def resolve_backend(name=None) -> str:
+    """Map an ``ElasticSpec.kernel_backend`` value to a concrete backend."""
+    if name in (None, "auto"):
+        return "pallas" if _on_tpu() else "ref"
+    if name not in BACKENDS:
+        raise ValueError(f"kernel_backend must be one of {BACKENDS} or "
+                         f"'auto', got {name!r}")
+    return name
+
+
+def _interp(backend: str) -> bool:
+    # "pallas" off-TPU still runs the kernel, interpreted: one code path
+    return backend == "interpret" or not _on_tpu()
+
+
+def _f0(x):
+    """float0 cotangent for integer/bool primal args in custom VJPs."""
+    return np.zeros(jax.numpy.shape(x), jax.dtypes.float0)
+
+
+# ----------------------------- flash attention -------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _flash_fwd_op(causal, window, backend, q, k, v, kv_valid, cnt):
+    return _flash_mod.flash_attention(
+        q, k, v, causal=causal, window=window, kv_valid=kv_valid,
+        kv_count=cnt, interpret=_interp(backend))
+
+
+def _flash_ref(causal, window, q, k, v, kv_valid, cnt):
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                   kv_valid=kv_valid, kv_count=kv_count)
+                                   kv_valid=kv_valid, kv_count=cnt)
 
 
-@partial(jax.jit, static_argnames=("act", "force_pallas"))
+def _flash_vjp_fwd(causal, window, backend, q, k, v, kv_valid, cnt):
+    out = _flash_fwd_op(causal, window, backend, q, k, v, kv_valid, cnt)
+    return out, (q, k, v, kv_valid, cnt)
+
+
+def _flash_vjp_bwd(causal, window, backend, res, g):
+    q, k, v, kv_valid, cnt = res
+    _, vjp = jax.vjp(lambda q, k, v: _flash_ref(causal, window, q, k, v,
+                                                kv_valid, cnt), q, k, v)
+    dq, dk, dv = vjp(g)
+    return (dq, dk, dv,
+            None if kv_valid is None else _f0(kv_valid),
+            None if cnt is None else _f0(cnt))
+
+
+_flash_fwd_op.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "force_pallas",
+                                   "backend"))
+def flash_attention(q, k, v, kv_valid=None, kv_count=None, *, causal=True,
+                    window=0, force_pallas=False, backend=None):
+    kb = "pallas" if force_pallas else resolve_backend(backend)
+    if kb == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       kv_valid=kv_valid, kv_count=kv_count)
+    return _flash_fwd_op(causal, window, kb, q, k, v, kv_valid, kv_count)
+
+
+# -------------------------------- fused MLP ----------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fused_mlp_op(act, backend, x, wi, wo, wg, tw, cnt):
+    return _fused_mlp_mod.fused_mlp(x, wi, wo, wg, tw, act=act,
+                                    valid_count=cnt,
+                                    interpret=_interp(backend))
+
+
+def _fused_mlp_vjp_fwd(act, backend, x, wi, wo, wg, tw, cnt):
+    out = _fused_mlp_op(act, backend, x, wi, wo, wg, tw, cnt)
+    return out, (x, wi, wo, wg, tw, cnt)
+
+
+def _fused_mlp_vjp_bwd(act, backend, res, g):
+    x, wi, wo, wg, tw, cnt = res
+    diff = tuple(a for a in (x, wi, wo, wg, tw) if a is not None)
+
+    def f(*args):
+        it = iter(args)
+        a = [next(it) if v is not None else None
+             for v in (x, wi, wo, wg, tw)]
+        return ref.fused_mlp_ref(a[0], a[1], a[2], a[3], a[4], act=act,
+                                 valid_count=cnt)
+
+    _, vjp = jax.vjp(f, *diff)
+    grads = iter(vjp(g))
+    out = [next(grads) if v is not None else None
+           for v in (x, wi, wo, wg, tw)]
+    return (*out, None if cnt is None else _f0(cnt))
+
+
+_fused_mlp_op.defvjp(_fused_mlp_vjp_fwd, _fused_mlp_vjp_bwd)
+
+
+@partial(jax.jit, static_argnames=("act", "force_pallas", "backend"))
 def fused_mlp(x, wi, wo, wg=None, token_weights=None, valid_count=None, *,
-              act="swiglu", force_pallas=False):
-    if _on_tpu() or force_pallas:
-        return _fused_mlp(x, wi, wo, wg, token_weights, act=act,
-                          valid_count=valid_count, interpret=not _on_tpu())
-    return ref.fused_mlp_ref(x, wi, wo, wg, token_weights, act=act,
-                             valid_count=valid_count)
+              act="swiglu", force_pallas=False, backend=None):
+    kb = "pallas" if force_pallas else resolve_backend(backend)
+    if kb == "ref":
+        return ref.fused_mlp_ref(x, wi, wo, wg, token_weights, act=act,
+                                 valid_count=valid_count)
+    return _fused_mlp_op(act, kb, x, wi, wo, wg, token_weights, valid_count)
 
 
-@partial(jax.jit, static_argnames=("act", "force_pallas"))
+# ---------------------------- routed fused MLP -------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fused_mlp_routed_op(act, backend, x, idx, wi, wo, wg, tw, cnt):
+    return _fused_mlp_mod.fused_mlp_routed(x, idx, wi, wo, wg, tw, act=act,
+                                           valid_count=cnt,
+                                           interpret=_interp(backend))
+
+
+def _fused_mlp_routed_vjp_fwd(act, backend, x, idx, wi, wo, wg, tw, cnt):
+    out = _fused_mlp_routed_op(act, backend, x, idx, wi, wo, wg, tw, cnt)
+    return out, (x, idx, wi, wo, wg, tw, cnt)
+
+
+def _fused_mlp_routed_vjp_bwd(act, backend, res, g):
+    x, idx, wi, wo, wg, tw, cnt = res
+    diff = tuple(a for a in (x, wi, wo, wg, tw) if a is not None)
+
+    def f(*args):
+        it = iter(args)
+        a = [next(it) if v is not None else None
+             for v in (x, wi, wo, wg, tw)]
+        return ref.fused_mlp_routed_ref(a[0], idx, a[1], a[2], a[3], a[4],
+                                        act=act, valid_count=cnt)
+
+    _, vjp = jax.vjp(f, *diff)
+    grads = iter(vjp(g))
+    out = [next(grads) if v is not None else None
+           for v in (x, wi, wo, wg, tw)]
+    return (out[0], _f0(idx), *out[1:],
+            None if cnt is None else _f0(cnt))
+
+
+_fused_mlp_routed_op.defvjp(_fused_mlp_routed_vjp_fwd,
+                            _fused_mlp_routed_vjp_bwd)
+
+
+@partial(jax.jit, static_argnames=("act", "force_pallas", "backend"))
+def fused_mlp_routed(x, idx, wi, wo, wg=None, token_weights=None,
+                     valid_count=None, *, act="swiglu", force_pallas=False,
+                     backend=None):
+    """Gather/scatter-fused routed MLP: x (B,S,D) full stream, idx (B,Kb)
+    RoutingPlan indices; returns the (B,S,D) delta (see fused_mlp.py)."""
+    kb = "pallas" if force_pallas else resolve_backend(backend)
+    if kb == "ref":
+        return ref.fused_mlp_routed_ref(x, idx, wi, wo, wg, token_weights,
+                                        act=act, valid_count=valid_count)
+    return _fused_mlp_routed_op(act, kb, x, idx, wi, wo, wg, token_weights,
+                                valid_count)
+
+
+# --------------------------------- MoE GMM -----------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _moe_gmm_op(act, backend, x, wi, wo, wg, w, cnt):
+    return _moe_gmm_mod.moe_gmm(x, wi, wo, wg, w, act=act,
+                                group_counts=cnt, interpret=_interp(backend))
+
+
+def _moe_gmm_vjp_fwd(act, backend, x, wi, wo, wg, w, cnt):
+    out = _moe_gmm_op(act, backend, x, wi, wo, wg, w, cnt)
+    return out, (x, wi, wo, wg, w, cnt)
+
+
+def _moe_gmm_vjp_bwd(act, backend, res, g):
+    x, wi, wo, wg, w, cnt = res
+    diff = tuple(a for a in (x, wi, wo, wg, w) if a is not None)
+
+    def f(*args):
+        it = iter(args)
+        a = [next(it) if v is not None else None
+             for v in (x, wi, wo, wg, w)]
+        return ref.moe_gmm_ref(a[0], a[1], a[2], a[3], a[4], act=act,
+                               group_counts=cnt)
+
+    _, vjp = jax.vjp(f, *diff)
+    grads = iter(vjp(g))
+    out = [next(grads) if v is not None else None
+           for v in (x, wi, wo, wg, w)]
+    return (*out, None if cnt is None else _f0(cnt))
+
+
+_moe_gmm_op.defvjp(_moe_gmm_vjp_fwd, _moe_gmm_vjp_bwd)
+
+
+@partial(jax.jit, static_argnames=("act", "force_pallas", "backend"))
 def moe_gmm(x, wi, wo, wg=None, weights=None, group_counts=None, *,
-            act="swiglu", force_pallas=False):
-    if _on_tpu() or force_pallas:
-        return _moe_gmm(x, wi, wo, wg, weights, act=act,
-                        group_counts=group_counts, interpret=not _on_tpu())
-    return ref.moe_gmm_ref(x, wi, wo, wg, weights, act=act,
-                           group_counts=group_counts)
+            act="swiglu", force_pallas=False, backend=None):
+    kb = "pallas" if force_pallas else resolve_backend(backend)
+    if kb == "ref":
+        return ref.moe_gmm_ref(x, wi, wo, wg, weights, act=act,
+                               group_counts=group_counts)
+    return _moe_gmm_op(act, kb, x, wi, wo, wg, weights, group_counts)
+
+
+# ----------------------------- decode attention ------------------------------
+
+@partial(jax.jit, static_argnames=("window", "force_pallas", "backend"))
+def decode_attention(q, k, v, kv_pos, t, kv_valid=None, *, window=0,
+                     force_pallas=False, backend=None):
+    """Ring-cache decode attention (see kernels/decode_attention.py).
+    Inference-only: no VJP (decode is never differentiated)."""
+    kb = "pallas" if force_pallas else resolve_backend(backend)
+    if kb == "ref":
+        return ref.decode_attention_ref(q, k, v, kv_pos, t, window=window,
+                                        kv_valid=kv_valid)
+    return _decode_mod.decode_attention(q, k, v, kv_pos, t, window=window,
+                                        kv_valid=kv_valid,
+                                        interpret=_interp(kb))

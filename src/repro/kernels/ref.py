@@ -45,12 +45,42 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
     return ctx.astype(q.dtype)
 
 
+def decode_attention_ref(q, k, v, kv_pos, t, *, window=0, kv_valid=None,
+                         sm_scale=None):
+    """Ring-cache decode attention oracle. q: (B,1,H,Dh); k,v: (B,L,K,Dh);
+    kv_pos: (B,L) absolute positions (-1 = empty); t: (B,) per-slot decode
+    positions. Masks by the cache's position array, not by slot index."""
+    B, Sq, H, Dh = q.shape
+    L, K = k.shape[1], k.shape[2]
+    G = H // K
+    sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
+    qg = q.reshape(B, Sq, K, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * sm_scale
+    pos = kv_pos.astype(jnp.int32)
+    mask = (pos >= 0) & (pos <= t[:, None])
+    if window and window > 0:
+        mask &= (t[:, None] - pos) < window
+    if kv_valid is not None:
+        mask &= kv_valid
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", a, v.astype(jnp.float32))
+    ctx = ctx.reshape(B, Sq, H, Dh)
+    # rows with NO attendable key (fresh slot, everything routed out):
+    # softmax of an all -NEG_INF row is uniform garbage — the kernel
+    # returns exact zeros there, and this oracle must match it
+    ctx = jnp.where(mask.any(-1)[:, None, None, None], ctx, 0.0)
+    return ctx.astype(q.dtype)
+
+
 def _act(name):
     return jax.nn.silu if name == "swiglu" else jax.nn.gelu
 
 
 def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
                   valid_count=None):
+    """x: (T, D) or (B, T, D); valid_count: None | scalar | (B,)."""
     xf = x.astype(jnp.float32)
     h = xf @ wi.astype(jnp.float32)
     if wg is not None:
@@ -60,26 +90,51 @@ def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
         h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
     y = h @ wo.astype(jnp.float32)
     if token_weights is not None:
-        y = y * token_weights.astype(jnp.float32)[:, None]
+        y = y * token_weights.astype(jnp.float32)[..., None]
     if valid_count is not None:
-        y = jnp.where(jnp.arange(x.shape[0])[:, None] < valid_count, y, 0.0)
+        cnt = jnp.asarray(valid_count, jnp.int32)
+        rows = jnp.arange(x.shape[-2])
+        if x.ndim == 3:
+            cnt = jnp.broadcast_to(cnt.reshape(-1), (x.shape[0],))
+            y = jnp.where(rows[None, :, None] < cnt[:, None, None], y, 0.0)
+        else:
+            y = jnp.where(rows[:, None] < cnt, y, 0.0)
     return y.astype(x.dtype)
+
+
+def fused_mlp_routed_ref(x, idx, wi, wo, wg=None, token_weights=None, *,
+                         act="swiglu", valid_count=None):
+    """Gather/compute/scatter oracle for the index-prefetch routed MLP.
+    x: (B, S, D); idx: (B, Kb); returns the (B, S, D) delta."""
+    B, S, D = x.shape
+    Kb = idx.shape[-1]
+    expand = (slice(None), slice(None), None)
+    x_sel = jnp.take_along_axis(x, idx[expand], axis=1)
+    tw = (jnp.ones((B, Kb), x.dtype) if token_weights is None
+          else token_weights)
+    y = fused_mlp_ref(x_sel, wi, wo, wg, tw, act=act,
+                      valid_count=valid_count)
+    out = jnp.zeros_like(x)
+    b = jnp.arange(B)[:, None]
+    return out.at[b, idx].add(y.astype(x.dtype))
 
 
 def moe_gmm_ref(x, wi, wo, wg=None, weights=None, *, act="swiglu",
                 group_counts=None):
+    """x: (E, C, D) or batched (B, E, C, D); group_counts: (E,) / (B, E)."""
     xf = x.astype(jnp.float32)
-    h = jnp.einsum("ecd,edf->ecf", xf, wi.astype(jnp.float32))
+    h = jnp.einsum("...ecd,edf->...ecf", xf, wi.astype(jnp.float32))
     if wg is not None:
-        g = _act(act)(jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32)))
+        g = _act(act)(jnp.einsum("...ecd,edf->...ecf", xf,
+                                 wg.astype(jnp.float32)))
         h = g * h
     else:
         h = _act(act)(h)
-    y = jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32))
+    y = jnp.einsum("...ecf,efd->...ecd", h, wo.astype(jnp.float32))
     if weights is not None:
         y = y * weights.astype(jnp.float32)[..., None]
     if group_counts is not None:
         cnt = jnp.asarray(group_counts, jnp.int32)
-        y = jnp.where(jnp.arange(x.shape[1])[None, :, None] < cnt[:, None, None],
-                      y, 0.0)
+        y = jnp.where(
+            jnp.arange(x.shape[-2])[:, None] < cnt[..., None, None], y, 0.0)
     return y.astype(x.dtype)

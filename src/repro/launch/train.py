@@ -102,7 +102,10 @@ def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
                 # ragged: the STATIC capacity bucket rides beside the traced
                 # policy — the whole anneal schedule costs one compile per
                 # bucket (<= routing.RAGGED_N_BUCKETS), each doing work
-                # proportional to its bucket instead of full dense shapes
+                # proportional to its bucket instead of full dense shapes;
+                # a full-budget start resolves the IDENTITY sentinel bucket,
+                # so the anneal's teacher-speed steps skip routing work
+                # while the routers keep their BCE/load gradients
                 pol = solve_budget(cfg, spec, b)
                 bkt = (ragged_bucket(pol, seq_len)
                        if spec.routing_impl == "ragged" else None)

@@ -23,12 +23,31 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lora import lora_apply
+from repro.kernels import ops as OPS
 from repro.models import flags
 from repro.models.layers import dense_init, dtype_of, rope_apply, rope_tables
 
 NEG_INF = -1e30
 BLOCKED_THRESHOLD = 2048   # use blocked attention when Sk exceeds this
 KV_BLOCK = 1024
+
+
+def _kernel_ok(backend, cfg, *, window: int = 0, gathered: bool = False,
+               causal: bool = True) -> bool:
+    """Whether the Pallas flash/decode kernels may serve this attention
+    call. The kernels mask causality/window by ARRAY INDEX (the ragged
+    prefix contract: gathered tokens stay position-ascending, so
+    index-causal == position-causal), but a sliding WINDOW measures
+    position distance — on a gathered subset index distance underestimates
+    it regardless of causality, so windowed gathered attention keeps the
+    jnp twins. TP head padding (Hp != H) would skew the kernels'
+    head->kv-group mapping."""
+    del causal  # window masking is position-based whether causal or not
+    if backend not in ("pallas", "interpret"):
+        return False
+    if cfg is not None and cfg.n_heads_p != cfg.n_heads:
+        return False
+    return not (window and window > 0 and gathered)
 
 
 def _expand_kv(t, hp: int, h: Optional[int] = None):
@@ -237,14 +256,23 @@ def blocked_sdpa(q, k, v, q_pos, kv_pos, causal, window, kv_valid=None,
 
 def attn_apply(
     p, x, *, cfg, positions, causal: bool = True, window: int = 0,
-    kv_x=None, kv_positions=None, kv_valid=None,
+    kv_x=None, kv_positions=None, kv_valid=None, kv_count=None,
     head_weights=None, lora=None, use_rope: bool = True,
+    backend=None, gathered: bool = False,
 ):
     """Full-sequence attention (train / prefill). Self-attn if kv_x is None.
 
     head_weights: (B, Sq, H) f32 ElastiFormer head-routing weights (already
     masked, logical heads); multiplies per-head context before the output
     projection — Alg. 1 output scaling = straight-through router gradient.
+
+    ``backend`` ("pallas"/"interpret") routes the softmax-attention core
+    through ``kernels.ops.flash_attention`` — the scalar-prefetched
+    ``kv_count`` (a RoutingPlan's true token count, () or (B,)) then skips
+    every kv/q block past the ragged prefix. ``gathered`` declares that
+    q/kv rows are a RoutingPlan buffer (position-ascending subset): causal
+    masking by index is exact there, sliding windows are not (see
+    ``_kernel_ok``). The default/"ref" backend keeps the jnp twins.
     Returns (out (B,Sq,D), k, v) — k/v (logical K heads) for caches."""
     cross = kv_x is not None
     q = _project_q(p, x, positions, cfg, lora, use_rope and not cross)
@@ -254,14 +282,23 @@ def attn_apply(
     else:
         k, v = _project_kv(p, x, positions, cfg, lora, use_rope)
         kvp = positions
-    eff_window = window if (window and window > 0) else k.shape[1]
-    if min(k.shape[1], eff_window) > BLOCKED_THRESHOLD:
-        qp = positions if positions.ndim == 2 else jnp.broadcast_to(positions, x.shape[:2])
-        ctx = blocked_sdpa(q, k, v, qp, kvp, causal and not cross, window,
-                           kv_valid, cfg=cfg)
+    if _kernel_ok(backend, cfg, window=window, gathered=gathered,
+                  causal=causal and not cross):
+        if kv_valid is not None and kv_valid.ndim == 1:
+            kv_valid = jnp.broadcast_to(kv_valid, k.shape[:2])
+        ctx = OPS.flash_attention(q, k, v, kv_valid=kv_valid,
+                                  kv_count=kv_count,
+                                  causal=causal and not cross,
+                                  window=window or 0, backend=backend)
     else:
-        mask = _mask(positions, kvp, causal and not cross, window, kv_valid)
-        ctx = sdpa(q, k, v, mask, cfg=cfg)
+        eff_window = window if (window and window > 0) else k.shape[1]
+        if min(k.shape[1], eff_window) > BLOCKED_THRESHOLD:
+            qp = positions if positions.ndim == 2 else jnp.broadcast_to(positions, x.shape[:2])
+            ctx = blocked_sdpa(q, k, v, qp, kvp, causal and not cross, window,
+                               kv_valid, cfg=cfg)
+        else:
+            mask = _mask(positions, kvp, causal and not cross, window, kv_valid)
+            ctx = sdpa(q, k, v, mask, cfg=cfg)
     if head_weights is not None:
         ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
     out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
@@ -271,6 +308,7 @@ def attn_apply(
 def attn_decode(
     p, x, cache, t, *, cfg, window: int = 0, head_weights=None, lora=None,
     use_rope: bool = True, write: Optional[jnp.ndarray] = None,
+    backend=None,
 ):
     """One decode step. x: (B,1,D); cache: {'k','v': (B,L,K,Dh),
     'valid': (B,L), 'pos': (B,L) i32}; t: scalar position, or a (B,) i32
@@ -319,7 +357,13 @@ def attn_decode(
             cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
     new_cache = {"k": ck, "v": cv, "valid": valid, "pos": cpos}
     kv_valid = valid & (cpos >= 0)
-    if L > BLOCKED_THRESHOLD:
+    if _kernel_ok(backend, cfg):
+        # ring-cache decode kernel: per-slot positions ride scalar
+        # prefetch, masking is by the cache's absolute-position array
+        tvec = t if per_row else jnp.broadcast_to(t, (B,))
+        ctx = OPS.decode_attention(q, ck, cv, cpos, tvec, kv_valid=valid,
+                                   window=window or 0, backend=backend)
+    elif L > BLOCKED_THRESHOLD:
         ctx = blocked_sdpa(q, ck, cv, pos, cpos, True, window, kv_valid,
                            cfg=cfg)
     else:

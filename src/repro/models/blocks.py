@@ -28,6 +28,15 @@ Token routing semantics per mixer family:
   ssm/rglru : skipped tokens leave the recurrent state untouched (dt=0 /
               a=1 exact pass-through); dense-masked in both train and infer
               so train/infer semantics coincide.
+
+Routed execution (this PR's hot path): train-mode top-k selection is
+planned ONCE per block (core/routing.RoutingPlan — one sort, shared by the
+attention and MLP/MoE students; each weights the shared token set with its
+own router), full-budget policies compile the identity graph (no routing
+work, bit-exact teacher), and ``spec.kernel_backend`` dispatches the block
+math through the Pallas kernels (flash attention with scalar-prefetched
+kv_count, fused/routed MLP, grouped expert matmul, ring-cache decode
+attention) or their jnp twins.
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import routing as R
+from repro.kernels import ops as OPS
 from repro.runtime import sharding as SH
 from repro.core.moefy import moefy_mlp
 from repro.core.lora import lora_init
@@ -45,6 +55,13 @@ from repro.models import rglru as G
 from repro.models import ssm as S
 from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
 from repro.models.moe import moe_apply, moe_decode, moe_init
+
+
+# VMEM budget for fused_mlp_routed's resident per-row output slab (it
+# holds one (S, D) block for a whole batch row): ~4 MiB leaves room for
+# the weight/f-tiles on a 16 MiB-VMEM core. Beyond it the plan path falls
+# back to gather-in-XLA + the batched fused_mlp kernel.
+ROUTED_MLP_SLAB_BYTES = 4 * 1024 * 1024
 
 
 def has_mlp(kind: str) -> bool:
@@ -104,12 +121,6 @@ def block_router_init(key, kind: str, cfg, spec):
 
 # ------------------------- helpers ------------------------------------------
 
-def _round_k(capacity: float, s: int) -> int:
-    """MXU-rounded top-k count (the canonical rule lives in routing so the
-    traced masking path selects identical token counts)."""
-    return R.capacity_k(capacity, s, mxu=True)
-
-
 def _expert_args(pol, n_experts: int) -> dict:
     """moe_apply/moe_decode kwargs for the elastic expert budget: a static
     int keeps the small-k graph; a traced count sizes buffers for all E and
@@ -152,14 +163,17 @@ def _head_weights(rp, h, spec, pol, cfg, auxes, valid=None):
     return jnp.where(R.bcast_to(full, hw.ndim), 1.0, hw)
 
 
-def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
+def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes, backend=None):
     """Returns f(h_sub, pos_sub[, token_valid, dispatch_frac, token_count])
     for the MLP/MoE sub-block. The masked (traced-capacity) token-routing
     path hands in ``token_valid``/``dispatch_frac`` so skipped tokens cannot
     evict kept ones from expert capacity; the ragged bucket path hands in
     ``token_valid``/``token_count`` (prefix buffers) — either way the
     dispatch buffers match what the static gather path would have compiled
-    for the same budget."""
+    for the same budget. ``backend`` "pallas"/"interpret" executes the
+    dense MLP through ``kernels.ops.fused_mlp`` (``token_count`` becomes
+    the kernel's scalar-prefetched ``valid_count``) and expert dispatch
+    through ``kernels.ops.moe_gmm``."""
     def f(h, _pos, token_valid=None, dispatch_frac=None, token_count=None):
         if cfg.moe is not None:
             if elastic_on and rp and "expert" in rp and mode != "base":
@@ -169,13 +183,15 @@ def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
                     capacity_factor=cfg.moe.capacity_factor,
                     seq_chunk=cfg.moe.seq_chunk, token_valid=token_valid,
                     dispatch_frac=dispatch_frac, token_count=token_count,
+                    backend=backend,
                     **_expert_args(pol, cfg.moe.n_experts))
             else:
                 y, a = moe_apply(
                     p["mlp"], h, act=cfg.act, top_k=cfg.moe.top_k,
                     capacity_factor=cfg.moe.capacity_factor,
                     seq_chunk=cfg.moe.seq_chunk, token_valid=token_valid,
-                    dispatch_frac=dispatch_frac, token_count=token_count)
+                    dispatch_frac=dispatch_frac, token_count=token_count,
+                    backend=backend)
             auxes.append(a)
             return y
         if (elastic_on and rp and "expert" in rp and mode != "base"
@@ -189,14 +205,46 @@ def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes):
                 router_w=rp["expert"]["w"], normalize_to_m=True,
                 seq_chunk=512, token_valid=token_valid,
                 dispatch_frac=dispatch_frac, token_count=token_count,
+                backend=backend,
                 **_expert_args(pol, spec.mlp_n_experts))
             auxes.append(a)
             return y
+        if backend in ("pallas", "interpret"):
+            return OPS.fused_mlp(h, p["mlp"]["wi"], p["mlp"]["wo"],
+                                 p["mlp"].get("wg"),
+                                 valid_count=token_count, act=cfg.act,
+                                 backend=backend)
         return mlp_apply(p["mlp"], h, cfg.act)
     return f
 
 
+def _is_dense_mlp(p, rp, cfg, spec, elastic_on, mode) -> bool:
+    """True when the MLP sub-block is the plain dense MLP (no native MoE,
+    no moefied expert routing) — the case the gather/scatter-fused routed
+    kernel (``fused_mlp_routed``) can serve directly."""
+    if cfg.moe is not None:
+        return False
+    return not (elastic_on and rp and "expert" in rp and mode != "base"
+                and spec is not None and spec.mlp_n_experts)
+
+
 # --------------------- full-sequence block apply ----------------------------
+
+def _combine_caps(cap_a, cap_b):
+    """Block-level plan capacity: the elementwise max of the active
+    components' (already student-gated) token capacities. The budget
+    solver and every policy constructor set them equal; when a caller
+    hands diverging per-component capacities the shared plan covers the
+    larger one (and the smaller component rides the same token set)."""
+    if cap_a is None:
+        return cap_b
+    if cap_b is None:
+        return cap_a
+    if R.is_static(cap_a) and R.is_static(cap_b):
+        return max(cap_a, cap_b)
+    return jnp.maximum(jnp.asarray(cap_a, jnp.float32),
+                       jnp.asarray(cap_b, jnp.float32))
+
 
 def block_apply(
     kind: str, p, rp, x, *, cfg, spec, pol=None, mode: str, elastic_on: bool,
@@ -206,115 +254,169 @@ def block_apply(
 ):
     """x: (B,S,D) -> (x', aux[, cache]). Pre-norm residual block.
 
-    ``bucket``: static ragged buffer size hint for traced-capacity token
-    routing under ``spec.routing_impl == "ragged"`` (see core/policy.
-    ragged_bucket). It must cover the largest per-row top-k this graph will
-    see; None falls back to the dense rank-masked path."""
+    Train-mode token routing is planned ONCE per block: a single
+    ``RoutingPlan`` (one sort — see core/routing) built from the block's
+    primary token router (the mixer router when attention is token-routed,
+    else the MLP router) is shared by the attention and MLP/MoE students —
+    each component weights the shared token set with its OWN router's
+    scores (straight-through gradients to both routers) and BCE-trains its
+    router against the shared membership. Per-component capacities are
+    unified at the block level (``_combine_caps``); the budget solver
+    always sets them equal.
+
+    ``bucket``: static plan-buffer hint for traced-capacity routing under
+    ``spec.routing_impl == "ragged"`` (see core/policy.ragged_bucket). It
+    must cover the largest per-row top-k this graph will see;
+    ``routing.IDENTITY_BUCKET`` asserts every row is at full budget and
+    compiles the IDENTITY fast path (no partition/gather/scatter — the
+    bit-exact teacher math, with router aux losses still emitted); None
+    falls back to the dense rank-masked path. ``spec.kernel_backend``
+    selects how the hot math executes (Pallas kernels vs jnp twins — see
+    kernels/ops.py)."""
     B, Seq, D = x.shape
     auxes = [R.RouteAux.zero()]
     if positions is None:
         positions = jnp.arange(Seq, dtype=jnp.int32)
     routed = elastic_on and mode != "base"
+    backend = OPS.resolve_backend(
+        spec.kernel_backend if spec is not None else None)
     cache = {}
+
+    # ---- block-level routing plan resolution ----
+    cap_mha = cap_mlp = None
+    if routed and spec is not None and rp:
+        if spec.mha_token_routed and "tok_mixer" in rp:
+            cap_mha = R.gate_capacity(pol.mha_token_capacity, pol.student)
+        if has_mlp(kind) and spec.mlp_token_routed and "tok_mlp" in rp:
+            cap_mlp = R.gate_capacity(pol.mlp_token_capacity, pol.student)
+    cap_plan = _combine_caps(cap_mha, cap_mlp)
+    impl = spec.routing_impl if spec is not None else "gather"
+    kb = None
+    if mode == "train" and cap_plan is not None and (
+            impl == "ragged" or (impl == "gather" and R.is_static(cap_plan)
+                                 and R.is_static(pol.theta))):
+        kb = R.resolve_bucket(cap_plan, Seq, bucket, impl=impl)
+    identity = kb == Seq            # full budget everywhere: skip routing
+    k_plan = None if (kb is None or identity) else \
+        R.capacity_k(cap_plan, Seq, mxu=True)
+    plan = None                     # built lazily by the first consumer
+    plan_on_mixer = cap_mha is not None
+
+    def build_plan(h_src):
+        """The block's ONE RoutingPlan sort, from the primary router."""
+        name = "tok_mixer" if plan_on_mixer else "tok_mlp"
+        logits = R.token_logits(rp[name], h_src)
+        scores = jax.nn.sigmoid(logits)
+        return R.make_plan(scores, k_plan, kb), logits, scores
+
+    def bce_aux(logits, keep, train):
+        if train:
+            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
+                                       keep=keep))
+        else:
+            auxes.append(R.RouteAux.of(keep=keep))
 
     # ---- temporal mixer ----
     h = norm_apply(p["norm1"], x, cfg.norm)
-    cap = None
-    if routed and spec is not None and spec.mha_token_routed:
-        cap = R.gate_capacity(pol.mha_token_capacity, pol.student)
+    dense_keep = None               # shared keep of the dense fallback
 
     if is_attn(kind):
         lora = rp.get("lora") if (routed and rp) else None
-        lora = _lora_gate(lora, cap,
+        lora = _lora_gate(lora, cap_mha,
                           pol.student if (routed and pol is not None) else None)
-        if cap is None:
+        if cap_mha is None:
             hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
                                auxes) if routed else None
             y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
                                    causal=causal, window=window,
-                                   head_weights=hw, lora=lora)
+                                   head_weights=hw, lora=lora,
+                                   backend=backend)
             delta, keep = y, jnp.ones((B, Seq), bool)
-        elif (mode == "train" and spec.routing_impl == "gather"
-              and R.is_static(cap) and cap < 1.0):
+        elif identity:
+            # full budget on every row: bit-exact teacher attention, no
+            # partition/sort/masking — the router still trains (BCE toward
+            # keep-everything, exactly what the dense path emits at 1.0)
             logits = R.token_logits(rp["tok_mixer"], h)
-            scores = jax.nn.sigmoid(logits)
-            kk = _round_k(cap, Seq)
-            idx = R.topk_indices(scores, kk)
-            h_sel = R.gather_tokens(h, idx)
-            pos_sel = jnp.take_along_axis(
-                jnp.broadcast_to(positions, (B, Seq)), idx, 1)
-            hw = _head_weights(rp, h_sel, spec, pol, cfg, auxes)
-            y_sel, k, v = A.attn_apply(p["attn"], h_sel, cfg=cfg,
-                                       positions=pos_sel, causal=causal,
-                                       window=window, head_weights=hw,
-                                       lora=lora)
-            w_sel = jnp.take_along_axis(scores, idx, 1)
-            delta = R.scatter_add_tokens(
-                x, idx, y_sel * w_sel[..., None].astype(y_sel.dtype))
-            keep = R.topk_mask(scores, kk)
-            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
-                                       keep=keep))
-            if collect_cache:  # scatter k/v back to full positions
-                k = _scatter_kv(k, idx, B, Seq)
-                v = _scatter_kv(v, idx, B, Seq)
-        elif (mode == "train" and spec.routing_impl == "ragged"
-              and (Kb := R.resolve_bucket(cap, Seq, bucket)) is not None):
-            # ragged capacity bucket: selected tokens gathered valid-first
-            # (position-ascending prefix), tail filled + masked. Static caps
-            # derive the bucket here (budgets sharing a bucket share the
-            # compile); traced caps ride the caller's static bucket hint.
-            logits = R.token_logits(rp["tok_mixer"], h)
-            scores = jax.nn.sigmoid(logits)
-            kk = _round_k(cap, Seq)
-            idx, pvalid, _ = R.ragged_select(scores, kk, Kb)
-            h_sel = R.gather_tokens(h, idx)
-            pos_sel = jnp.take_along_axis(
-                jnp.broadcast_to(positions, (B, Seq)), idx, 1)
-            hw = _head_weights(rp, h_sel, spec, pol, cfg, auxes,
-                               valid=pvalid)
-            y_sel, k, v = A.attn_apply(p["attn"], h_sel, cfg=cfg,
-                                       positions=pos_sel, causal=causal,
-                                       window=window, kv_valid=pvalid,
-                                       head_weights=hw, lora=lora)
-            w_sel = jnp.take_along_axis(scores, idx, 1) * pvalid
-            delta = R.scatter_add_tokens(
-                x, idx, y_sel * w_sel[..., None].astype(y_sel.dtype))
-            keep = R.topk_mask_dyn(scores, kk)
-            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
-                                       keep=keep))
-            if collect_cache:  # scatter valid k/v back to full positions
-                k = _scatter_kv(k, idx, B, Seq)
-                v = _scatter_kv(v, idx, B, Seq)
-        else:  # threshold (infer/prefill), dense_mask, or traced capacity
-            logits = R.token_logits(rp["tok_mixer"], h)
-            scores = jax.nn.sigmoid(logits)
-            keep, wtok = R.token_gate(logits, scores, cap, mode,
-                                      theta=pol.theta, mxu=True)
-            if mode == "train":
-                auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
-                                           keep=keep))
-            else:
-                auxes.append(R.RouteAux.of(keep=keep))
+            keep = jnp.ones((B, Seq), bool)
+            bce_aux(logits, keep, train=True)
             hw = _head_weights(rp, h, spec, pol, cfg, auxes)
             y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
                                    causal=causal, window=window,
-                                   kv_valid=keep, head_weights=hw, lora=lora)
+                                   head_weights=hw, lora=lora,
+                                   backend=backend)
+            delta = y
+        elif kb is not None:
+            # shared plan (ragged capacity bucket, or exact static gather):
+            # selected tokens gathered valid-first (position-ascending
+            # prefix), tail filled + masked. Static caps derive the bucket
+            # here (budgets sharing a bucket share the compile); traced
+            # caps ride the caller's static bucket hint.
+            plan, logits, scores = build_plan(h)
+            h_sel = R.plan_gather(h, plan)
+            pos_sel = jnp.take_along_axis(
+                jnp.broadcast_to(positions, (B, Seq)), plan.idx, 1)
+            hw = _head_weights(rp, h_sel, spec, pol, cfg, auxes,
+                               valid=plan.valid)
+            y_sel, k, v = A.attn_apply(p["attn"], h_sel, cfg=cfg,
+                                       positions=pos_sel, causal=causal,
+                                       window=window, kv_valid=plan.valid,
+                                       kv_count=plan.count, head_weights=hw,
+                                       lora=lora, backend=backend,
+                                       gathered=True)
+            w_sel = jnp.take_along_axis(scores, plan.idx, 1) * plan.valid
+            delta = R.plan_scatter(
+                plan, x, y_sel * w_sel[..., None].astype(y_sel.dtype))
+            keep = plan.keep
+            bce_aux(logits, keep, train=True)
+            if collect_cache:  # scatter valid k/v back to full positions
+                k = _scatter_kv(k, plan.idx, B, Seq)
+                v = _scatter_kv(v, plan.idx, B, Seq)
+        else:  # threshold (infer/prefill), dense_mask, or traced capacity
+            logits = R.token_logits(rp["tok_mixer"], h)
+            scores = jax.nn.sigmoid(logits)
+            # train-mode selection stays block-shared: rank-mask with the
+            # plan capacity so dense == plan == gather token sets
+            sel_cap = cap_plan if mode == "train" else cap_mha
+            keep, wtok = R.token_gate(logits, scores, sel_cap, mode,
+                                      theta=pol.theta, mxu=True)
+            bce_aux(logits, keep, train=mode == "train")
+            if mode == "train":
+                dense_keep = keep
+            # head-router stats over the SELECTED tokens only, matching
+            # the plan path (whose buffer holds exactly the selected set)
+            hw = _head_weights(rp, h, spec, pol, cfg, auxes,
+                               valid=keep if mode == "train" else None)
+            y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
+                                   causal=causal, window=window,
+                                   kv_valid=keep, head_weights=hw, lora=lora,
+                                   backend=backend)
             delta = y * wtok[..., None].astype(y.dtype)
         if collect_cache:
             L = max_cache_len or Seq
             cache["attn"] = _pad_cache(k, v, keep, L, window)
     else:  # ssm / rglru — dense masked routing (state pass-through semantics)
         keep = None
-        if cap is not None:
-            logits = R.token_logits(rp["tok_mixer"], h)
-            scores = jax.nn.sigmoid(logits)
-            keep, wtok = R.token_gate(logits, scores, cap, mode,
-                                      theta=pol.theta, mxu=True)
-            if mode == "train":
-                auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
-                                           keep=keep))
+        if cap_mha is not None:
+            if identity:
+                keep, wtok = None, None
+                bce_aux(R.token_logits(rp["tok_mixer"], h),
+                        jnp.ones((B, Seq), bool), train=True)
+            elif kb is not None:
+                # recurrent mixers cannot gather (state pass-through): they
+                # consume the shared plan's MEMBERSHIP as a dense mask
+                plan, logits, scores = build_plan(h)
+                keep = plan.keep
+                wtok = keep * scores
+                bce_aux(logits, keep, train=True)
             else:
-                auxes.append(R.RouteAux.of(keep=keep))
+                logits = R.token_logits(rp["tok_mixer"], h)
+                scores = jax.nn.sigmoid(logits)
+                sel_cap = cap_plan if mode == "train" else cap_mha
+                keep, wtok = R.token_gate(logits, scores, sel_cap, mode,
+                                          theta=pol.theta, mxu=True)
+                bce_aux(logits, keep, train=mode == "train")
+                if mode == "train":
+                    dense_keep = keep
         if kind == "ssm":
             y, (st, cv) = S.ssm_apply(p["mixer"], h, cfg, keep_mask=keep)
             if collect_cache:
@@ -336,7 +438,7 @@ def block_apply(
         y, xk, xv = A.attn_apply(
             p["xattn"], hx, cfg=cfg, positions=positions, causal=False,
             kv_x=enc_kv, kv_positions=jnp.arange(enc_kv.shape[1]),
-            kv_valid=enc_valid, use_rope=False)
+            kv_valid=enc_valid, use_rope=False, backend=backend)
         x = x + y
         if collect_cache:
             ev = (jnp.ones(enc_kv.shape[:2], bool) if enc_valid is None
@@ -346,34 +448,73 @@ def block_apply(
     # ---- MLP ----
     if has_mlp(kind):
         h = norm_apply(p["norm2"], x, cfg.norm)
-        f = _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes)
-        cap_mlp = None
-        if routed and spec is not None and spec.mlp_token_routed:
-            cap_mlp = R.gate_capacity(pol.mlp_token_capacity, pol.student)
-        if (cap_mlp is not None and mode == "train"
-                and not R.is_static(cap_mlp)
-                and R.resolve_bucket(cap_mlp, Seq, bucket) is None):
-            # traced capacity without a covering bucket: dense compute, rank
-            # masking; bar skipped tokens from expert dispatch so the
-            # one-graph result matches the per-budget gather compile
+        f = _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes,
+                    backend=backend)
+        if cap_mlp is None:
+            delta = f(h, positions)
+        elif identity:
+            logits = R.token_logits(rp["tok_mlp"], h)
+            bce_aux(logits, jnp.ones((B, Seq), bool), train=True)
+            delta = f(h, positions)
+        elif kb is not None:
+            # reuse the block plan (built by the mixer when it is routed;
+            # otherwise this IS the block's one sort, on the MLP router)
+            if plan is None:
+                plan, logits, scores = build_plan(h)
+            else:
+                logits = R.token_logits(rp["tok_mlp"], h)
+                scores = jax.nn.sigmoid(logits)
+            w_sel = jnp.take_along_axis(scores, plan.idx, 1) * plan.valid
+            # the gather/scatter-fused kernel keeps one (S, D) output slab
+            # resident in VMEM — only profitable (and compilable) while
+            # that slab fits; bigger shapes gather in XLA and run the
+            # batched fused_mlp kernel on the bucket buffer instead
+            slab = Seq * D * jnp.dtype(x.dtype).itemsize
+            if (backend in ("pallas", "interpret")
+                    and _is_dense_mlp(p, rp, cfg, spec, elastic_on, mode)
+                    and slab <= ROUTED_MLP_SLAB_BYTES):
+                # plan indices ride scalar prefetch; the bucket buffer
+                # never hits HBM
+                delta = OPS.fused_mlp_routed(
+                    h, plan.idx, p["mlp"]["wi"], p["mlp"]["wo"],
+                    p["mlp"].get("wg"), w_sel, valid_count=plan.count,
+                    act=cfg.act, backend=backend).astype(x.dtype)
+            else:
+                h_sel = R.plan_gather(h, plan)
+                pos_sel = jnp.take_along_axis(
+                    jnp.broadcast_to(positions, (B, Seq)), plan.idx, 1)
+                y_sel = f(h_sel, pos_sel, token_valid=plan.valid,
+                          token_count=plan.count)
+                delta = R.plan_scatter(
+                    plan, x, y_sel * w_sel[..., None].astype(y_sel.dtype))
+            bce_aux(logits, plan.keep, train=True)
+        elif mode == "train":
+            # dense fallback (traced capacity without a covering bucket, or
+            # dense_mask impl): selection shared with the mixer stage when
+            # it ran; expert dispatch is barred from skipped tokens so the
+            # one-graph result matches the per-budget plan compile
             logits = R.token_logits(rp["tok_mlp"], h)
             scores = jax.nn.sigmoid(logits)
-            keep, wtok = R.token_gate(logits, scores, cap_mlp, mode,
-                                      theta=pol.theta, mxu=True)
-            y = f(h, positions, token_valid=keep, dispatch_frac=cap_mlp)
+            if dense_keep is not None:
+                keep = dense_keep
+                full = R.is_full(cap_plan)
+                if R.is_static(full):
+                    wtok = jnp.ones_like(scores) if full else keep * scores
+                else:
+                    wtok = jnp.where(R.bcast_to(full, keep.ndim), 1.0,
+                                     keep * scores)
+            else:
+                keep, wtok = R.token_gate(logits, scores, cap_plan, mode,
+                                          theta=pol.theta, mxu=True)
+            y = f(h, positions, token_valid=keep, dispatch_frac=cap_plan)
             delta = y * wtok[..., None].astype(y.dtype)
-            auxes.append(R.RouteAux.of(topk=R.bce_topk_loss(logits, keep),
-                                       keep=keep))
+            bce_aux(logits, keep, train=True)
         else:
-            # ragged capacity buckets (static or traced+bucket), legacy
-            # gather, dense_mask, and inference thresholding all live in
-            # route_tokens; f is ragged-aware (token_valid/token_count), so
-            # the bucket tail is barred from MoE expert dispatch there
+            # inference thresholding (§B.1): per-token, per-router gate
             delta, a = R.route_tokens(
-                (rp or {}).get("tok_mlp"), h, f, cap_mlp, mode,
-                positions=positions,
-                impl=spec.routing_impl if spec else "gather",
-                theta=pol.theta if pol is not None else 0.5, bucket=bucket)
+                rp["tok_mlp"], h, f, cap_mlp, mode, positions=positions,
+                impl=impl, theta=pol.theta if pol is not None else 0.5,
+                bucket=bucket)
             auxes.append(a)
         x = x + delta
 
@@ -436,6 +577,8 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
     """One token. x: (B,1,D); returns (x', new_cache)."""
     B = x.shape[0]
     routed = elastic_on and mode != "base" and rp is not None
+    backend = OPS.resolve_backend(
+        spec.kernel_backend if spec is not None else None)
     new_cache = dict(cache)
 
     h = norm_apply(p["norm1"], x, cfg.norm)
@@ -455,7 +598,7 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
                            auxes) if routed else None
         y, new_cache["attn"] = A.attn_decode(
             p["attn"], h, cache["attn"], t, cfg=cfg, window=window,
-            head_weights=hw, lora=lora, write=keep)
+            head_weights=hw, lora=lora, write=keep, backend=backend)
     elif kind == "ssm":
         y, new_cache["ssm"] = S.ssm_decode(p["mixer"], h, cache["ssm"], cfg,
                                            write=keep)

@@ -348,7 +348,13 @@ def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
     to serve every compute budget from one compilation.
     ``bucket``: static ragged capacity-bucket size for traced policies under
     ``routing_impl == "ragged"`` (see core/policy.ragged_bucket) — one
-    compile per bucket, FLOPs proportional to the bucket."""
+    compile per bucket, FLOPs proportional to the bucket; the
+    ``routing.IDENTITY_BUCKET`` sentinel (what ragged_bucket returns for
+    all-full policies) compiles the IDENTITY graph, which skips routing
+    work entirely while staying bit-exact.
+    ``spec.kernel_backend`` decides whether each block's hot
+    math (attention softmax core, fused MLP, MoE grouped matmul) executes
+    through the Pallas kernels or the jnp twins — see kernels/ops.py."""
     spec, pol = as_spec_policy(ecfg, policy)
     period, _, _ = build_pattern(cfg, spec)
     if cfg.family == "encoder":

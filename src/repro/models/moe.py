@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.routing import RouteAux, bcast_to, is_full, topk_mask, \
     topk_mask_dyn
+from repro.kernels import ops as OPS
 from repro.models.layers import act_fn, dense_init, dtype_of, is_gated
 from repro.models import flags
 
@@ -43,8 +44,17 @@ def moe_init(key, cfg):
     return p
 
 
-def _expert_ffn(p, x_sel, act):
-    """x_sel: (B,E,C,D), expert weights (E,D,Fe)/(E,Fe,D) -> (B,E,C,D)."""
+def _expert_ffn(p, x_sel, act, backend=None, counts=None):
+    """x_sel: (B,E,C,D), expert weights (E,D,Fe)/(E,Fe,D) -> (B,E,C,D).
+
+    ``backend`` "pallas"/"interpret" routes through the grouped-matmul
+    kernel (``kernels.ops.moe_gmm``); ``counts`` (B,E) per-expert occupancy
+    then skips every capacity tile past an expert's dispatched tokens —
+    the dispatch gather keeps the valid slots a per-(b,e) prefix, so the
+    counts are exact, not a bound."""
+    if backend in ("pallas", "interpret"):
+        return OPS.moe_gmm(x_sel, p["wi"], p["wo"], p.get("wg"),
+                           group_counts=counts, act=act, backend=backend)
     h = jnp.einsum("becd,edf->becf", x_sel, p["wi"])
     if "wg" in p:
         h = act_fn(act)(jnp.einsum("becd,edf->becf", x_sel, p["wg"])) * h
@@ -56,7 +66,7 @@ def _expert_ffn(p, x_sel, act):
 def moe_apply(
     p, x, *, act: str, top_k: int, router_w=None, normalize_to_m: bool = False,
     capacity_factor: float = 1.25, seq_chunk: int = 2048, top_k_traced=None,
-    token_valid=None, dispatch_frac=None, token_count=None,
+    token_valid=None, dispatch_frac=None, token_count=None, backend=None,
 ):
     """x: (B,S,D) -> (B,S,D), aux. router_w overrides p['router'] (elastic).
 
@@ -147,7 +157,10 @@ def moe_apply(
             keep &= jnp.arange(cap)[None, None, :] < bcast_to(cap_eff, 3)
         # dispatch: token gather into (B,E,C,D) buffers (UNweighted)
         x_sel = jnp.take_along_axis(xc[:, None], idx[..., None], axis=2)
-        y_buf = _expert_ffn(p, x_sel, act)                    # (B,E,C,D)
+        # per-(b,e) occupancy: top_k returns descending, so the kept slots
+        # are a prefix — the exact group_counts the GMM kernel skips by
+        y_buf = _expert_ffn(p, x_sel, act, backend=backend,
+                            counts=jnp.sum(keep, axis=-1))    # (B,E,C,D)
         # combine by GATHER, not scatter (§Perf H3): XLA upcasts bf16
         # scatter-add to f32 and surrounds it with full-buffer copies
         # (~25 GB/layer of traffic). Instead invert the dispatch index

@@ -259,7 +259,10 @@ class ServingEngine:
         # ragged capacity bucket: static, resolved per admission from the
         # (host-concrete) policy row. Only top-k routing (train mode) uses
         # it — threshold (infer) prefill stays dense, so infer engines keep
-        # exactly one prefill compile per prompt length.
+        # exactly one prefill compile per prompt length. Full-budget rows
+        # resolve the IDENTITY sentinel bucket: their prefill
+        # compiles the no-routing teacher graph instead of paying the
+        # rank-masking sorts.
         bucket = None
         if (self._use_policy and self.mode == "train"
                 and self.spec.routing_impl == "ragged"):

@@ -169,7 +169,10 @@ def make_loss_fn(cfg, ecfg, *, mesh: Optional[Mesh] = None, remat: bool = False,
     static_argnames=("bucket",)): the ragged capacity-bucket size covering
     the policy's token budgets (core/policy.ragged_bucket), so the student
     forward lowers FLOPs proportional to the bucket. One compile per bucket,
-    <= routing.RAGGED_N_BUCKETS total across a whole anneal schedule."""
+    <= routing.RAGGED_N_BUCKETS (+ the identity graph that full-budget
+    anneal starts resolve to — it skips routing work entirely while keeping
+    the routers' BCE/load aux, so the anneal's early steps run at teacher
+    speed with live router gradients) across a whole schedule."""
     use_hidden = chunked and cfg.family != "encoder" and cfg.vocab_size > 0
     spec, default_pol = as_spec_policy(ecfg)
 

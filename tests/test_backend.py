@@ -1,0 +1,222 @@
+"""Kernel-backend dispatch + RoutingPlan reuse (ISSUE 4).
+
+Covers the acceptance properties:
+  * parity grid: forward outputs and router gradients agree across
+    kernel_backend {ref, interpret} x routing_impl {ragged, gather,
+    dense_mask} (the interpret backend runs the REAL Pallas kernel logic
+    through the model hot path, with the jnp-reference backward);
+  * the model forward under kernel_backend="interpret" actually calls the
+    Pallas kernels (call-counter on the kernel modules' entry points);
+  * exactly ONE RoutingPlan sort per block trace (no per-component
+    re-sort), and ZERO sorts on the identity (full-budget) graph;
+  * the ring-cache decode kernel bit-matches the jnp attn_decode twin on
+    staggered per-slot positions.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.elasti_toy import toy_lm
+from repro.core import routing as R
+from repro.core.policy import ElasticPolicy, ElasticSpec, ragged_bucket
+from repro.models import forward, model_init, router_init
+from tests.conftest import f32
+
+N_EXPERTS = 4
+
+
+def _setup(key, s=24, *, experts=False, impl="ragged", backend="ref"):
+    cfg = f32(toy_lm())
+    spec = ElasticSpec(
+        mha_token_routed=True, mlp_token_routed=True, mha_head_routed=True,
+        mlp_n_experts=N_EXPERTS if experts else None, expert_routed=experts,
+        lora_rank=1, routing_impl=impl, kernel_backend=backend)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, s), dtype=np.int32))}
+    return cfg, spec, params, rp, batch
+
+
+def _pol(budget, cfg, experts):
+    return ElasticPolicy.uniform(
+        budget, n_heads=cfg.n_heads,
+        n_experts=N_EXPERTS if experts else None, static=True)
+
+
+# ----------------------------- parity grid -----------------------------------
+
+@pytest.mark.parametrize("experts", [False, True])
+@pytest.mark.parametrize("impl", ["ragged", "gather", "dense_mask"])
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_backend_impl_parity_grid(key, backend, impl, experts):
+    """Forward outputs and router grads agree across every execution path
+    x backend combination (baseline: ref x gather)."""
+    cfg, spec, params, rp, batch = _setup(key, experts=experts, impl=impl,
+                                          backend=backend)
+    base_spec = dataclasses.replace(spec, routing_impl="gather",
+                                    kernel_backend="ref")
+    pol = _pol(0.5, cfg, experts)
+
+    def loss(rp, sp):
+        out, aux = forward(params, rp, batch, cfg, sp, mode="train",
+                           policy=pol)
+        return jnp.sum(out ** 2) * 1e-4 + aux.topk + aux.load, out
+
+    (l_b, out_b), g_b = jax.value_and_grad(loss, has_aux=True)(rp, base_spec)
+    (l_t, out_t), g_t = jax.value_and_grad(loss, has_aux=True)(rp, spec)
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_b),
+                               atol=2e-4)
+    np.testing.assert_allclose(float(l_t), float(l_b), rtol=1e-4)
+    for pt, pb in zip(jax.tree.leaves(g_t), jax.tree.leaves(g_b)):
+        np.testing.assert_allclose(np.asarray(pt), np.asarray(pb), atol=2e-4)
+    assert sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g_t)) > 0
+
+
+# ------------------------- kernel call counting ------------------------------
+
+def test_interpret_backend_calls_all_pallas_kernels(key, monkeypatch):
+    """Acceptance: the model forward with kernel_backend="interpret"
+    dispatches through all three Pallas kernels (plus the routed
+    gather/scatter MLP kernel), not the jnp twins."""
+    import sys
+    # the package __init__ shadows the submodule names with the ops
+    # wrappers, so resolve the real modules through sys.modules
+    flash_mod = sys.modules["repro.kernels.flash_attention"]
+    mlp_mod = sys.modules["repro.kernels.fused_mlp"]
+    gmm_mod = sys.modules["repro.kernels.moe_gmm"]
+
+    calls = {"flash": 0, "fused_mlp": 0, "fused_mlp_routed": 0, "moe_gmm": 0}
+
+    def count(name, fn):
+        def wrapped(*a, **kw):
+            calls[name] += 1
+            return fn(*a, **kw)
+        return wrapped
+
+    monkeypatch.setattr(flash_mod, "flash_attention",
+                        count("flash", flash_mod.flash_attention))
+    monkeypatch.setattr(mlp_mod, "fused_mlp",
+                        count("fused_mlp", mlp_mod.fused_mlp))
+    monkeypatch.setattr(mlp_mod, "fused_mlp_routed",
+                        count("fused_mlp_routed", mlp_mod.fused_mlp_routed))
+    monkeypatch.setattr(gmm_mod, "moe_gmm",
+                        count("moe_gmm", gmm_mod.moe_gmm))
+    jax.clear_caches()  # the jitted ops wrappers must re-trace
+
+    # dense-MLP spec: flash attention + the routed fused-MLP kernel
+    cfg, spec, params, rp, batch = _setup(key, backend="interpret")
+    forward(params, rp, batch, cfg, spec, mode="train",
+            policy=_pol(0.5, cfg, False))
+    # teacher-mode forward: the unrouted MLP goes through fused_mlp
+    forward(params, None, batch, cfg, spec, mode="base")
+    # moefied spec: expert dispatch goes through moe_gmm
+    cfg, spec, params, rp, batch = _setup(key, experts=True,
+                                          backend="interpret")
+    forward(params, rp, batch, cfg, spec, mode="train",
+            policy=_pol(0.5, cfg, True))
+    assert all(c > 0 for c in calls.values()), calls
+
+
+# --------------------------- one sort per block ------------------------------
+
+def _count_plan_sorts(fn, *args):
+    before = R.PLAN_SORT_COUNT
+    jax.jit(fn).lower(*args)     # trace only — sorts are counted per trace
+    return R.PLAN_SORT_COUNT - before
+
+
+def test_one_routing_plan_sort_per_block_trace(key):
+    """Acceptance: the attention and MLP students share ONE RoutingPlan —
+    a single sort per block trace (the toy pattern scan traces its period
+    once), where the pre-refactor path issued 3+ per component."""
+    cfg = f32(toy_lm(vocab=256))
+    spec = ElasticSpec(mha_token_routed=True, mlp_token_routed=True)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    batch = {"tokens": jnp.zeros((2, 256), jnp.int32)}
+
+    def fwd(budget):
+        pol = ElasticPolicy.uniform(budget, static=True)
+        return lambda rp, b: forward(params, rp, b, cfg, spec, mode="train",
+                                     policy=pol)[0]
+
+    # toy-lm: homogeneous pattern -> the block body is traced exactly once
+    assert _count_plan_sorts(fwd(0.5), rp, batch) == 1
+    # identity (full-budget) graph: no routing work at all
+    assert _count_plan_sorts(fwd(1.0), rp, batch) == 0
+    # teacher forward: no sorts either
+    assert _count_plan_sorts(
+        lambda b: forward(params, None, b, cfg, None, mode="base")[0],
+        batch) == 0
+
+    # hloprof-verified: the COMPILED forward lowers exactly one sort op
+    # (shared across all layers via the pattern scan) at a routed budget,
+    # and zero on the identity graph
+    from repro.launch.hloprof import profile_text
+
+    def hlo_sorts(budget):
+        c = jax.jit(fwd(budget)).lower(rp, batch).compile()
+        return profile_text(c.as_text()).get("sort", {"count": 0})["count"]
+
+    assert hlo_sorts(0.5) == 1
+    assert hlo_sorts(1.0) == 0
+
+
+# ------------------------- decode kernel parity ------------------------------
+
+def test_decode_kernel_matches_jnp_twin_on_staggered_slots(key):
+    """The ring-cache decode kernel == attn_decode's jnp path, with every
+    serving slot at its own position (continuous batching)."""
+    from repro.models.attention import attn_cache_init, attn_decode, attn_init
+    cfg = f32(toy_lm())
+    p = attn_init(key, cfg)
+    B, L = 3, 16
+    cache = attn_cache_init(cfg, B, L, window=0)
+    rng = np.random.default_rng(0)
+    # warm the ring cache at staggered offsets with real entries
+    t = jnp.asarray([2, 7, 13], jnp.int32)
+    ks = jax.random.split(key, 8)
+    pos = jnp.where(jnp.arange(L)[None, :] <= t[:, None],
+                    jnp.arange(L)[None, :], -1).astype(jnp.int32)
+    cache = {
+        "k": jax.random.normal(ks[0], cache["k"].shape, cache["k"].dtype),
+        "v": jax.random.normal(ks[1], cache["v"].shape, cache["v"].dtype),
+        "valid": jnp.asarray(rng.random((B, L)) < 0.9),
+        "pos": pos,
+    }
+    x = jax.random.normal(ks[2], (B, 1, cfg.d_model), jnp.float32)
+    write = jnp.asarray([True, False, True])
+    for window in (0, 6):
+        y_ref, c_ref = attn_decode(p, x, cache, t, cfg=cfg, window=window,
+                                   write=write, backend=None)
+        y_k, c_k = attn_decode(p, x, cache, t, cfg=cfg, window=window,
+                               write=write, backend="interpret")
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                                   atol=2e-5, rtol=2e-5)
+        for a, b in zip(jax.tree.leaves(c_ref), jax.tree.leaves(c_k)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_identity_graph_is_bit_exact_teacher(key):
+    """The identity bucket (== S) skips all routing work and reproduces
+    the teacher bit-for-bit, for traced full-budget policies."""
+    cfg, spec, params, rp, batch = _setup(key)
+    teacher, _ = forward(params, None, batch, cfg, None, mode="base")
+    pol = jax.tree.map(jnp.asarray, ElasticPolicy.uniform(1.0))
+    s = batch["tokens"].shape[1]
+    assert ragged_bucket(pol, s) == R.IDENTITY_BUCKET
+    out, _ = forward(params, rp, batch, cfg, spec, mode="train", policy=pol,
+                     bucket=R.IDENTITY_BUCKET)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(teacher))
+    # a real bucket that merely EQUALS a (shorter) batch's length is not
+    # an identity assertion: it degrades to the dense fallback, which
+    # still applies routing weights — outputs must differ from teacher
+    half = jax.tree.map(jnp.asarray, ElasticPolicy.uniform(0.5))
+    out_h, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                       policy=half, bucket=s)
+    assert not np.allclose(np.asarray(out_h), np.asarray(teacher))

@@ -6,8 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.fused_mlp import fused_mlp
+from repro.kernels.fused_mlp import fused_mlp, fused_mlp_routed
 from repro.kernels.moe_gmm import moe_gmm
 
 TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
@@ -147,6 +148,106 @@ def test_moe_gmm_group_counts_ragged(key):
                                atol=2e-5, rtol=2e-5)
     for e in range(E):
         assert not np.asarray(got[e, int(cnt[e]):]).any()
+
+
+def test_fused_mlp_batched_per_row_counts(key):
+    """(B, T, D) input with per-row (B,) valid counts: each batch row is
+    cut at its own ragged prefix."""
+    B, T, D, F = 3, 128, 64, 192
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, T, D))
+    wi = jax.random.normal(ks[1], (D, F)) * 0.05
+    wo = jax.random.normal(ks[2], (F, D)) * 0.05
+    wg = jax.random.normal(ks[3], (D, F)) * 0.05
+    tw = jax.random.uniform(ks[4], (B, T))
+    cnt = jnp.asarray([1, 70, 128], jnp.int32)
+    got = fused_mlp(x, wi, wo, wg, tw, act="swiglu", valid_count=cnt,
+                    interpret=True)
+    want = ref.fused_mlp_ref(x, wi, wo, wg, tw, act="swiglu",
+                             valid_count=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    for b in range(B):
+        assert not np.asarray(got[b, int(cnt[b]):]).any()
+
+
+@pytest.mark.parametrize("gated", [True, False])
+def test_fused_mlp_routed_gather_scatter_fusion(gated, key):
+    """Index-prefetch gather/scatter fusion: x stays full (B,S,D), the
+    plan indices ride scalar prefetch, the output is the scattered delta —
+    rows the plan dropped stay exactly zero."""
+    B, S, Kb, D, F = 2, 96, 24, 64, 128
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, S, D))
+    wi = jax.random.normal(ks[1], (D, F)) * 0.05
+    wo = jax.random.normal(ks[2], (F, D)) * 0.05
+    wg = (jax.random.normal(ks[3], (D, F)) * 0.05) if gated else None
+    idx = jnp.stack([jax.random.permutation(
+        jax.random.fold_in(ks[4], b), S)[:Kb] for b in range(B)])
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    cnt = jnp.asarray([Kb, 10], jnp.int32)
+    tw = jax.random.uniform(ks[5], (B, Kb)) \
+        * (jnp.arange(Kb)[None] < cnt[:, None])
+    got = fused_mlp_routed(x, idx, wi, wo, wg, tw, act="swiglu",
+                           valid_count=cnt, interpret=True)
+    want = ref.fused_mlp_routed_ref(x, idx, wi, wo, wg, tw, act="swiglu",
+                                    valid_count=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # untouched rows are exact zeros
+    touched = np.zeros((B, S), bool)
+    for b in range(B):
+        touched[b, np.asarray(idx[b, :int(cnt[b])])] = True
+    assert not np.asarray(got)[~touched].any()
+
+
+def test_moe_gmm_batched_group_counts(key):
+    """(B, E, C, D) dispatch buffers with (B, E) per-expert occupancy."""
+    B, E, C, D, Fe = 2, 4, 64, 32, 96
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, E, C, D))
+    wi = jax.random.normal(ks[1], (E, D, Fe)) * 0.05
+    wo = jax.random.normal(ks[2], (E, Fe, D)) * 0.05
+    wg = jax.random.normal(ks[3], (E, D, Fe)) * 0.05
+    w = jax.random.uniform(ks[4], (B, E, C))
+    cnt = jnp.asarray([[0, 5, 33, 64], [64, 1, 0, 17]], jnp.int32)
+    got = moe_gmm(x, wi, wo, wg, w, act="swiglu", group_counts=cnt,
+                  interpret=True)
+    want = ref.moe_gmm_ref(x, wi, wo, wg, w, act="swiglu", group_counts=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    for b in range(B):
+        for e in range(E):
+            assert not np.asarray(got[b, e, int(cnt[b, e]):]).any()
+
+
+@pytest.mark.parametrize("window,block_k", [
+    (0, 128), (24, 128),
+    # block_k < L: exercises the cross-block online-softmax carry,
+    # including blocks an aggressive window masks out ENTIRELY (their
+    # poisoned p=1 contributions must be annihilated by the alpha rescale)
+    (0, 16), (8, 16),
+])
+def test_decode_attention_ring_cache(window, block_k, key):
+    """Ring-cache decode kernel vs the jnp oracle: staggered per-slot
+    positions, wrapped ring slots, empty (-1) and invalid entries."""
+    B, L, H, K, Dh = 3, 64, 4, 2, 32
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, 1, H, Dh))
+    k = jax.random.normal(ks[1], (B, L, K, Dh))
+    v = jax.random.normal(ks[2], (B, L, K, Dh))
+    t = jnp.asarray([5, 63, 150], jnp.int32)       # row 2 wrapped the ring
+    slots = jnp.arange(L)[None, :]
+    pos = jnp.where(slots <= t[:, None] % L, t[:, None] - t[:, None] % L,
+                    t[:, None] - t[:, None] % L - L) + slots
+    pos = jnp.where(pos >= 0, pos, -1).astype(jnp.int32)
+    valid = jax.random.bernoulli(ks[3], 0.85, (B, L))
+    got = decode_attention(q, k, v, pos, t, window=window, kv_valid=valid,
+                           block_k=block_k, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos, t, window=window,
+                                    kv_valid=valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_flash_matches_model_blocked_sdpa(key):

@@ -191,8 +191,20 @@ def test_ragged_budget_one_is_bit_exact_teacher(key):
                          policy=pol)
         np.testing.assert_allclose(np.asarray(out), np.asarray(teacher),
                                    atol=1e-5)
-    # static full budget through the ragged impl is also lossless
-    assert ragged_bucket(ElasticPolicy.uniform(1.0), 24) is None
+    # full budget resolves the IDENTITY sentinel: the compiled graph
+    # skips partition/gather/scatter entirely and stays lossless
+    from repro.core.routing import IDENTITY_BUCKET
+    assert ragged_bucket(ElasticPolicy.uniform(1.0), 24) == IDENTITY_BUCKET
+    out, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                     policy=jax.tree.map(jnp.asarray,
+                                         ElasticPolicy.uniform(1.0)),
+                     bucket=IDENTITY_BUCKET)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(teacher),
+                               atol=1e-5)
+    # mixed full/partial rows cannot take the identity graph
+    mixed = ElasticPolicy.stack([ElasticPolicy.uniform(1.0),
+                                 ElasticPolicy.uniform(0.5)])
+    assert ragged_bucket(mixed, 24) is None
 
 
 # ------------------------------- serving ------------------------------------
