@@ -1,0 +1,68 @@
+"""Schema-drift gate for the checked-in benchmark trajectories.
+
+`BENCH_serving.json` / `BENCH_ragged.json` are TRACKED: the committed rows
+are the performance trajectory reviewers diff against. This gate keeps that
+trajectory honest — CI runs the fresh `--smoke` bench to a scratch path and
+fails if the checked-in file no longer speaks the same schema (a column was
+added/renamed/dropped, or a value domain like the backend/mode axis grew
+without the committed file being refreshed).
+
+Checked:
+  * both files are non-empty JSON lists of row objects;
+  * the union of row keys matches exactly (missing AND stale columns fail);
+  * categorical axes (`mode`, `backend`, `budget`) present in the fresh run
+    are covered by the checked-in rows.
+
+Usage: python benchmarks/check_bench_schema.py TRACKED.json FRESH.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _rows(path: str):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list) or not rows \
+            or not all(isinstance(r, dict) for r in rows):
+        raise SystemExit(f"{path}: expected a non-empty JSON list of rows")
+    return rows
+
+
+def check(tracked_path: str, fresh_path: str) -> list:
+    tracked, fresh = _rows(tracked_path), _rows(fresh_path)
+    tkeys = set().union(*(r.keys() for r in tracked))
+    fkeys = set().union(*(r.keys() for r in fresh))
+    problems = []
+    if fkeys - tkeys:
+        problems.append(f"columns missing from {tracked_path}: "
+                        f"{sorted(fkeys - tkeys)} — the bench grew a column;"
+                        f" refresh the checked-in file")
+    if tkeys - fkeys:
+        problems.append(f"stale columns in {tracked_path}: "
+                        f"{sorted(tkeys - fkeys)} — the bench no longer "
+                        f"emits them")
+    for col in ("mode", "backend", "budget"):
+        fv = {r[col] for r in fresh if col in r}
+        tv = {r[col] for r in tracked if col in r}
+        if fv and not fv <= tv:
+            problems.append(f"{col} values {sorted(fv - tv, key=str)} in the"
+                            f" fresh run are absent from {tracked_path}")
+    return problems
+
+
+def main(argv):
+    if len(argv) != 3:
+        raise SystemExit(__doc__)
+    problems = check(argv[1], argv[2])
+    if problems:
+        for p in problems:
+            print(f"[bench-schema] FAIL: {p}")
+        return 1
+    print(f"[bench-schema] OK: {argv[1]} matches the fresh run's schema")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -289,6 +289,24 @@ def make_plan(scores, k, bucket: int) -> RoutingPlan:
                        bucket)
 
 
+def constrain_plan(plan: RoutingPlan) -> RoutingPlan:
+    """Pin the plan's token-dim arrays to batch-over-data / REPLICATED over
+    `model` under the active mesh (no-op outside one, or inside a manual
+    shard_map region — callers gate on that): the plan is built once per
+    block from full-(B, T) router scores, and every TP shard of the block
+    must consume the SAME gather/scatter permutation — a model-sharded
+    plan would route different tokens through different weight shards.
+    Tiny int/bool arrays, so replication costs nothing; what it buys is
+    that GSPMD never re-partitions the sort/cumsum chain (one sort per
+    block stays one sort under the mesh)."""
+    from repro.runtime import sharding as SH
+    c = lambda a: (SH.constrain_batch(a)
+                   if getattr(a, "ndim", 0) >= 1 else a)
+    return plan._replace(idx=c(plan.idx), inv=c(plan.inv),
+                         valid=c(plan.valid), count=c(plan.count),
+                         keep=c(plan.keep))
+
+
 def plan_gather(x, plan: RoutingPlan):
     """x: (B, S, ...) -> (B, bucket, ...) selected-first buffer."""
     return gather_tokens(x, plan.idx)

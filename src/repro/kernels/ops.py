@@ -263,3 +263,120 @@ def decode_attention(q, k, v, kv_pos, t, kv_valid=None, *, window=0,
     return _decode_mod.decode_attention(q, k, v, kv_pos, t, window=window,
                                         kv_valid=kv_valid,
                                         interpret=_interp(kb))
+
+
+# --------------------------- SPMD kernel wrappers -----------------------------
+#
+# A pallas_call is a custom call — OPAQUE to GSPMD, which would replicate
+# its operands to every device (an all-gather of the whole KV cache per
+# decode step at production scale). Under a mesh the kernel entry points
+# below therefore run the kernel INSIDE shard_map: each shard's grid covers
+# only its local block (heads/kv-heads or the FFN dim over `model`, batch
+# over the data axes), which is exactly how the kernels lower on a real TPU
+# slice. The jnp "ref" backend needs none of this — XLA partitions jnp ops
+# natively — so these wrappers fall through to the plain call for "ref",
+# for trivial meshes, and for shapes that don't divide the axes.
+
+def _mesh_layout(mesh):
+    """(mesh, batch_axes, data_size, model_size) for the active/given mesh."""
+    from repro.runtime import sharding as SH
+    mesh = mesh if mesh is not None else SH.active_mesh()
+    if mesh is None:
+        return None, (), 1, 1
+    return (mesh, SH.batch_axes(mesh), SH.data_axis_size(mesh),
+            mesh.shape.get("model", 1))
+
+
+def decode_attention_sharded(q, k, v, kv_pos, t, kv_valid, *, window=0,
+                             backend=None, mesh=None):
+    """Ring-cache decode kernel, one grid PER SHARD: q heads and kv heads
+    shard over `model`, batch (serving slots) over the data axes. Per-head
+    attention has no cross-head contraction, so no collective is needed —
+    the output stays head-sharded and the caller's wo projection reduces it
+    under GSPMD. Requires Hp % model == 0 and K % model == 0 (each shard's
+    local head->kv-group mapping is then exact); anything else, or a
+    ref/trivial-mesh call, falls back to the plain entry point."""
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime import sharding as SH
+    kb = resolve_backend(backend)
+    mesh, ba, d, m = _mesh_layout(mesh)
+    B, _, Hp, _ = q.shape
+    K = k.shape[2]
+    if (mesh is None or kb == "ref" or (d <= 1 and m <= 1)
+            or Hp % m or K % m or B % d):
+        return decode_attention(q, k, v, kv_pos, t, kv_valid,
+                                window=window, backend=backend)
+    bx = ba if d > 1 else None
+    # data-only meshes still shard the batch; `model` may be absent/size-1
+    md = "model" if "model" in mesh.axis_names else None
+
+    def body(q, k, v, kv_pos, t, kv_valid):
+        return _decode_mod.decode_attention(q, k, v, kv_pos, t,
+                                            window=window, kv_valid=kv_valid,
+                                            interpret=_interp(kb))
+
+    return SH.shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(bx, None, md, None), P(bx, None, md, None),
+                  P(bx, None, md, None), P(bx, None), P(bx),
+                  P(bx, None)),
+        out_specs=P(bx, None, md, None),
+    )(q, k, v, kv_pos, t, kv_valid)
+
+
+def fused_mlp_routed_sharded(x, idx, wi, wo, wg=None, token_weights=None,
+                             valid_count=None, *, act="swiglu", backend=None,
+                             mesh=None):
+    """Gather/scatter-fused routed MLP with the FFN dim sharded over
+    `model` (the dense-MLP TP rules: wi/wg (D, F/m), wo (F/m, D)): each
+    shard runs the index-prefetch kernel on its slice — the RoutingPlan's
+    ``idx`` rides in REPLICATED, so one plan drives every TP shard — and
+    the partial (B, S, D) deltas are psummed. On a data-only mesh (model
+    absent or size 1) the batch still shards and the psum drops out — same
+    as the decode wrapper; an unsharded fallback there would replicate the
+    (B, S, D) stream to every device. Differentiable (the inner op carries
+    the ref-replay VJP; psum transposes to its own gradient). Falls back to
+    the plain entry point off-mesh / for "ref" / when the FFN or batch dim
+    doesn't divide."""
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime import sharding as SH
+    kb = resolve_backend(backend)
+    mesh, ba, d, m = _mesh_layout(mesh)
+    B = x.shape[0]
+    F = wi.shape[-1]
+    if (mesh is None or kb == "ref" or (d <= 1 and m <= 1)
+            or F % m or B % d):
+        return fused_mlp_routed(x, idx, wi, wo, wg, token_weights,
+                                valid_count, act=act, backend=backend)
+    bx = ba if d > 1 else None
+    md = ("model" if m > 1 and "model" in mesh.axis_names else None)
+    args = [x, idx, wi, wo]
+    specs = [P(bx, None, None), P(bx, None), P(None, md),
+             P(md, None)]
+    have = [True, True]             # wg / token_weights present?
+    if wg is not None:
+        args.append(wg)
+        specs.append(P(None, md))
+    else:
+        have[0] = False
+    if token_weights is not None:
+        args.append(token_weights)
+        specs.append(P(bx, None))
+    else:
+        have[1] = False
+    if valid_count is not None:
+        args.append(valid_count)
+        specs.append(P(bx) if getattr(valid_count, "ndim", 0) else P())
+
+    def body(x, idx, wi, wo, *rest):
+        it = iter(rest)
+        wg_l = next(it) if have[0] else None
+        tw_l = next(it) if have[1] else None
+        cnt = next(it) if valid_count is not None else None
+        y = _fused_mlp_routed_op(act, kb, x, idx, wi, wo, wg_l, tw_l, cnt)
+        return jax.lax.psum(y, md) if md else y
+
+    return SH.shard_map_compat(
+        body, mesh=mesh, in_specs=tuple(specs),
+        out_specs=P(bx, None, None),
+    )(*args)

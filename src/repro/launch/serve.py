@@ -12,6 +12,14 @@ Open loop (continuous batching under Poisson arrivals; reports throughput,
 per-request latency, and slot occupancy):
     python -m repro.launch.serve --arch toy-lm --arrival-rate 8 \
         --requests 32 --budget 0.4,0.8,1.0
+
+SPMD serving (`--mesh data,model`): the engine runs across the mesh —
+params by the TP name rules, KV caches kv-head-sharded, slots packed
+per data replica — and the open-loop report breaks occupancy and latency
+out per replica. `--remesh-at N` re-meshes the LIVE engine after the N-th
+submission (to `--remesh-to`, or the next `valid_mesh_shapes` entry):
+    python -m repro.launch.serve --arch toy-lm --mesh 2,4 \
+        --arrival-rate 8 --requests 32 --remesh-at 16 --remesh-to 1,4
 """
 from __future__ import annotations
 
@@ -23,6 +31,7 @@ import numpy as np
 
 from repro.configs import get_config, get_elastic
 from repro.models import model_init, router_init
+from repro.runtime.elastic import make_mesh, valid_mesh_shapes
 from repro.training import GenRequest, ServingEngine
 
 
@@ -39,24 +48,48 @@ def _budget_list(s: str):
     return vals
 
 
-def open_loop(engine, requests, rate: float, seed: int = 0, arrive=None):
+def _mesh_shape(s: str):
+    try:
+        d, m = (int(x) for x in s.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected a 'data,model' int pair, got {s!r}")
+    if d < 1 or m < 1:
+        raise argparse.ArgumentTypeError(f"mesh axes must be >= 1, got {s!r}")
+    return (d, m)
+
+
+def open_loop(engine, requests, rate: float, seed: int = 0, arrive=None,
+              remesh_at=None, remesh_to=None):
     """Submit ``requests`` at Poisson arrival times (``rate`` req/s, or an
     explicit ``arrive`` schedule in seconds) while continuously stepping the
     engine; returns (handles, elapsed_seconds). Each handle's ``t_submit``
     is pinned to its *scheduled* arrival, so ``latency`` measures
     arrival -> last token (queueing included) — the same baseline a
-    lockstep discipline is judged by."""
+    lockstep discipline is judged by.
+
+    ``remesh_at=N``: after the N-th submission, re-mesh the LIVE engine to
+    the ``remesh_to`` (data, model) shape — in-flight requests keep
+    decoding the same tokens on the new mesh."""
     if arrive is None:
         rng = np.random.default_rng(seed)
         arrive = np.cumsum(rng.exponential(1.0 / rate, len(requests)))
     handles = [None] * len(requests)
     i, t0 = 0, time.perf_counter()
+    remeshed = remesh_at is None
     while i < len(requests) or engine.has_work:
         now = time.perf_counter() - t0
         while i < len(requests) and arrive[i] <= now:
             handles[i] = engine.submit(requests[i])
             handles[i].t_submit = t0 + arrive[i]
             i += 1
+        if not remeshed and i >= remesh_at:
+            remeshed = True
+            tm = time.perf_counter()
+            engine.reshard(make_mesh(remesh_to, ("data", "model")))
+            print(f"[serve] re-meshed live to (data, model)={remesh_to} "
+                  f"after {i} submissions ({time.perf_counter() - tm:.2f}s, "
+                  f"{engine.scheduler.active} requests in flight)")
         if engine.step() == 0 and i < len(requests):
             # idle: sleep until the next arrival
             wait = arrive[i] - (time.perf_counter() - t0)
@@ -70,6 +103,29 @@ def latency_stats(handles):
     if lat.size == 0:
         return 0.0, 0.0
     return float(lat.mean() * 1e3), float(np.percentile(lat, 95) * 1e3)
+
+
+def replica_report(engine, handles) -> str:
+    """Per-replica occupancy + mean latency lines for the open-loop report
+    (a handle's replica = the data shard its final slot lived on). After a
+    live re-mesh the window is "since the re-mesh": the occupancy counters
+    restart there (the old replica axis no longer exists), so requests that
+    finished before it are excluded rather than re-attributed to replicas
+    they never ran on."""
+    sched = engine.scheduler
+    t0 = engine.remeshed_at
+    hs_all = [h for h in handles if h is not None and h.slot is not None
+              and (t0 is None or h.t_done is None or h.t_done >= t0)]
+    lines = [] if t0 is None else \
+        [f"  (per-replica window: since the live re-mesh; "
+         f"{len(handles) - len(hs_all)} earlier requests excluded)"]
+    for r in range(sched.n_replicas):
+        hs = [h for h in hs_all if sched.replica_of(h.slot) == r]
+        mean_ms, p95_ms = latency_stats(hs)
+        lines.append(f"  replica {r}: {len(hs)} requests, occupancy "
+                     f"{sched.replica_occupancy[r]:.0%}, latency mean "
+                     f"{mean_ms:.0f} ms / p95 {p95_ms:.0f} ms")
+    return "\n".join(lines)
 
 
 def main():
@@ -90,15 +146,50 @@ def main():
                          "rate (req/s); reports per-request latency and "
                          "slot occupancy on top of throughput")
     ap.add_argument("--flop-budget", type=float, default=None,
-                    help="per-step FLOP admission budget in full-budget-row "
-                         "units (default: --batch, i.e. slot-limited)")
+                    help="per-replica, per-step FLOP admission budget in "
+                         "full-budget-row units (default: slots per "
+                         "replica, i.e. slot-limited; without --mesh the "
+                         "single replica holds all --batch slots)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="sample from the top-k logits (0 = all)")
     ap.add_argument("--eos", type=int, default=None,
                     help="stop token id (default: config eos_id)")
+    ap.add_argument("--mesh", type=_mesh_shape, default=None,
+                    help="run SPMD on a 'data,model' mesh (e.g. 2,4): TP "
+                         "over `model`, the slot array split into `data` "
+                         "replicas the scheduler packs independently")
+    ap.add_argument("--remesh-at", type=int, default=None,
+                    help="after this many submissions, re-mesh the LIVE "
+                         "engine (open-loop only; in-flight requests "
+                         "resume with identical tokens)")
+    ap.add_argument("--remesh-to", type=_mesh_shape, default=None,
+                    help="target 'data,model' shape for --remesh-at "
+                         "(default: the next valid_mesh_shapes entry)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        if args.batch % args.mesh[0]:
+            ap.error(f"--batch {args.batch} must be a multiple of the mesh "
+                     f"data axis {args.mesh[0]}")
+        mesh = make_mesh(args.mesh, ("data", "model"))
+    if args.remesh_at is not None:
+        if args.mesh is None or args.arrival_rate is None:
+            ap.error("--remesh-at requires --mesh and --arrival-rate")
+        if args.remesh_to is None:
+            n_dev = args.mesh[0] * args.mesh[1]
+            cands = [s for s in valid_mesh_shapes(n_dev, args.mesh[1])
+                     if s != tuple(args.mesh) and args.batch % s[0] == 0]
+            if not cands:
+                ap.error(f"no alternative mesh shape for {args.mesh} whose "
+                         f"data axis divides --batch {args.batch}")
+            args.remesh_to = cands[0]
+        elif args.batch % args.remesh_to[0]:
+            # fail at argparse time, not mid-serve with requests in flight
+            ap.error(f"--batch {args.batch} must be a multiple of the "
+                     f"--remesh-to data axis {args.remesh_to[0]}")
 
     cfg = get_config(args.arch, args.variant)
     ecfg = get_elastic(args.arch, cfg)
@@ -109,7 +200,8 @@ def main():
                            batch_size=args.batch,
                            max_seq=args.prompt_len + args.max_new,
                            eos_id=args.eos,
-                           step_flop_budget=args.flop_budget)
+                           step_flop_budget=args.flop_budget,
+                           mesh=mesh)
     budgets = args.budget
     rng = np.random.default_rng(0)
     reqs = [GenRequest(rng.integers(0, cfg.vocab_size, args.prompt_len,
@@ -123,7 +215,9 @@ def main():
         # warm the compile caches outside the timed window
         engine.generate([reqs[0]])
         engine.scheduler.reset_stats()
-        handles, dt = open_loop(engine, reqs, args.arrival_rate)
+        handles, dt = open_loop(engine, reqs, args.arrival_rate,
+                                remesh_at=args.remesh_at,
+                                remesh_to=args.remesh_to)
         n_tok = sum(len(h.output) for h in handles)
         mean_ms, p95_ms = latency_stats(handles)
         print(f"open loop: {len(reqs)} requests @ {args.arrival_rate} req/s, "
@@ -131,6 +225,8 @@ def main():
         print(f"latency: mean {mean_ms:.0f} ms, p95 {p95_ms:.0f} ms; "
               f"slot occupancy {engine.occupancy:.0%} "
               f"(budgets={budgets or 'config-default'})")
+        if engine.scheduler.n_replicas > 1 or mesh is not None:
+            print(replica_report(engine, handles))
     else:
         t0 = time.perf_counter()
         outs = engine.generate(reqs)

@@ -26,6 +26,7 @@ from repro.core.lora import lora_apply
 from repro.kernels import ops as OPS
 from repro.models import flags
 from repro.models.layers import dense_init, dtype_of, rope_apply, rope_tables
+from repro.runtime import sharding as SH
 
 NEG_INF = -1e30
 BLOCKED_THRESHOLD = 2048   # use blocked attention when Sk exceeds this
@@ -330,13 +331,17 @@ def attn_decode(
     k_new, v_new = _project_kv(p, x, pos, cfg, lora, use_rope)
     wr = jnp.ones((B,), bool) if write is None else write
     if per_row:
-        # per-row ring slots: scatter each row's k/v into its own slot
+        # per-row ring slots: scatter each row's k/v into its own slot.
+        # Under a mesh the scatter result is pinned back to the cache
+        # sharding (kv-heads over `model`, slots over data) — GSPMD cannot
+        # partition a batch-indexed scatter and would otherwise replicate
+        # the updated cache to every device, every decode step.
         slots = jax.lax.rem(t, jnp.int32(L))                 # (B,)
         bi = jnp.arange(B)
         def upd(c, n):
             old = c[bi, slots]                               # (B, K, Dh)
             new = jnp.where(wr[:, None, None], n[:, 0], old).astype(c.dtype)
-            return c.at[bi, slots].set(new)
+            return SH.constrain_kv_cache(c.at[bi, slots].set(new), cfg)
         ck = upd(cache["k"], k_new)
         cv = upd(cache["v"], v_new)
         # the slot is consumed by position t either way (stale entry evicted)
@@ -359,10 +364,13 @@ def attn_decode(
     kv_valid = valid & (cpos >= 0)
     if _kernel_ok(backend, cfg):
         # ring-cache decode kernel: per-slot positions ride scalar
-        # prefetch, masking is by the cache's absolute-position array
+        # prefetch, masking is by the cache's absolute-position array.
+        # Under a mesh the kernel runs per-shard (heads over `model`,
+        # slots over data) via shard_map — see ops.decode_attention_sharded.
         tvec = t if per_row else jnp.broadcast_to(t, (B,))
-        ctx = OPS.decode_attention(q, ck, cv, cpos, tvec, kv_valid=valid,
-                                   window=window or 0, backend=backend)
+        ctx = OPS.decode_attention_sharded(q, ck, cv, cpos, tvec, valid,
+                                           window=window or 0,
+                                           backend=backend)
     elif L > BLOCKED_THRESHOLD:
         ctx = blocked_sdpa(q, ck, cv, pos, cpos, True, window, kv_valid,
                            cfg=cfg)

@@ -250,7 +250,7 @@ def block_apply(
     kind: str, p, rp, x, *, cfg, spec, pol=None, mode: str, elastic_on: bool,
     window: int = 0, positions=None, causal: bool = True,
     enc_kv=None, enc_valid=None, collect_cache: bool = False,
-    max_cache_len: int = 0, bucket=None,
+    max_cache_len: int = 0, bucket=None, spmd_auto: bool = True,
 ):
     """x: (B,S,D) -> (x', aux[, cache]). Pre-norm residual block.
 
@@ -272,7 +272,12 @@ def block_apply(
     bit-exact teacher math, with router aux losses still emitted); None
     falls back to the dense rank-masked path. ``spec.kernel_backend``
     selects how the hot math executes (Pallas kernels vs jnp twins — see
-    kernels/ops.py)."""
+    kernels/ops.py).
+
+    ``spmd_auto``: True when this trace runs in a GSPMD-auto region (no
+    enclosing manual shard_map), where mesh-wide sharding constraints and
+    nested shard_map kernel wrappers are legal — the serving prefill path.
+    ``_run_stack`` sets it False inside its manual-over-batch-axes wrap."""
     B, Seq, D = x.shape
     auxes = [R.RouteAux.zero()]
     if positions is None:
@@ -303,11 +308,16 @@ def block_apply(
     plan_on_mixer = cap_mha is not None
 
     def build_plan(h_src):
-        """The block's ONE RoutingPlan sort, from the primary router."""
+        """The block's ONE RoutingPlan sort, from the primary router.
+        Under a mesh the plan arrays stay replicated over `model` (batch
+        over data), so one plan drives every TP shard of the block."""
         name = "tok_mixer" if plan_on_mixer else "tok_mlp"
         logits = R.token_logits(rp[name], h_src)
         scores = jax.nn.sigmoid(logits)
-        return R.make_plan(scores, k_plan, kb), logits, scores
+        plan = R.make_plan(scores, k_plan, kb)
+        if spmd_auto and SH.active_mesh() is not None:
+            plan = R.constrain_plan(plan)
+        return plan, logits, scores
 
     def bce_aux(logits, keep, train):
         if train:
@@ -474,8 +484,13 @@ def block_apply(
                     and _is_dense_mlp(p, rp, cfg, spec, elastic_on, mode)
                     and slab <= ROUTED_MLP_SLAB_BYTES):
                 # plan indices ride scalar prefetch; the bucket buffer
-                # never hits HBM
-                delta = OPS.fused_mlp_routed(
+                # never hits HBM. Under a mesh (GSPMD-auto region) the
+                # kernel runs per-shard over the FFN dim via shard_map —
+                # ops.fused_mlp_routed_sharded falls through to the plain
+                # call off-mesh or when shapes don't divide.
+                routed_op = (OPS.fused_mlp_routed_sharded if spmd_auto
+                             else OPS.fused_mlp_routed)
+                delta = routed_op(
                     h, plan.idx, p["mlp"]["wi"], p["mlp"]["wo"],
                     p["mlp"].get("wg"), w_sel, valid_count=plan.count,
                     act=cfg.act, backend=backend).astype(x.dtype)

@@ -211,7 +211,8 @@ def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
             ent.kind, lp, lrp, x, cfg=cfg, spec=spec,
             pol=(pol if static_pol else lpol), mode=mode,
             elastic_on=ent.elastic, window=ent.window, causal=causal,
-            enc_kv=enc_kv, enc_valid=enc_valid, bucket=bucket)
+            enc_kv=enc_kv, enc_valid=enc_valid, bucket=bucket,
+            spmd_auto=spmd_auto)
 
     # §Perf H2: under a mesh, run each block shard_map-MANUAL over the batch
     # axes (model axis stays auto for GSPMD tensor parallelism). This makes
@@ -227,6 +228,9 @@ def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
     # divide the batch
     ba = ba if (ba and _total(mesh, ba) > 1
                 and x.shape[0] % _total(mesh, ba) == 0) else ()
+    # inside the manual-over-batch wrap, mesh-wide sharding constraints and
+    # nested shard_map kernel wrappers are illegal — blocks skip them there
+    spmd_auto = not ba
 
     from jax.sharding import PartitionSpec as P
     # per-request (B,) policy leaves shard with the batch; scalars and
@@ -448,17 +452,25 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
     return logits, {"scan": scan_caches, "tail": tail_caches}
 
 
-def cache_insert(caches, row_caches, slot):
+def cache_insert(caches, row_caches, slot, cfg=None):
     """Splice a single-request cache tree (batch dim 1, collected by
     ``prefill`` at the slot array's ``max_cache_len``) into batch row
     ``slot`` of a live slot-array cache. ``slot`` may be traced, so ONE
-    compiled insert serves every slot index."""
-    return {
+    compiled insert serves every slot index. When ``cfg`` is given and a
+    mesh is active, the spliced tree is pinned back to the serving cache
+    shardings (kv-heads over `model`, slots over data) — the row update is
+    a batch-dim dynamic_update_slice, which GSPMD would otherwise resolve
+    by replicating the whole live cache."""
+    out = {
         "scan": [cache_row_insert(f, r, slot, batch_axis=1)
                  for f, r in zip(caches["scan"], row_caches["scan"])],
         "tail": [cache_row_insert(f, r, slot, batch_axis=0)
                  for f, r in zip(caches["tail"], row_caches["tail"])],
     }
+    if cfg is not None:
+        from repro.runtime import sharding as SH
+        out = SH.constrain_cache_tree(out, cfg)
+    return out
 
 
 def prefill_into_slot(params, rparams, batch, caches, slot, cfg, ecfg=None,
@@ -475,7 +487,7 @@ def prefill_into_slot(params, rparams, batch, caches, slot, cfg, ecfg=None,
     logits, row = prefill(params, rparams, batch, cfg, ecfg, mode=mode,
                           max_cache_len=max_cache_len, policy=policy,
                           bucket=bucket)
-    caches = cache_insert(caches, row, slot)
+    caches = cache_insert(caches, row, slot, cfg)
     if live_policy is not None and policy is not None:
         live_policy = live_policy.set_row(slot, policy)
     return logits, caches, live_policy

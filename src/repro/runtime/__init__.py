@@ -1,5 +1,8 @@
 from repro.runtime import sharding
-from repro.runtime.elastic import make_mesh, rescale_training_state, reshard, valid_mesh_shapes
+from repro.runtime.elastic import (make_mesh, rescale_serving_state,
+                                   rescale_training_state, reshard,
+                                   valid_mesh_shapes)
 from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
-                                           StragglerWatchdog, run_resilient)
+                                           StragglerWatchdog, run_resilient,
+                                           serve_resilient)
 from repro.runtime.scheduler import RequestHandle, SlotScheduler

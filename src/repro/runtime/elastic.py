@@ -51,3 +51,22 @@ def rescale_training_state(params, router_params, opt_state, new_mesh: Mesh):
     rep = lambda t: jax.tree.map(
         lambda x: jax.device_put(x, SH.replicated(new_mesh)), t)
     return p, rep(router_params), rep(opt_state)
+
+
+def rescale_serving_state(params, router_params, caches, cfg, new_mesh):
+    """Re-mesh live SERVING state without a restart: base params follow the
+    TP rules, routers replicate, and the live slot-array caches (attn k/v
+    rings + valid/pos, ssm/rglru recurrent state, xattn context) follow the
+    cache rules — the cache contents ARE the in-flight requests, so moving
+    them (instead of dropping them) is what lets every running request
+    resume with identical tokens. ``new_mesh=None`` gathers everything back
+    onto the default single device (scale-to-one)."""
+    if new_mesh is None:
+        dev = jax.devices()[0]
+        put = lambda t: jax.tree.map(lambda x: jax.device_put(x, dev), t)
+        return put(params), put(router_params), put(caches)
+    p = reshard(params, new_mesh, SH.param_specs(params, new_mesh))
+    rp = jax.tree.map(
+        lambda x: jax.device_put(x, SH.replicated(new_mesh)), router_params)
+    c = reshard(caches, new_mesh, SH.cache_specs_tree(caches, cfg, new_mesh))
+    return p, rp, c

@@ -1,13 +1,18 @@
-"""Fault tolerance & straggler mitigation for the training loop.
+"""Fault tolerance & straggler mitigation for the training AND serving loops.
 
 Single-controller view of what runs per-host at pod scale:
   * StragglerWatchdog — EWMA of step wall-times; a step exceeding
     `threshold x` the EWMA flags the slow host (here: logs + counter; on a
     real fleet this feeds the re-dispatch / hot-spare controller).
-  * run_resilient — supervision loop: on any step failure it restores the
-    latest verified checkpoint (params/opt/data state) and replays from
-    there. Deterministic data (pipeline.batch_at(step)) makes the replay
-    bitwise-reproducible — asserted by tests/test_fault_tolerance.py.
+  * run_resilient — training supervision loop: on any step failure it
+    restores the latest verified checkpoint (params/opt/data state) and
+    replays from there. Deterministic data (pipeline.batch_at(step)) makes
+    the replay bitwise-reproducible — asserted by
+    tests/test_fault_tolerance.py.
+  * serve_resilient — the serving twin: on a step failure the ServingEngine
+    drains and RE-MESHES onto a fallback (data, model) shape instead of
+    killing the server — in-flight requests live in the slot caches, which
+    `engine.reshard` moves, so they resume with identical tokens.
   * FailureInjector — deterministic fault injection for tests/drills.
 """
 from __future__ import annotations
@@ -87,3 +92,60 @@ def run_resilient(
                         step, e)
             step = restore()
     return metrics, restarts
+
+
+def serve_resilient(
+    engine, *,
+    fallback_shapes=(), max_restarts: int = 3,
+    injector: Optional[FailureInjector] = None,
+    watchdog: Optional[StragglerWatchdog] = None,
+):
+    """Drive ``engine.step()`` until idle, surviving replica failures.
+
+    On a step failure (``SimulatedFailure`` from the injector — the stand-in
+    for a lost replica/host) the engine drains and re-meshes onto the next
+    entry of ``fallback_shapes`` (``(data, model)`` tuples, e.g. from
+    ``runtime.elastic.valid_mesh_shapes`` after losing devices; an exhausted
+    list falls back to a single device) instead of the failure killing the
+    server. In-flight requests are NOT dropped: their state is the slot
+    caches, which ``engine.reshard`` moves, so every running request resumes
+    with identical (bitwise, greedy) tokens on the new mesh.
+
+    Returns ``(n_steps, n_restarts)``."""
+    from repro.runtime.elastic import make_mesh
+    shapes = list(fallback_shapes)
+    steps = restarts = 0
+    while engine.has_work:
+        try:
+            if injector is not None:
+                injector.maybe_fail(steps)
+            t0 = time.perf_counter()
+            engine.step()
+            if watchdog is not None:
+                watchdog.observe(steps, time.perf_counter() - t0)
+            steps += 1
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            # try the fallback shapes in order; an unusable one (fewer
+            # devices left than it needs, batch not divisible by its data
+            # axis) is skipped rather than allowed to kill the server —
+            # the exhausted list still ends at the single-device fallback
+            while True:
+                shape = shapes.pop(0) if shapes else None
+                try:
+                    mesh = (make_mesh(shape, ("data", "model"))
+                            if shape is not None else None)
+                    engine.reshard(mesh)
+                except Exception as fe:
+                    if shape is None:     # even 1 device failed: give up
+                        raise
+                    log.warning("fallback shape %s unusable (%s); trying "
+                                "the next", shape, fe)
+                    continue
+                log.warning("serving step %d failed (%s); drained + "
+                            "re-meshed to %s", steps, e,
+                            "1 device" if mesh is None else dict(mesh.shape))
+                break
+    return steps, restarts

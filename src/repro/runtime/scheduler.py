@@ -9,13 +9,17 @@ host-side bookkeeping around that array:
   and per-request latency timestamps.
 
 * ``SlotScheduler`` — FIFO admission of queued requests into free slots,
-  packed against a per-step FLOP budget: each request costs its compute
-  budget (the roofline active-FLOP fraction its ``ElasticPolicy`` was solved
-  for; 1.0 = full teacher row), and admissions stop when the sum over
-  occupied slots would exceed ``flop_budget``. Low-budget requests therefore
-  co-schedule more densely — elasticity is a *scheduling* signal, not just a
-  quality knob. ``flop_budget=None`` means "one full-budget row per slot"
-  (admission limited only by free slots).
+  packed against a per-replica, per-step FLOP budget: each request costs its
+  compute budget (the roofline active-FLOP fraction its ``ElasticPolicy``
+  was solved for; 1.0 = full teacher row), and a request is placed on the
+  least-loaded replica whose occupied cost sum stays within ``flop_budget``.
+  Low-budget requests therefore co-schedule more densely — elasticity is a
+  *scheduling* signal, not just a quality knob. Under an SPMD mesh the slot
+  array carries a data-parallel replica axis (flat slot i -> replica
+  i // slots_per_replica, exactly the mesh's batch-shard placement);
+  ``n_replicas=1`` (the default) is the old single-device behaviour.
+  ``flop_budget=None`` means "one full-budget row per slot" (admission
+  limited only by free slots).
 
 The scheduler is deliberately model-free: it never touches jax. The engine
 calls ``admit()`` / ``free()`` / ``tick()`` around its compiled steps.
@@ -102,28 +106,82 @@ class RequestHandle:
 
 
 class SlotScheduler:
-    """FIFO admission into a fixed slot array under a per-step FLOP budget.
+    """FIFO admission into a fixed slot array under a per-replica FLOP
+    budget.
 
     ``cost`` of a request = its compute-budget fraction (1.0 for
-    budget-None / teacher rows). Admission packs greedily in arrival order:
-    a request is admitted when a slot is free AND the occupied cost sum
-    stays within ``flop_budget``. If nothing is running and the head
-    request alone exceeds the budget it is admitted anyway (progress
-    guarantee).
+    budget-None / teacher rows). The slot array carries a data-parallel
+    replica axis: flat slot ``i`` belongs to replica ``i // (n_slots //
+    n_replicas)`` — exactly the batch rows a `(data, model)` mesh places on
+    data shard ``i // spr``, so admission placement IS device placement.
+    Admission stays FIFO in arrival order; each head-of-queue request is
+    placed on the least-loaded replica that has a free slot and whose
+    occupied cost sum stays within ``flop_budget`` (a PER-REPLICA budget:
+    every replica decodes the same compiled step, so the slowest replica's
+    active FLOPs set the step time). If nothing is running anywhere and the
+    head request alone exceeds the budget it is admitted anyway (progress
+    guarantee). ``n_replicas=1`` reproduces the old single-device packing
+    exactly.
     """
 
-    def __init__(self, n_slots: int, flop_budget: Optional[float] = None):
+    def __init__(self, n_slots: int, flop_budget: Optional[float] = None,
+                 n_replicas: int = 1):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if n_replicas < 1 or n_slots % n_replicas:
+            raise ValueError(f"n_slots={n_slots} must be a positive "
+                             f"multiple of n_replicas={n_replicas}")
         self.n_slots = n_slots
-        self.flop_budget = (float(n_slots) if flop_budget is None
-                            else float(flop_budget))
+        self.n_replicas = n_replicas
+        self._budget_explicit = flop_budget is not None
+        self.flop_budget = (float(n_slots // n_replicas)
+                            if flop_budget is None else float(flop_budget))
         self.slots: List[Optional[RequestHandle]] = [None] * n_slots
         self.costs: List[float] = [0.0] * n_slots
         self.queue: deque = deque()
         # occupancy accounting (slot-steps used / slot-steps available)
         self.steps = 0
         self.active_slot_steps = 0
+        self.replica_steps = 0          # restarts on re-mesh / reset
+        self.replica_slot_steps = [0] * n_replicas
+
+    # ---- replica axis ----
+    @property
+    def slots_per_replica(self) -> int:
+        return self.n_slots // self.n_replicas
+
+    def replica_of(self, slot: int) -> int:
+        return slot // self.slots_per_replica
+
+    def replica_used_cost(self, replica: int) -> float:
+        spr = self.slots_per_replica
+        lo = replica * spr
+        return sum(c for s, c in zip(self.slots[lo:lo + spr],
+                                     self.costs[lo:lo + spr])
+                   if s is not None)
+
+    def free_slots_in(self, replica: int) -> List[int]:
+        spr = self.slots_per_replica
+        lo = replica * spr
+        return [lo + i for i, s in enumerate(self.slots[lo:lo + spr])
+                if s is None]
+
+    def set_replicas(self, n_replicas: int) -> None:
+        """Re-mesh: re-derive the replica axis over the SAME flat slot
+        array. Running requests keep their flat slots (the live cache rows
+        do not move between batch indices — only the mesh layout changes
+        underneath them); the slot-limited default budget re-scales to the
+        new slots-per-replica, an explicit budget is kept. Per-replica
+        occupancy counters restart (the axis they were counted over is
+        gone); global occupancy accounting continues."""
+        if n_replicas < 1 or self.n_slots % n_replicas:
+            raise ValueError(f"n_slots={self.n_slots} must be a positive "
+                             f"multiple of n_replicas={n_replicas}")
+        self.n_replicas = n_replicas
+        if not self._budget_explicit:
+            self.flop_budget = float(self.slots_per_replica)
+        self.replica_steps = 0
+        self.replica_slot_steps = [0] * n_replicas
 
     # ---- queue ----
     def enqueue(self, handle: RequestHandle, cost: float = 1.0):
@@ -155,21 +213,32 @@ class SlotScheduler:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def admit(self) -> List[Tuple[int, RequestHandle]]:
-        """Pop queued requests into free slots under the FLOP budget;
-        returns [(slot, handle)] for the engine to prefill."""
+        """Pop queued requests into free slots under the per-replica FLOP
+        budget; returns [(slot, handle)] for the engine to prefill. The
+        head of the queue is placed on the least-loaded replica that can
+        take it (lowest occupied cost, ties to the lowest replica index),
+        so admissions spread across the replica axis instead of filling
+        replica 0 first — no replica starves while another queues."""
         out: List[Tuple[int, RequestHandle]] = []
-        used = self.used_cost
-        for slot in self.free_slots():
-            if not self.queue:
-                break
+        used = [self.replica_used_cost(r) for r in range(self.n_replicas)]
+        while self.queue:
             handle, cost = self.queue[0]
-            over = used + cost > self.flop_budget + 1e-9
-            if over and (used > 0 or out):
-                break               # wait for running work to drain
+            cands = [r for r in range(self.n_replicas)
+                     if self.free_slots_in(r)]
+            if not cands:
+                break               # every replica is slot-full
+            fit = [r for r in cands
+                   if used[r] + cost <= self.flop_budget + 1e-9]
+            if not fit:
+                if self.active > 0 or out:
+                    break           # wait for running work to drain
+                fit = cands         # idle engine: progress guarantee
+            r = min(fit, key=lambda i: (used[i], i))
+            slot = self.free_slots_in(r)[0]
             self.queue.popleft()
             self.slots[slot], self.costs[slot] = handle, cost
             handle.slot, handle.status = slot, RUNNING
-            used += cost
+            used[r] += cost
             out.append((slot, handle))
         return out
 
@@ -181,11 +250,18 @@ class SlotScheduler:
         """Record one engine step for occupancy accounting."""
         self.steps += 1
         self.active_slot_steps += self.active
+        self.replica_steps += 1
+        for r in range(self.n_replicas):
+            self.replica_slot_steps[r] += sum(
+                s is not None for s in self.slots[
+                    r * self.slots_per_replica:(r + 1) * self.slots_per_replica])
 
     def reset_stats(self):
         """Zero the occupancy counters (e.g. between benchmark windows)."""
         self.steps = 0
         self.active_slot_steps = 0
+        self.replica_steps = 0
+        self.replica_slot_steps = [0] * self.n_replicas
 
     @property
     def occupancy(self) -> float:
@@ -193,3 +269,12 @@ class SlotScheduler:
         if self.steps == 0:
             return 0.0
         return self.active_slot_steps / (self.steps * self.n_slots)
+
+    @property
+    def replica_occupancy(self) -> List[float]:
+        """Per-replica mean active-slot fraction (since the last re-mesh /
+        reset) — the open-loop report's balance check."""
+        if self.replica_steps == 0:
+            return [0.0] * self.n_replicas
+        return [s / (self.replica_steps * self.slots_per_replica)
+                for s in self.replica_slot_steps]

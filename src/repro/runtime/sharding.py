@@ -24,6 +24,19 @@ def batch_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def data_axis_size(mesh: Optional[Mesh]) -> int:
+    """Product of the data axes' sizes — the data-parallel replica count.
+    THE definition shared by the serving scheduler's replica axis and the
+    kernel wrappers' batch-shard predicates (they must agree: the scheduler
+    packs per replica exactly what one batch shard decodes)."""
+    if mesh is None:
+        return 1
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
 def shard_map_compat(body, *, mesh, in_specs, out_specs, axis_names=None,
                      check_vma=False):
     """Version-compatible shard_map: newer JAX exposes ``jax.shard_map``
@@ -191,11 +204,20 @@ def fitted(spec: P, shape, mesh: Mesh) -> NamedSharding:
 
 # ------------------------------- caches -------------------------------------
 
+def attn_kv_spec(cfg, mesh: Mesh, lead: int = 0) -> P:
+    """The ONE placement rule for a (B, L, K, Dh) attention-cache tensor:
+    kv-heads over `model` when divisible, else head_dim (always 128 | 64).
+    Shared by `cache_specs_tree` (the jit out_shardings pin) and
+    `constrain_kv_cache` (the decode write-site pin) — the two MUST agree
+    or every compiled decode step pays a cache re-layout copy."""
+    kv_div = cfg.n_kv_heads and cfg.n_kv_heads % model_axis_size(mesh) == 0
+    tail = (None, "model", None) if kv_div else (None, None, "model")
+    return P(*([None] * lead), batch_axes(mesh), *tail)
+
+
 def cache_specs_tree(cache_shapes, cfg, mesh: Mesh):
     """PartitionSpecs for a cache pytree (from models.cache_specs)."""
     ba = batch_axes(mesh)
-    msz = model_axis_size(mesh)
-    kv_div = cfg.n_kv_heads and cfg.n_kv_heads % msz == 0
 
     def spec(path, leaf):
         key = jax.tree_util.keystr(path)
@@ -204,9 +226,7 @@ def cache_specs_tree(cache_shapes, cfg, mesh: Mesh):
         if "['attn']" in key or "['xattn']" in key:
             if key.endswith("['valid']") or key.endswith("['pos']"):
                 return P(*lead, ba, None)
-            if kv_div:
-                return P(*lead, ba, None, "model", None)
-            return P(*lead, ba, None, None, "model")   # shard head_dim
+            return attn_kv_spec(cfg, mesh, lead=nscan)
         if key.endswith("['state']") and leaf.ndim - nscan == 4:   # ssm
             return P(*lead, ba, "model", None, None)
         if key.endswith("['state']"):                               # rglru
@@ -224,3 +244,29 @@ def cache_specs_tree(cache_shapes, cfg, mesh: Mesh):
 def cache_shardings(cache_shapes, cfg, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s),
                         cache_specs_tree(cache_shapes, cfg, mesh))
+
+
+def constrain_kv_cache(x, cfg):
+    """Pin a (B, L, K, Dh) ring-cache tensor to the serving cache rules
+    (kv-heads over `model` when divisible, else head_dim; batch over the
+    data axes) under the active mesh. Applied at the two cache WRITE sites
+    — `prefill_into_slot`'s row splice and `attn_decode`'s per-row scatter
+    — where GSPMD would otherwise replicate the batch-indexed update to the
+    full global cache. No-op outside a mesh context."""
+    m = active_mesh()
+    if m is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, _fit_spec(attn_kv_spec(cfg, m), x.shape, m, relocate=True))
+
+
+def constrain_cache_tree(caches, cfg):
+    """with_sharding_constraint every leaf of a serving cache pytree to its
+    `cache_specs_tree` spec under the active mesh (no-op outside one) — the
+    row-splice twin of `constrain_kv_cache`, covering all cache kinds
+    (attn/xattn k/v rings, ssm/rglru state, valid/pos)."""
+    m = active_mesh()
+    if m is None:
+        return caches
+    specs = cache_specs_tree(caches, cfg, m)
+    return jax.tree.map(jax.lax.with_sharding_constraint, caches, specs)

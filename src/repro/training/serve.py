@@ -28,10 +28,18 @@ is exact greedy argmax and bit-matches the legacy lockstep engine.
 
 ``generate(List[GenRequest])`` remains as a thin synchronous wrapper over
 submit/step (legacy API).
+
+SPMD serving: pass ``mesh=`` to run the same two compiled entry points
+across a `(data, model)` mesh — params by the name-based TP rules, KV
+caches kv-head-sharded, slots data-sharded into replicas the scheduler
+packs independently — and ``engine.reshard(new_mesh)`` to scale the
+replica axis up/down live (in-flight requests resume bitwise).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from contextlib import nullcontext
 from typing import List, Optional
 
 import jax
@@ -131,16 +139,31 @@ class ServingEngine:
     resolved to per-request policies by the roofline budget solver and
     spliced into the live (B,)-leaf ElasticPolicy at admission.
 
-    ``step_flop_budget``: per-step FLOP budget for admission packing, in
-    units of full-budget rows (None = batch_size: limited by slots only).
+    ``step_flop_budget``: per-replica, per-step FLOP budget for admission
+    packing, in units of full-budget rows (None = slots-per-replica:
+    limited by slots only).
     ``eos_id``: default stop token (falls back to ``cfg.eos_id``).
+
+    ``mesh``: optional ``jax.sharding.Mesh`` with a `model` axis (TP) and
+    data axes (`data`/`pod`, the replica axis). The engine then runs SPMD:
+    base params follow the Megatron-style name rules in
+    ``runtime/sharding.py``, routers replicate, the ring KV caches shard
+    kv-heads over `model` and slots over the data axes, and the slot array
+    gains a data-parallel replica axis for the scheduler (flat slot i lives
+    on data shard i // slots_per_replica). The compiled admission/decode
+    graphs are the same two jitted entry points — budgets, slots, and
+    sampling knobs still never recompile — and their outputs are
+    token-for-token identical to the single-device engine.
+    ``n_replicas`` overrides the scheduler's replica count without a mesh
+    (placement-policy testing); with a mesh it must match the data axes.
     """
 
     def __init__(self, params, router_params, cfg, elastic=None,
                  mode: str = "infer", batch_size: int = 8,
                  max_seq: int = 256, default_budget: Optional[float] = None,
                  theta: float = 0.5, eos_id: Optional[int] = None,
-                 step_flop_budget: Optional[float] = None):
+                 step_flop_budget: Optional[float] = None, mesh=None,
+                 n_replicas: Optional[int] = None):
         self.params, self.rp = params, router_params
         self.cfg, self.mode = cfg, mode
         # base policy = the elastic config's own knobs (threshold routing
@@ -155,14 +178,10 @@ class ServingEngine:
         self._policy_cache: dict = {}
         self._use_policy = self.spec is not None and mode != "base"
 
-        # jitted entry points (cache sizes reported by compile_counts)
-        self._admit_fn = jax.jit(_make_admit_fn(cfg, self.spec, mode, max_seq),
-                                 static_argnames=("bucket",))
-        self._step_fn = jax.jit(_make_step_fn(cfg, self.spec, mode))
-
         # ---- live slot-array state ----
         B = batch_size
-        self.scheduler = SlotScheduler(B, step_flop_budget)
+        self.scheduler = SlotScheduler(
+            B, step_flop_budget, self._replicas_for(mesh, n_replicas))
         self._caches = cache_init(cfg, B, max_seq)
         self._live_policy = (self._base_policy.broadcast_rows(B)
                              if self._use_policy else None)
@@ -174,6 +193,86 @@ class ServingEngine:
         self._seeds = np.zeros((B,), np.uint32)
         self._ngen = np.zeros((B,), np.int64)
         self._extras: dict = {}                   # handle.id -> extra inputs
+
+        # shard state + build the jitted entry points (compile_counts)
+        self.mesh = None
+        self.remeshed_at: Optional[float] = None  # last reshard() wall time
+        self._install_mesh(mesh)
+
+    # ------------------------------ SPMD mesh --------------------------------
+
+    def _replicas_for(self, mesh, n_replicas: Optional[int]) -> int:
+        """Replica count = product of the mesh's data axes (`pod`, `data`);
+        explicit ``n_replicas`` must agree with the mesh when both given."""
+        from repro.runtime import sharding as SH
+        r = SH.data_axis_size(mesh)
+        if n_replicas is not None:
+            if mesh is not None and n_replicas != r:
+                raise ValueError(f"n_replicas={n_replicas} does not match "
+                                 f"the mesh's data axes (= {r})")
+            r = n_replicas
+        if self.B % r:
+            raise ValueError(f"batch_size={self.B} must be a multiple of "
+                             f"the replica count {r}")
+        return r
+
+    def _install_mesh(self, mesh) -> None:
+        """device_put all live state onto ``mesh`` (None = default single
+        device) and rebuild the two jitted entry points against it."""
+        from repro.runtime import sharding as SH
+        from repro.runtime.elastic import rescale_serving_state
+        prev, self.mesh = self.mesh, mesh
+        if mesh is not None or prev is not None:   # mesh-less init: no move
+            self.params, self.rp, self._caches = rescale_serving_state(
+                self.params, self.rp, self._caches, self.cfg, mesh)
+            rep = ((lambda t: jax.tree.map(
+                        lambda x: jax.device_put(x, SH.replicated(mesh)), t))
+                   if mesh is not None else
+                   (lambda t: jax.tree.map(
+                        lambda x: jax.device_put(x, jax.devices()[0]), t)))
+            self._tok = rep(self._tok)
+            if self._live_policy is not None:
+                self._live_policy = rep(self._live_policy)
+        # fresh jit wrappers: compile_counts tracks the CURRENT mesh only.
+        # Under a mesh the slot-state OUTPUTS (caches, next token, live
+        # policy) are pinned to the same shardings the next call's inputs
+        # carry — without this the compiler picks its own output layout and
+        # the second admit/decode call recompiles against it, breaking the
+        # {prefill: 1, decode: 1} contract.
+        admit_raw = _make_admit_fn(self.cfg, self.spec, self.mode,
+                                   self.max_seq)
+        step_raw = _make_step_fn(self.cfg, self.spec, self.mode)
+        if mesh is None:
+            self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",))
+            self._step_fn = jax.jit(step_raw)
+        else:
+            rsh = SH.replicated(mesh)
+            cache_sh = SH.cache_shardings(self._caches, self.cfg, mesh)
+            pol_sh = (jax.tree.map(lambda _: rsh, self._live_policy)
+                      if self._live_policy is not None else None)
+            self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",),
+                                     out_shardings=(rsh, cache_sh, pol_sh))
+            self._step_fn = jax.jit(step_raw, out_shardings=(rsh, cache_sh))
+
+    def _mesh_ctx(self):
+        """Trace/execute under the mesh so `active_mesh()`-gated sharding
+        constraints inside the model apply."""
+        return self.mesh if self.mesh is not None else nullcontext()
+
+    def reshard(self, mesh) -> None:
+        """LIVE re-mesh: move the engine — base params, routers, the slot
+        caches holding every in-flight request, live policy rows — onto a
+        new mesh shape (None = back to one device) without a restart.
+        In-flight requests resume with identical (bitwise, greedy) tokens:
+        the compiled math is the same, only its partitioning changes.
+        The queue and slot assignments survive; the scheduler re-derives
+        its replica axis from the new data axes (see
+        ``SlotScheduler.set_replicas``). The two entry points recompile
+        once against the new shardings (``compile_counts`` restarts)."""
+        jax.block_until_ready(self._caches)       # drain the in-flight step
+        self.scheduler.set_replicas(self._replicas_for(mesh, None))
+        self._install_mesh(mesh)
+        self.remeshed_at = time.perf_counter()    # stats-window boundary
 
     # ---- budgets -> per-request policy rows ----
     def _policy_for(self, budget: Optional[float]) -> Optional[ElasticPolicy]:
@@ -246,6 +345,12 @@ class ServingEngine:
     def occupancy(self) -> float:
         return self.scheduler.occupancy
 
+    @property
+    def replica_occupancy(self) -> List[float]:
+        """Per-replica mean active-slot fraction (trivially [occupancy]
+        when running unsharded)."""
+        return self.scheduler.replica_occupancy
+
     # ------------------------------ stepping ---------------------------------
 
     def _admit_one(self, slot: int, handle: RequestHandle):
@@ -268,11 +373,12 @@ class ServingEngine:
                 and self.spec.routing_impl == "ragged"):
             bucket = ragged_bucket(pol_row, plen)
         seed = int(req.seed) & 0xFFFFFFFF        # any python int -> uint32
-        tok0, self._caches, self._live_policy = self._admit_fn(
-            self.params, self.rp, batch, self._caches, jnp.int32(slot),
-            pol_row, self._live_policy,
-            jnp.float32(req.temperature), jnp.int32(req.top_k),
-            jnp.uint32(seed), jnp.int32(plen), bucket=bucket)
+        with self._mesh_ctx():
+            tok0, self._caches, self._live_policy = self._admit_fn(
+                self.params, self.rp, batch, self._caches, jnp.int32(slot),
+                pol_row, self._live_policy,
+                jnp.float32(req.temperature), jnp.int32(req.top_k),
+                jnp.uint32(seed), jnp.int32(plen), bucket=bucket)
         self._tok = self._tok.at[slot].set(tok0)
         self._t[slot] = plen
         self._active[slot] = True
@@ -310,11 +416,12 @@ class ServingEngine:
             return len(admitted)
         live = [(s, h) for s, h in enumerate(self.scheduler.slots)
                 if h is not None and self._active[s]]
-        self._tok, self._caches = self._step_fn(
-            self.params, self.rp, self._tok, self._caches,
-            jnp.asarray(self._t), self._live_policy,
-            jnp.asarray(self._active), jnp.asarray(self._temp),
-            jnp.asarray(self._topk), jnp.asarray(self._seeds))
+        with self._mesh_ctx():
+            self._tok, self._caches = self._step_fn(
+                self.params, self.rp, self._tok, self._caches,
+                jnp.asarray(self._t), self._live_policy,
+                jnp.asarray(self._active), jnp.asarray(self._temp),
+                jnp.asarray(self._topk), jnp.asarray(self._seeds))
         toks = np.asarray(self._tok)
         self.scheduler.tick()
         for slot, handle in live:

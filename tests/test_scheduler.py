@@ -229,6 +229,102 @@ def test_first_token_finish_does_not_stall_queue(key):
     np.testing.assert_array_equal(outs[0], outs[1])
 
 
+# --------------------------- replica-aware packing ---------------------------
+
+def test_replica_packing_balances_and_never_starves():
+    """Admissions spread over the replica axis (least-loaded placement
+    under a PER-REPLICA budget) instead of filling replica 0 first."""
+    sched = SlotScheduler(8, flop_budget=1.0, n_replicas=2)
+    hs = _dummy(6)
+    for h in hs:
+        sched.enqueue(h, cost=0.5)
+    admitted = sched.admit()
+    # 1.0 per replica fits two 0.5-cost rows on EACH replica: 4 admitted,
+    # alternating replicas (0, 1, 0, 1), nobody queued behind a full
+    # replica while the other idles
+    assert [h for _, h in admitted] == hs[:4]
+    assert [sched.replica_of(s) for s, _ in admitted] == [0, 1, 0, 1]
+    assert sched.pending == 2
+    assert sched.replica_used_cost(0) == pytest.approx(1.0)
+    assert sched.replica_used_cost(1) == pytest.approx(1.0)
+    assert sched.admit() == []            # both replicas at budget
+    sched.free(admitted[0][0])            # replica 0 drains one row
+    nxt = sched.admit()
+    assert len(nxt) == 1 and sched.replica_of(nxt[0][0]) == 0
+    # per-replica occupancy accounting
+    sched.tick()
+    assert sched.replica_occupancy == pytest.approx([0.5, 0.5])
+    # progress guarantee is replica-aware too: idle scheduler admits an
+    # over-budget request onto some replica
+    big = SlotScheduler(4, flop_budget=0.3, n_replicas=2)
+    h = _dummy(1)[0]
+    big.enqueue(h, cost=1.0)
+    assert [x for _, x in big.admit()] == [h]
+
+    with pytest.raises(ValueError, match="multiple"):
+        SlotScheduler(6, n_replicas=4)
+
+
+def test_replica_cancel_frees_the_right_slot(key):
+    """cancel() on a 2-replica engine frees exactly the cancelled request's
+    (replica, slot) pair; the queued request lands in that hole and every
+    survivor matches its solo run."""
+    cfg, ecfg, params, rp = _setup(key)
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                        batch_size=4, max_seq=24, n_replicas=2)
+    prompts = _prompts(cfg, 5, seed=21)
+    hs = [eng.submit(GenRequest(p, 6)) for p in prompts]
+    eng.step()
+    # four running (two per replica), one queued
+    assert [h.status for h in hs] == ["running"] * 4 + ["queued"]
+    assert [eng.scheduler.replica_of(h.slot) for h in hs[:4]] == [0, 1, 0, 1]
+    victim = hs[3]
+    victim_slot, victim_replica = victim.slot, \
+        eng.scheduler.replica_of(victim.slot)
+    assert eng.cancel(victim)
+    eng.step()                            # hs[4] admitted into the hole
+    assert hs[4].slot == victim_slot
+    assert eng.scheduler.replica_of(hs[4].slot) == victim_replica
+    while not all(h.done for h in hs):
+        eng.step()
+    solo = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                         batch_size=2, max_seq=24)
+    for h, p in [(hs[0], prompts[0]), (hs[1], prompts[1]),
+                 (hs[2], prompts[2]), (hs[4], prompts[4])]:
+        np.testing.assert_array_equal(
+            np.asarray(h.output), solo.generate([GenRequest(p, 6)])[0])
+
+
+def test_staggered_multi_replica_decode_matches_solo(key):
+    """Requests staggered across TWO replicas (mixed budgets, one sampled
+    row) emit exactly their solo-run tokens with flat compile counts — the
+    replica axis is scheduling-only, the compiled step never changes."""
+    cfg, ecfg, params, rp = _setup(key)
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                        batch_size=4, max_seq=24, n_replicas=2)
+    prompts = _prompts(cfg, 4, seed=17)
+    reqs = [GenRequest(prompts[0], 6, budget=0.4),
+            GenRequest(prompts[1], 6, budget=1.0),
+            GenRequest(prompts[2], 6),
+            GenRequest(prompts[3], 6, temperature=0.8, top_k=4, seed=11)]
+    h0 = eng.submit(reqs[0])
+    eng.step(); eng.step()
+    h1 = eng.submit(reqs[1])
+    eng.step()
+    h2, h3 = eng.submit(reqs[2]), eng.submit(reqs[3])
+    handles = [h0, h1, h2, h3]
+    while not all(h.done for h in handles):
+        eng.step()
+    assert eng.compile_counts() == {"prefill": 1, "decode": 1}
+    # both replicas actually served work
+    assert {eng.scheduler.replica_of(h.slot) for h in handles} == {0, 1}
+    solo = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                         batch_size=2, max_seq=24)
+    for h, r in zip(handles, reqs):
+        np.testing.assert_array_equal(
+            np.asarray(h.output), solo.generate([r])[0])
+
+
 # ------------------------------- CLI validation ------------------------------
 
 def test_budget_list_rejects_out_of_range():
