@@ -13,12 +13,25 @@ Checked:
   * categorical axes (`mode`, `backend`, `budget`) present in the fresh run
     are covered by the checked-in rows.
 
+Findings are reported through ``repro.analysis``'s Finding/Report types, so
+this gate's ``--json`` artifact diffs cleanly against the lint-graphs job's
+(one schema for every static gate in CI).
+
 Usage: python benchmarks/check_bench_schema.py TRACKED.json FRESH.json
+       [--json OUT.json]
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis import Finding, Report  # noqa: E402
+
+PASS_NAME = "bench_schema"
 
 
 def _rows(path: str):
@@ -31,34 +44,50 @@ def _rows(path: str):
 
 
 def check(tracked_path: str, fresh_path: str) -> list:
+    """-> list[Finding] (rule BENCH-SCHEMA-*) against the tracked file."""
     tracked, fresh = _rows(tracked_path), _rows(fresh_path)
     tkeys = set().union(*(r.keys() for r in tracked))
     fkeys = set().union(*(r.keys() for r in fresh))
-    problems = []
+    target = os.path.basename(tracked_path)
+    finds = []
     if fkeys - tkeys:
-        problems.append(f"columns missing from {tracked_path}: "
-                        f"{sorted(fkeys - tkeys)} — the bench grew a column;"
-                        f" refresh the checked-in file")
+        finds.append(Finding(
+            "BENCH-SCHEMA-MISSING-COL", target,
+            f"columns missing from the tracked file: "
+            f"{sorted(fkeys - tkeys)} — the bench grew a column; refresh "
+            f"the checked-in file"))
     if tkeys - fkeys:
-        problems.append(f"stale columns in {tracked_path}: "
-                        f"{sorted(tkeys - fkeys)} — the bench no longer "
-                        f"emits them")
+        finds.append(Finding(
+            "BENCH-SCHEMA-STALE-COL", target,
+            f"stale columns in the tracked file: {sorted(tkeys - fkeys)} — "
+            f"the bench no longer emits them"))
     for col in ("mode", "backend", "budget"):
         fv = {r[col] for r in fresh if col in r}
         tv = {r[col] for r in tracked if col in r}
         if fv and not fv <= tv:
-            problems.append(f"{col} values {sorted(fv - tv, key=str)} in the"
-                            f" fresh run are absent from {tracked_path}")
-    return problems
+            finds.append(Finding(
+                "BENCH-SCHEMA-AXIS", target,
+                f"{col} values {sorted(fv - tv, key=str)} in the fresh run "
+                f"are absent from the tracked rows"))
+    return finds
 
 
 def main(argv):
+    json_out = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_out = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
     if len(argv) != 3:
         raise SystemExit(__doc__)
-    problems = check(argv[1], argv[2])
-    if problems:
-        for p in problems:
-            print(f"[bench-schema] FAIL: {p}")
+    report = Report(meta={"tracked": argv[1], "fresh": argv[2]})
+    report.extend(PASS_NAME, check(argv[1], argv[2]))
+    if json_out:
+        with open(json_out, "w") as f:
+            f.write(report.to_json())
+    if not report.ok:
+        for f in report.findings:
+            print(f"[bench-schema] FAIL: {f}")
         return 1
     print(f"[bench-schema] OK: {argv[1]} matches the fresh run's schema")
     return 0

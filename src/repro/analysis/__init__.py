@@ -1,0 +1,51 @@
+"""repro.analysis — static lint of the serving/training graphs and kernels.
+
+``python -m repro.analysis`` builds the real toy-config entry points
+(``graphs.build_bundle``) and runs every registered pass over them:
+
+    retrace    value-dependent lowering / weak types / compile-count creep
+    sharding   unpinned cache writes, missing out_shardings on donated outs
+    host_sync  host callbacks + host-resident operands on the hot path
+    donation   declared donations actually alias (HLO table + is_deleted)
+    dtype      large silent bf16->f32 upcasts, x64 leaks
+    pallas     kernel grid/BlockSpec in-bounds + MXU alignment + prefetch
+
+Each pass is ``run(bundle) -> list[Finding]``; add a pass by appending to
+``PASSES``. Waivers (``--waive RULE[:TARGET-GLOB]`` or a waiver file)
+silence known findings without hiding them from the report.
+"""
+from repro.analysis import (donation, dtype_lint, host_sync, pallas_lint,
+                            retrace, sharding_lint)
+from repro.analysis.framework import (Finding, Report, Waiver,
+                                      load_waiver_file)
+from repro.analysis.graphs import GraphBundle, build_bundle
+
+PASSES = [
+    (retrace.PASS_NAME, retrace.run),
+    (sharding_lint.PASS_NAME, sharding_lint.run),
+    (host_sync.PASS_NAME, host_sync.run),
+    (donation.PASS_NAME, donation.run),
+    (dtype_lint.PASS_NAME, dtype_lint.run),
+    (pallas_lint.PASS_NAME, pallas_lint.run),
+]
+
+__all__ = ["Finding", "Report", "Waiver", "load_waiver_file", "GraphBundle",
+           "build_bundle", "PASSES", "run_all"]
+
+
+def run_all(bundle=None, waivers=(), only=None, mesh_shape=None) -> Report:
+    """Run every registered pass (or the ``only`` subset) and fold the
+    findings into one Report. ``bundle=None`` builds the default toy
+    bundle (optionally on ``mesh_shape``)."""
+    if bundle is None:
+        bundle = build_bundle(mesh_shape=mesh_shape)
+    report = Report(meta={
+        "mesh": list(bundle.mesh.devices.shape) if bundle.mesh else None,
+        "arch": type(bundle.cfg).__name__,
+        "entries": sorted(bundle.entries()),
+    })
+    for name, fn in PASSES:
+        if only and name not in only:
+            continue
+        report.extend(name, fn(bundle), waivers)
+    return report

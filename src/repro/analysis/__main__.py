@@ -1,0 +1,62 @@
+"""CLI: ``python -m repro.analysis [--mesh D,M] [--json out.json] ...``
+
+Exit status is 1 iff any unwaived error-severity finding remains — the
+contract the ``lint-graphs`` CI job enforces.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static lint of the serving/training graphs + kernels "
+                    "(see docs/analysis.md for the rule catalog)")
+    ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL",
+                    help="mesh shape for the bundle; 'none' lints unsharded "
+                         "graphs (sharding pass goes vacuous). Default 1,1 "
+                         "— a trivial mesh so constraint/pin rules stay "
+                         "active on one device.")
+    ap.add_argument("--arch", default="toy-lm")
+    ap.add_argument("--pass", dest="only", action="append", metavar="NAME",
+                    help="run only this pass (repeatable)")
+    ap.add_argument("--waive", action="append", default=[],
+                    metavar="RULE[:TARGET-GLOB]")
+    ap.add_argument("--waiver-file", default="analysis-waivers.txt",
+                    help="waiver file (default: ./analysis-waivers.txt if "
+                         "present)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the machine-readable report ('-' = stdout)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="include finding detail blocks in the table")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import (Waiver, build_bundle, load_waiver_file,
+                                run_all)
+
+    waivers = [Waiver.parse(w) for w in args.waive]
+    if os.path.exists(args.waiver_file):
+        waivers += load_waiver_file(args.waiver_file)
+
+    mesh_shape = None
+    if args.mesh.lower() not in ("none", ""):
+        mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+
+    bundle = build_bundle(mesh_shape=mesh_shape, arch=args.arch)
+    report = run_all(bundle, waivers=waivers, only=args.only)
+
+    if args.json == "-":
+        print(report.to_json())
+    else:
+        if args.json:
+            with open(args.json, "w") as f:
+                f.write(report.to_json())
+        print(report.table(verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""DONATE — buffer donation actually reaches the compiled executables.
+
+``donate_argnums`` is a *request*: XLA only honors it when shapes,
+layouts, and shardings line up, and silently falls back to copies when
+they don't — the KV caches then exist twice per decode step. Two gates:
+
+* ``DONATE-MISSING``: static check. Flatten the avals of each entry
+  point's declared-donated args (``EntryPoint.donated``) and require that
+  multiset to be covered by the compiled executable's
+  ``input_output_alias`` table (parsed by ``launch.hloprof``). Matching is
+  by aval, not parameter index, so ``keep_unused=False`` param dropping
+  can't produce false alarms.
+* ``DONATE-DEAD``: functional check. Call the jitted fn once with
+  sacrificial deep copies and assert every donated leaf is actually
+  ``is_deleted()`` afterwards — the end-to-end proof the alias survived
+  all the way through runtime buffer management.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.framework import Finding
+from repro.launch.hloprof import donated_param_types
+
+PASS_NAME = "donation"
+
+
+def _canon(type_str: str) -> str:
+    """Normalize jax aval / HLO entry-layout type spellings to one form:
+    jax says ``i32``/``bool`` where HLO says ``s32``/``pred``."""
+    t = type_str.replace(" ", "").rstrip("~*")
+    if t.startswith("i") and not t.startswith("int"):
+        t = "s" + t[1:]
+    return t.replace("bool[", "pred[")
+
+
+def _donated_avals(ep, compiled) -> List[str]:
+    """hloprof-style type strings (``f32[2,48]``) of every leaf of every
+    declared-donated arg — in *per-device* shapes, since the SPMD HLO
+    module's alias table speaks local shards, not global avals."""
+    try:
+        arg_shardings = compiled.input_shardings[0]
+    except Exception:
+        arg_shardings = None
+    out = []
+    for argnum in ep.donated:
+        leaves = jax.tree.leaves(ep.args[argnum])
+        shardings = [None] * len(leaves)
+        if arg_shardings is not None and argnum < len(arg_shardings):
+            cand = jax.tree.leaves(arg_shardings[argnum])
+            if len(cand) == len(leaves):
+                shardings = cand
+        for leaf, sh in zip(leaves, shardings):
+            shape = tuple(jnp.shape(leaf))
+            if sh is not None:
+                try:
+                    shape = sh.shard_shape(shape)
+                except Exception:
+                    pass
+            aval = jax.core.ShapedArray(shape, jnp.asarray(leaf).dtype)
+            out.append(_canon(aval.str_short(short_dtypes=True)))
+    return out
+
+
+def _static_check(bundle, name: str) -> List[Finding]:
+    ep = bundle.entries()[name]
+    if not ep.donated:
+        return []
+    expected = Counter(_donated_avals(ep, bundle.compiled(name)))
+    actual = Counter(
+        _canon(t) for t in donated_param_types(bundle.compiled(name).as_text()))
+    missing = expected - actual
+    if missing:
+        lost = ", ".join(f"{t} x{n}" for t, n in sorted(missing.items()))
+        return [Finding(
+            "DONATE-MISSING", f"serve.{name}",
+            f"declared-donated buffers absent from input_output_alias: "
+            f"{lost} — each lives twice per call",
+            detail=f"expected {sorted(expected.elements())}\n"
+                   f"aliased  {sorted(actual.elements())}")]
+    return []
+
+
+def _functional_check(bundle, name: str) -> List[Finding]:
+    """Execute once on sacrificial copies; donated leaves must die."""
+    ep = bundle.fresh_entry(name)
+    if not ep.donated:
+        return []
+    copies = jax.tree.map(
+        lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x, ep.args)
+    with bundle._ctx():
+        out = ep.fn(*copies, **ep.static)
+    jax.block_until_ready(out)
+    finds = []
+    for argnum in ep.donated:
+        leaves = jax.tree.leaves(copies[argnum])
+        live = [lf.aval.str_short() for lf in leaves
+                if isinstance(lf, jax.Array) and not lf.is_deleted()]
+        if live:
+            finds.append(Finding(
+                "DONATE-DEAD", f"serve.{name}",
+                f"arg {argnum}: {len(live)}/{len(leaves)} donated leaves "
+                f"still alive after the call ({', '.join(live[:4])}) — "
+                "donation fell back to a copy"))
+    return finds
+
+
+def run(bundle) -> List[Finding]:
+    finds: List[Finding] = []
+    for name in bundle.entries():
+        finds += _static_check(bundle, name)
+        finds += _functional_check(bundle, name)
+    return finds

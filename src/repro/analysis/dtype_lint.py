@@ -1,0 +1,60 @@
+"""DTYPE — silent precision/width surprises on the hot path.
+
+* ``DTYPE-UPCAST``: a ``convert_element_type`` from bf16/f16 to f32 whose
+  result is large (>= 64Ki elements) inside a serving/training graph.
+  Deliberate f32 accumulation lives inside the Pallas kernels (whose
+  sub-jaxprs the walker skips) and in tiny reductions; a *large* upcast in
+  the surrounding graph doubles HBM traffic for that tensor — usually a
+  missing ``preferred_element_type`` or a ref-path helper leaking into
+  production. On the f32 analysis config this is vacuously clean; run the
+  CLI against a bf16 variant to audit a real deployment graph.
+* ``DTYPE-WIDE``: any f64/s64 value in the graph — an x64 leak (a Python
+  float threading through ``np.float64`` or an enabled-x64 import order
+  bug). CPU silently runs it; TPU pays a 2x emulation penalty or errors.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+from repro.analysis.framework import Finding, eqn_site, walk_eqns
+
+PASS_NAME = "dtype"
+
+_NARROW = ("bfloat16", "float16")
+_UPCAST_MIN_ELEMS = 64 * 1024
+_WIDE = ("float64", "int64", "uint64", "complex128")
+
+
+def _findings_for(bundle, name: str) -> List[Finding]:
+    finds = []
+    wide_seen = set()
+    for _, eqn in walk_eqns(bundle.jaxpr(name)):
+        if eqn.primitive.name == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+            if (str(src.dtype) in _NARROW and str(dst.dtype) == "float32"
+                    and math.prod(dst.shape) >= _UPCAST_MIN_ELEMS):
+                finds.append(Finding(
+                    "DTYPE-UPCAST", f"serve.{name}",
+                    f"{src.str_short()} -> {dst.str_short()} at "
+                    f"{eqn_site(eqn)}: large activation silently widened "
+                    "to f32 (2x HBM for this tensor)"))
+        for v in eqn.outvars:
+            dt = str(getattr(v.aval, "dtype", ""))
+            if dt in _WIDE:
+                site = eqn_site(eqn)
+                if (dt, site) not in wide_seen:
+                    wide_seen.add((dt, site))
+                    finds.append(Finding(
+                        "DTYPE-WIDE", f"serve.{name}",
+                        f"{dt} value produced by {eqn.primitive.name} at "
+                        f"{site} — x64 leaked into the graph"))
+    return finds
+
+
+def run(bundle) -> List[Finding]:
+    finds: List[Finding] = []
+    for name in bundle.entries():
+        finds += _findings_for(bundle, name)
+    return finds

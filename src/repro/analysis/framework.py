@@ -1,0 +1,228 @@
+"""Finding / Report / waiver plumbing shared by every analysis pass.
+
+A *pass* is a function ``run(bundle) -> list[Finding]`` registered in
+``repro.analysis.PASSES``; the CLI (``python -m repro.analysis``) runs them
+over the real serving/training graphs (see ``graphs.GraphBundle``) and
+renders one ``Report``. The same ``Finding``/``Report`` types back
+``benchmarks/check_bench_schema.py`` so every static gate in CI speaks one
+schema (``--json`` artifacts diff cleanly across jobs).
+
+Waivers: a rule can be silenced per target with ``Waiver(rule, target,
+reason)`` — ``rule`` exact, ``target`` an fnmatch glob over the finding's
+target string. The CLI reads ``--waive RULE[:TARGET-GLOB]`` flags and an
+optional waiver file (one ``RULE[:TARGET-GLOB]  # reason`` per line);
+waived findings are reported but never fail the run.
+
+Also here: the jaxpr walker the graph-level passes share. It recurses
+through every higher-order primitive (pjit/scan/while/cond/custom-vjp...)
+by treating any ``Jaxpr``/``ClosedJaxpr`` found in ``eqn.params`` as a
+child, so a lint rule written once sees cache writes inside a scanned layer
+stack as well as at top level. ``pallas_call`` sub-jaxprs are skipped by
+default: kernel-internal f32 accumulation upcasts are deliberate and the
+kernels get their own dedicated verifier (``pallas_lint``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Iterable, Iterator, List, Optional, Tuple
+
+from jax._src import core as jax_core
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at one site."""
+    rule: str                 # e.g. "SHARD-CACHE-WRITE"
+    target: str               # e.g. "serve.decode" / "kernels.moe_gmm"
+    message: str              # one line, human-oriented
+    severity: str = "error"   # "error" fails CI; "warning" is advisory
+    detail: str = ""          # optional multi-line evidence (diffs, eqns)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if not d["detail"]:
+            del d["detail"]
+        return d
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.rule} @ {self.target}: {self.message}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    rule: str                 # exact rule id
+    target: str = "*"         # fnmatch glob over Finding.target
+    reason: str = ""
+
+    def matches(self, f: Finding) -> bool:
+        return f.rule == self.rule and fnmatch.fnmatch(f.target, self.target)
+
+    @classmethod
+    def parse(cls, text: str, reason: str = "") -> "Waiver":
+        """``RULE`` or ``RULE:TARGET-GLOB``."""
+        rule, _, target = text.partition(":")
+        return cls(rule.strip(), target.strip() or "*", reason)
+
+
+def load_waiver_file(path: str) -> List[Waiver]:
+    """One waiver per line: ``RULE[:TARGET-GLOB]  # reason``. Blank lines
+    and full-line comments are skipped."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            body, _, comment = line.partition("#")
+            body = body.strip()
+            if body:
+                out.append(Waiver.parse(body, reason=comment.strip()))
+    return out
+
+
+@dataclasses.dataclass
+class Report:
+    """The outcome of a set of passes over a set of graphs."""
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    waived: List[Finding] = dataclasses.field(default_factory=list)
+    passes: List[str] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def extend(self, pass_name: str, findings: Iterable[Finding],
+               waivers: Iterable[Waiver] = ()) -> None:
+        self.passes.append(pass_name)
+        for f in findings:
+            (self.waived if any(w.matches(f) for w in waivers)
+             else self.findings).append(f)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "passes": self.passes,
+            "meta": self.meta,
+            "findings": [f.to_dict() for f in self.findings],
+            "waived": [f.to_dict() for f in self.waived],
+        }, indent=indent)
+
+    def table(self, verbose: bool = False) -> str:
+        lines = [f"passes run: {', '.join(self.passes) or '(none)'}"]
+        for f in self.findings:
+            lines.append(str(f))
+            if verbose and f.detail:
+                lines += ["    " + ln for ln in f.detail.splitlines()[:20]]
+        for f in self.waived:
+            lines.append(f"(waived) {f}")
+        n_err = len(self.errors)
+        n_warn = len(self.findings) - n_err
+        lines.append(f"{n_err} error(s), {n_warn} warning(s), "
+                     f"{len(self.waived)} waived")
+        return "\n".join(lines)
+
+
+# ------------------------------ jaxpr walking --------------------------------
+
+def _child_jaxprs(eqn) -> Iterator[jax_core.Jaxpr]:
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (list, tuple)) else (v,)
+        for x in vals:
+            if isinstance(x, jax_core.ClosedJaxpr):
+                yield x.jaxpr
+            elif isinstance(x, jax_core.Jaxpr):
+                yield x
+
+
+def walk_eqns(jaxpr, skip_prims=("pallas_call",)
+              ) -> Iterator[Tuple[jax_core.Jaxpr, "jax_core.JaxprEqn"]]:
+    """Yield ``(owning_jaxpr, eqn)`` for every equation, recursing into the
+    sub-jaxprs of higher-order primitives (except ``skip_prims``). The
+    owning jaxpr is yielded so rules can test whether an operand is one of
+    its invars (= a long-lived buffer threaded in from outside)."""
+    if isinstance(jaxpr, jax_core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield jaxpr, eqn
+        if eqn.primitive.name in skip_prims:
+            continue
+        for child in _child_jaxprs(eqn):
+            yield from walk_eqns(child, skip_prims=skip_prims)
+
+
+# Ops through which a buffer keeps its identity for lint purposes: a write
+# into transpose(cache) is still a write into the cache, and a constraint
+# on convert(update) still pins the update.
+TRANSPARENT_PRIMS = frozenset({
+    "transpose", "reshape", "convert_element_type", "squeeze",
+    "broadcast_in_dim", "copy", "sharding_constraint",
+})
+
+
+def derives_from_invar(var, jaxpr, depth: int = 3) -> bool:
+    """True if ``var`` is an invar of ``jaxpr``, or reaches one through at
+    most ``depth`` transparent ops (see TRANSPARENT_PRIMS)."""
+    if isinstance(var, jax_core.Literal):
+        return False
+    invars = set(map(id, jaxpr.invars))
+    frontier = [var]
+    producers = {}
+    for eqn in jaxpr.eqns:
+        for ov in eqn.outvars:
+            producers[id(ov)] = eqn
+    for _ in range(depth + 1):
+        nxt = []
+        for v in frontier:
+            if id(v) in invars:
+                return True
+            eqn = producers.get(id(v))
+            if eqn is not None and eqn.primitive.name in TRANSPARENT_PRIMS:
+                nxt.extend(iv for iv in eqn.invars
+                           if not isinstance(iv, jax_core.Literal))
+        frontier = nxt
+    return False
+
+
+def constrained_downstream(var, jaxpr, depth: int = 4) -> bool:
+    """True if ``var`` (an eqn output) flows into a ``sharding_constraint``
+    within ``depth`` hops of transparent ops inside the same jaxpr — the
+    definition of a "pinned" cache write."""
+    consumers = {}
+    for eqn in jaxpr.eqns:
+        for iv in eqn.invars:
+            if not isinstance(iv, jax_core.Literal):
+                consumers.setdefault(id(iv), []).append(eqn)
+    frontier = [var]
+    for _ in range(depth):
+        nxt = []
+        for v in frontier:
+            for eqn in consumers.get(id(v), ()):
+                if eqn.primitive.name == "sharding_constraint":
+                    return True
+                if eqn.primitive.name in TRANSPARENT_PRIMS:
+                    nxt.extend(eqn.outvars)
+        if not nxt:
+            return False
+        frontier = nxt
+    return False
+
+
+def eqn_site(eqn) -> str:
+    """Best-effort ``file:line`` for an eqn, from its source_info."""
+    try:
+        from jax._src import source_info_util as siu
+        try:
+            frame = siu.user_frame(eqn.source_info)
+        except Exception:
+            frame = siu.user_frame(eqn.source_info.traceback)
+        if frame is not None:
+            return f"{frame.file_name.rsplit('/', 1)[-1]}:{frame.start_line}"
+    except Exception:
+        pass
+    return "?"

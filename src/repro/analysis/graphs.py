@@ -1,0 +1,136 @@
+"""The real entry-point graphs every analysis pass lints.
+
+``build_bundle()`` stands up the toy config exactly the way production
+does — ``ServingEngine`` (optionally on a `(data, model)` mesh) for the
+admit/decode graphs, ``make_train_step`` for the training graph — and
+caches one jaxpr / lowering / compilation per entry point so six passes
+don't pay six traces. Passes never invent their own call signatures: the
+serving args come from ``ServingEngine.entry_points()`` (built by the same
+code paths a live call uses), so a refactor that changes the contract
+changes what gets linted automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_elastic
+from repro.core.policy import as_spec_policy, ragged_bucket, solve_budget
+from repro.models import model_init, router_init
+from repro.training import ServingEngine
+from repro.training.serve import EntryPoint
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def _f32(cfg):
+    """Analysis runs the smoke config in f32 (CPU-exact, and the dtype
+    lint's no-bf16-upcast baseline)."""
+    new = dataclasses.replace(cfg, dtype="float32")
+    if cfg.encoder is not None:
+        new = dataclasses.replace(
+            new, encoder=dataclasses.replace(cfg.encoder, dtype="float32"))
+    return new
+
+
+@dataclasses.dataclass
+class GraphBundle:
+    """Entry points + shared trace/lower/compile caches."""
+    cfg: object
+    ecfg: object
+    params: object
+    rp: object
+    engine: ServingEngine
+    mesh: object = None
+    seq_len: int = 32
+    train_batch: int = 4
+    _entries: Optional[dict] = None
+    _jaxprs: dict = dataclasses.field(default_factory=dict)
+    _lowered: dict = dataclasses.field(default_factory=dict)
+    _compiled: dict = dataclasses.field(default_factory=dict)
+
+    # --------------------------- entry points --------------------------------
+
+    def entries(self) -> dict:
+        """{name: EntryPoint} over every graph the stack compiles: the
+        serving admit/decode pair plus the train step."""
+        if self._entries is None:
+            self._entries = dict(self.engine.entry_points())
+            self._entries["train"] = self._train_entry()
+        return self._entries
+
+    def fresh_entry(self, name: str) -> EntryPoint:
+        """Entry point with the engine's *current* buffers — the cached
+        ``entries()`` args go stale (deleted) once any pass actually steps
+        the engine, because the serving jits donate their caches."""
+        if name == "train":
+            return self.entries()["train"]
+        return self.engine.entry_points()[name]
+
+    def _train_entry(self) -> EntryPoint:
+        spec, _ = as_spec_policy(self.ecfg)
+        step_fn = jax.jit(
+            make_train_step(self.cfg, self.ecfg, lr=1e-3, mesh=self.mesh,
+                            chunked=self.cfg.vocab_size > 0),
+            static_argnames=("bucket",), donate_argnums=(0,))
+        state = init_train_state(self.rp)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(
+            0, max(2, self.cfg.vocab_size),
+            size=(self.train_batch, self.seq_len)), jnp.int32)}
+        pol = solve_budget(self.cfg, spec, 0.5)
+        bucket = (ragged_bucket(pol, self.seq_len)
+                  if spec.routing_impl == "ragged" else None)
+        return EntryPoint(step_fn, (state, self.params, batch, pol),
+                          {"bucket": bucket}, donated=(0,))
+
+    # ------------------------ shared trace caches ----------------------------
+
+    def jaxpr(self, name: str):
+        if name not in self._jaxprs:
+            ep = self.entries()[name]
+            fn = partial(ep.fn, **ep.static) if ep.static else ep.fn
+            with self._ctx():
+                self._jaxprs[name] = jax.make_jaxpr(fn)(*ep.args)
+        return self._jaxprs[name]
+
+    def lowered(self, name: str):
+        if name not in self._lowered:
+            ep = self.entries()[name]
+            with self._ctx():
+                self._lowered[name] = ep.fn.lower(*ep.args, **ep.static)
+        return self._lowered[name]
+
+    def compiled(self, name: str):
+        if name not in self._compiled:
+            self._compiled[name] = self.lowered(name).compile()
+        return self._compiled[name]
+
+    def _ctx(self):
+        from contextlib import nullcontext
+        return self.mesh if self.mesh is not None else nullcontext()
+
+
+def build_bundle(mesh_shape=None, arch: str = "toy-lm", mode: str = "infer",
+                 max_seq: int = 48, seq_len: int = 32) -> GraphBundle:
+    """Stand up the toy-config serving + training graphs (optionally on a
+    `(data, model)` mesh — works on one device with shape (1, 1), and on
+    the CI 8-fake-device job with (2, 4))."""
+    cfg = _f32(get_config(arch, "smoke"))
+    ecfg = get_elastic(arch, cfg)
+    key = jax.random.PRNGKey(0)
+    params = model_init(key, cfg, ecfg)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+    mesh = None
+    if mesh_shape is not None:
+        from repro.runtime.elastic import make_mesh
+        mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
+    batch = max(2, mesh_shape[0]) if mesh_shape else 2
+    engine = ServingEngine(params, rp, cfg, ecfg, mode=mode,
+                           batch_size=batch, max_seq=max_seq, mesh=mesh)
+    return GraphBundle(cfg, ecfg, params, rp, engine, mesh=mesh,
+                       seq_len=seq_len)

@@ -1,0 +1,60 @@
+"""HOST — device<->host synchronization hazards on the serving hot path.
+
+* ``HOST-CALLBACK``: a host-callback primitive (``pure_callback``,
+  ``io_callback``, ``debug_callback``, legacy ``outside_call``) inside a
+  jitted serving/training graph. Each firing stalls the dispatch queue on
+  a device->host->device round trip — debug prints left in the decode
+  step are the classic offender.
+* ``HOST-OPERAND``: a ``numpy.ndarray`` leaf in an entry point's example
+  args. jit re-uploads host-resident operands on every call; serving state
+  arrays must live on device between steps (the engine keeps scheduler
+  state in numpy deliberately, but hands jnp views to the jits —
+  ``entry_points()`` reflects exactly what a live call passes).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.analysis.framework import Finding, eqn_site, walk_eqns
+
+PASS_NAME = "host_sync"
+
+_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "outside_call",
+    "host_callback_call",
+})
+
+
+def _callbacks(bundle, name: str) -> List[Finding]:
+    finds = []
+    for _, eqn in walk_eqns(bundle.jaxpr(name)):
+        if eqn.primitive.name in _CALLBACK_PRIMS:
+            cb = eqn.params.get("callback", "")
+            finds.append(Finding(
+                "HOST-CALLBACK", f"serve.{name}",
+                f"{eqn.primitive.name} at {eqn_site(eqn)} stalls every "
+                f"call on a host round trip{f' ({cb})' if cb else ''}"))
+    return finds
+
+
+def _host_operands(name: str, ep) -> List[Finding]:
+    finds = []
+    for i, leaf in enumerate(jax.tree.leaves(ep.args)):
+        if isinstance(leaf, np.ndarray):
+            finds.append(Finding(
+                "HOST-OPERAND", f"serve.{name}",
+                f"arg leaf {i} ({leaf.dtype}{list(leaf.shape)}) is a host "
+                "numpy array — re-uploaded on every call; keep hot-path "
+                "state on device"))
+    return finds
+
+
+def run(bundle) -> List[Finding]:
+    finds: List[Finding] = []
+    for name, ep in bundle.entries().items():
+        finds += _callbacks(bundle, name)
+        finds += _host_operands(name, ep)
+    return finds

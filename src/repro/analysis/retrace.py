@@ -1,0 +1,148 @@
+"""RETRACE — prove the serving/training graphs can't recompile per call.
+
+The serving SLO (ROADMAP: "budgets, slots, temperatures, seeds never
+recompile") is a *tracing* property, so it is checkable statically:
+
+* ``RETRACE-VALUE-DEP``: lower each entry point twice with the same
+  shapes/dtypes but different *values* (every numeric leaf perturbed) and
+  diff the normalized StableHLO. Any difference means a Python-visible
+  value leaked into the trace (a host-side ``int(x)``/``if x:`` or a
+  constant baked from a non-tracer leaf) — the classic silent-recompile
+  source.
+* ``RETRACE-WEAK-TYPE``: example args carrying ``weak_type=True`` avals
+  (bare Python scalars coerced by ``jnp.asarray``). A weak-typed operand
+  retraces the first time it meets a strongly-typed one.
+* ``RETRACE-PY-SCALAR``: raw Python ``int``/``float``/``bool`` leaves in
+  traced argument trees — each distinct value becomes a fresh weak-typed
+  constant signature.
+* ``RETRACE-STATIC-UNHASHABLE``: static (compile-time) kwargs that aren't
+  hashable — jit would raise at call time, but only on the path that
+  passes them.
+* ``RETRACE-COMPILE-COUNT``: a live mini-workload (two budgets, mixed
+  temperatures/seeds/slots) against the bundle engine, asserting
+  ``compile_counts()`` lands exactly at {prefill: 1, decode: 1}.
+"""
+from __future__ import annotations
+
+import re
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.framework import Finding
+
+PASS_NAME = "retrace"
+
+_LOC_RE = re.compile(r"\s*loc\([^)]*\)")
+_LOCDEF_RE = re.compile(r"^#loc.*$", re.M)
+
+
+def _normalize(hlo_text: str) -> str:
+    """StableHLO text minus source locations (which legitimately differ
+    between two traces of the same function)."""
+    return _LOCDEF_RE.sub("", _LOC_RE.sub("", hlo_text))
+
+
+def _perturb(leaf):
+    """Same shape/dtype/weak_type, different value."""
+    if isinstance(leaf, (jax.Array, np.ndarray)) \
+            and jnp.issubdtype(jnp.asarray(leaf).dtype, np.bool_):
+        return leaf
+    if isinstance(leaf, jax.Array):
+        one = jnp.ones((), leaf.dtype)
+        return (leaf + one).astype(leaf.dtype)
+    if isinstance(leaf, np.ndarray):
+        return (leaf + np.ones((), leaf.dtype)).astype(leaf.dtype)
+    if isinstance(leaf, (int, float)) and not isinstance(leaf, bool):
+        return leaf + 1       # a static/baked scalar shows up as a new const
+    return leaf
+
+
+def _diff_head(a: str, b: str, n: int = 6) -> str:
+    la, lb = a.splitlines(), b.splitlines()
+    out = []
+    for i, (x, y) in enumerate(zip(la, lb)):
+        if x != y:
+            out.append(f"line {i}:\n  - {x.strip()}\n  + {y.strip()}")
+            if len(out) >= n:
+                break
+    if len(la) != len(lb):
+        out.append(f"line counts differ: {len(la)} vs {len(lb)}")
+    return "\n".join(out)
+
+
+def _lint_args(name: str, ep) -> List[Finding]:
+    finds = []
+    leaves = jax.tree.leaves(ep.args)
+    for i, leaf in enumerate(leaves):
+        if isinstance(leaf, jax.Array) and leaf.weak_type:
+            finds.append(Finding(
+                "RETRACE-WEAK-TYPE", f"serve.{name}",
+                f"arg leaf {i} ({leaf.dtype}{list(leaf.shape)}) is "
+                "weak-typed; wrap with an explicit dtype "
+                "(jnp.float32(x), not jnp.asarray(x)) or the first mixed-"
+                "dtype op retraces"))
+        elif isinstance(leaf, (bool, int, float)):
+            finds.append(Finding(
+                "RETRACE-PY-SCALAR", f"serve.{name}",
+                f"arg leaf {i} is a Python {type(leaf).__name__}; every "
+                "distinct value is a distinct weak-typed jit signature"))
+    for k, v in ep.static.items():
+        try:
+            hash(v)
+        except TypeError:
+            finds.append(Finding(
+                "RETRACE-STATIC-UNHASHABLE", f"serve.{name}",
+                f"static kwarg {k!r} ({type(v).__name__}) is unhashable; "
+                "jit will reject the call"))
+    return finds
+
+
+def _value_dep(bundle, name: str) -> List[Finding]:
+    ep = bundle.entries()[name]
+    base = _normalize(bundle.lowered(name).as_text())
+    args2 = jax.tree.map(_perturb, ep.args)
+    with bundle._ctx():
+        other = _normalize(ep.fn.lower(*args2, **ep.static).as_text())
+    if base != other:
+        return [Finding(
+            "RETRACE-VALUE-DEP", f"serve.{name}",
+            "lowering changed when only argument VALUES changed — a value "
+            "is baked into the graph and will retrace per call",
+            detail=_diff_head(base, other))]
+    return []
+
+
+def _workload(bundle) -> List[Finding]:
+    """Live retrace probe: mixed budgets/temps/seeds through the real
+    scheduler must leave exactly one compile per entry point."""
+    from repro.training.serve import GenRequest
+    eng = bundle.engine
+    before = dict(eng.compile_counts())
+    prompt = np.arange(1, 9, dtype=np.int32)
+    for i, (budget, temp) in enumerate([(0.5, 0.0), (0.75, 0.8)]):
+        eng.submit(GenRequest(prompt, max_new_tokens=3, budget=budget,
+                              temperature=temp, top_k=2 * i, seed=7 * i))
+    for _ in range(24):
+        if not eng.has_work:
+            break
+        eng.step()
+    after = eng.compile_counts()
+    if after != {"prefill": 1, "decode": 1}:
+        return [Finding(
+            "RETRACE-COMPILE-COUNT", "serve.engine",
+            f"compile_counts {before} -> {after} over a 2-budget mixed-"
+            "sampling workload; expected exactly {'prefill': 1, "
+            "'decode': 1}")]
+    return []
+
+
+def run(bundle) -> List[Finding]:
+    finds: List[Finding] = []
+    for name, ep in bundle.entries().items():
+        finds += _lint_args(name, ep)
+        finds += _value_dep(bundle, name)
+    finds += _workload(bundle)
+    return finds

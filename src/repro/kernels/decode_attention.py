@@ -34,6 +34,25 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
+def analysis_example():
+    """Representative ring-cache decode call for the static kernel
+    verifier: partially-filled ring (pos == -1 holes), per-slot offsets
+    riding scalar prefetch, GQA 2:1."""
+    import numpy as np
+    B, L, H, K, Dh = 2, 256, 4, 2, 128
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, K, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, K, Dh)), jnp.float32)
+    pos = np.full((B, L), -1, np.int32)
+    pos[0, :40] = np.arange(40)
+    pos[1, :200] = np.arange(200)
+    t = jnp.asarray([39, 199], jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, size=(B, L)), bool)
+    return (decode_attention, (q, k, v, jnp.asarray(pos), t),
+            dict(kv_valid=valid, interpret=True))
+
+
 def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, o_ref,
             m_sc, l_sc, acc_sc, *, window: int, sm_scale: float, n_kb: int):
     ib = pl.program_id(0)

@@ -39,6 +39,25 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
+def analysis_example():
+    """Representative call for the static kernel verifier
+    (``repro.analysis.pallas_lint``): production-shaped tiles (Dh = 128,
+    MXU-aligned 128-blocks), a ragged per-row count, GQA 2:1, both masks.
+    Returns ``(fn, args, kwargs)``; the verifier intercepts the inner
+    ``pallas_call`` and statically evaluates its grid x BlockSpec
+    index_maps — the call itself never executes."""
+    import numpy as np
+    B, Sq, H, K, Dh = 2, 256, 4, 2, 128
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sq, K, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sq, K, Dh)), jnp.float32)
+    valid = jnp.asarray(rng.integers(0, 2, size=(B, Sq)), bool)
+    cnt = jnp.asarray([Sq, 160], jnp.int32)
+    return (flash_attention, (q, k, v),
+            dict(causal=True, kv_valid=valid, kv_count=cnt, interpret=True))
+
+
 def _kernel(cnt_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc,
             acc_sc, *, causal: bool, window: int, block_q: int, block_k: int,
             sm_scale: float, n_kb: int, sk: int):

@@ -40,6 +40,43 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
+def analysis_example():
+    """Representative ``fused_mlp`` call for the static kernel verifier
+    (see flash_attention.analysis_example): bucket-buffer layout, ragged
+    per-row counts, gated act."""
+    import numpy as np
+    B, T, D, F = 2, 256, 128, 512
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(B, T, D)), jnp.float32)
+    wi = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(F, D)), jnp.float32)
+    tw = jnp.asarray(rng.normal(size=(B, T)), jnp.float32)
+    cnt = jnp.asarray([T, 100], jnp.int32)
+    return (fused_mlp, (x, wi, wo, wg, tw),
+            dict(valid_count=cnt, interpret=True))
+
+
+def analysis_example_routed():
+    """Representative ``fused_mlp_routed`` call: full-stream x, plan
+    indices riding scalar prefetch (the index-prefetch gather the verifier
+    proves in-bounds by evaluating the BlockSpec index_map over the real
+    prefetch operand)."""
+    import numpy as np
+    B, S, Kb, D, F = 2, 128, 32, 128, 512
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    idx = jnp.asarray(
+        np.stack([rng.permutation(S)[:Kb] for _ in range(B)]), jnp.int32)
+    wi = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(F, D)), jnp.float32)
+    tw = jnp.asarray(rng.normal(size=(B, Kb)), jnp.float32)
+    cnt = jnp.asarray([Kb, 20], jnp.int32)
+    return (fused_mlp_routed, (x, idx, wi, wo, wg, tw),
+            dict(valid_count=cnt, interpret=True))
+
+
 def _ffn_block(x, wi_ref, wg_ref, *, act: str):
     hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
                      preferred_element_type=jnp.float32)

@@ -30,6 +30,22 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
+def analysis_example():
+    """Representative ``moe_gmm`` call for the static kernel verifier:
+    batched dispatch buffers, per-(row, expert) ragged occupancy."""
+    import numpy as np
+    B, E, C, D, Fe = 2, 2, 128, 128, 256
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(B, E, C, D)), jnp.float32)
+    wi = jnp.asarray(rng.normal(size=(E, D, Fe)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, D, Fe)), jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(E, Fe, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(B, E, C)), jnp.float32)
+    cnt = jnp.asarray([[C, 40], [96, 0]], jnp.int32)
+    return (moe_gmm, (x, wi, wo, wg, w),
+            dict(group_counts=cnt, interpret=True))
+
+
 def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
             act: str, n_fb: int, block_c: int):
     ib = pl.program_id(0)

@@ -20,11 +20,11 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
                 "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
 
-# one HLO instruction:  %name = <shape(s)> opcode(...)
+# one HLO instruction:  %name = <shape(s)> opcode(...operands/metadata...)
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
     r"((?:\(?[a-z0-9]+\[[0-9,]*\][^\s\)]*\)?,?\s*)+)\s*"
-    r"([a-z][a-z0-9\-]*)\(", re.M)
+    r"([a-z][a-z0-9\-]*)\((.*)$", re.M)
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
@@ -42,18 +42,73 @@ def shape_bytes(type_str: str) -> int:
 
 
 def profile_text(hlo: str) -> dict:
-    """opcode -> {count, out_bytes}; out_bytes = output shape bytes (a good
-    HBM-write proxy; reads show up as some producer's out_bytes)."""
-    agg = defaultdict(lambda: {"count": 0, "bytes": 0})
+    """opcode -> {count, bytes, moved}; ``bytes`` = output shape bytes (a
+    good HBM-write proxy; reads show up as some producer's out_bytes),
+    ``moved`` = output + operand bytes (the bytes-touched roofline proxy
+    the analysis passes and §Perf hillclimbs rank ops by — compiled HLO
+    annotates every operand with its type, so reads are attributable
+    per-consumer, not just per-producer)."""
+    agg = defaultdict(lambda: {"count": 0, "bytes": 0, "moved": 0})
     for m in _INSTR_RE.finditer(hlo):
-        shp, op = m.group(1), m.group(2)
+        shp, op, tail = m.group(1), m.group(2), m.group(3)
         if op in ("parameter", "constant", "get-tuple-element", "tuple",
                   "bitcast"):
             continue
         rec = agg[op]
+        out = shape_bytes(shp)
         rec["count"] += 1
-        rec["bytes"] += shape_bytes(shp)
+        rec["bytes"] += out
+        # operand reads: every type annotation in the operand list (the
+        # metadata tail carries no shape-typed tokens; unknown "dtypes"
+        # like sharding device lists are skipped by shape_bytes)
+        rec["moved"] += out + shape_bytes(tail.split(", metadata=")[0])
     return dict(agg)
+
+
+def bytes_moved(hlo: str) -> int:
+    """Total bytes touched (reads + writes) across the module — the
+    memory-bound cost the FLOPs metric misses. Decode-step regressions
+    show up here first (e.g. an unpinned cache write that re-materializes
+    the whole slot array doubles this without changing flops)."""
+    return sum(v["moved"] for v in profile_text(hlo).values())
+
+
+# -------------------- input/output aliasing (donation) -----------------------
+
+_ALIAS_SEG_RE = re.compile(r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
+_ALIAS_PAIR_RE = re.compile(r"\{([0-9, ]*)\}:\s*\((\d+)")
+
+
+def input_output_alias(hlo: str) -> dict:
+    """Parse the compiled module's ``input_output_alias`` header into
+    {param_index: output_tuple_index}. Empty when nothing is donated —
+    which for a serving decode step means every call COPIES the KV cache;
+    the analysis ``donation`` pass gates on this."""
+    m = _ALIAS_SEG_RE.search(hlo)
+    if not m:
+        return {}
+    out = {}
+    for pair in _ALIAS_PAIR_RE.finditer(m.group(1)):
+        out_idx = tuple(int(x) for x in pair.group(1).split(",") if x.strip())
+        out[int(pair.group(2))] = out_idx
+    return out
+
+
+def entry_param_types(hlo: str) -> list:
+    """Entry parameter type strings (e.g. ``f32[2,32,4,32]``) in parameter
+    order, from ``entry_computation_layout`` — the positional key for
+    matching donated params back to the caller's buffers."""
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", hlo)
+    if not m:
+        return []
+    return [f"{dt}[{dims}]" for dt, dims in _SHAPE_RE.findall(m.group(1))]
+
+
+def donated_param_types(hlo: str) -> list:
+    """Type strings of the donated (input/output-aliased) entry params."""
+    types = entry_param_types(hlo)
+    return [types[i] for i in sorted(input_output_alias(hlo))
+            if i < len(types)]
 
 
 def biggest_tensors(hlo: str, n: int = 15):

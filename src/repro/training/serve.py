@@ -40,7 +40,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from contextlib import nullcontext
-from typing import List, Optional
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,16 @@ from repro.core.policy import (ElasticPolicy, as_spec_policy, ragged_bucket,
                                solve_budget)
 from repro.models import cache_init, decode_step, prefill_into_slot
 from repro.runtime.scheduler import RequestHandle, SlotScheduler
+
+
+class EntryPoint(NamedTuple):
+    """One jitted serving graph + representative traced args, as handed to
+    ``repro.analysis`` (retrace/sharding/host-sync/donation passes lower
+    and inspect exactly what the engine runs)."""
+    fn: object           # the jitted callable
+    args: tuple          # traced example args (shapes/dtypes of a live call)
+    static: dict         # static kwargs (e.g. the ragged bucket)
+    donated: tuple = ()  # argnums whose buffers each call consumes
 
 
 @dataclasses.dataclass
@@ -239,20 +249,30 @@ class ServingEngine:
         # carry — without this the compiler picks its own output layout and
         # the second admit/decode call recompiles against it, breaking the
         # {prefill: 1, decode: 1} contract.
+        # Donation: each call consumes the slot-state buffers it replaces —
+        # admit donates (caches, live_policy), decode donates (tok, caches)
+        # — so XLA aliases the ring caches in place instead of copying the
+        # whole slot array every step (the analysis `donation` pass gates
+        # on these aliases). The per-request policy ROW (admit arg 5) is
+        # NOT donated: solved rows are cached in `_policy_cache` and reused
+        # across admissions.
         admit_raw = _make_admit_fn(self.cfg, self.spec, self.mode,
                                    self.max_seq)
         step_raw = _make_step_fn(self.cfg, self.spec, self.mode)
         if mesh is None:
-            self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",))
-            self._step_fn = jax.jit(step_raw)
+            self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",),
+                                     donate_argnums=(3, 6))
+            self._step_fn = jax.jit(step_raw, donate_argnums=(2, 3))
         else:
             rsh = SH.replicated(mesh)
             cache_sh = SH.cache_shardings(self._caches, self.cfg, mesh)
             pol_sh = (jax.tree.map(lambda _: rsh, self._live_policy)
                       if self._live_policy is not None else None)
             self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",),
+                                     donate_argnums=(3, 6),
                                      out_shardings=(rsh, cache_sh, pol_sh))
-            self._step_fn = jax.jit(step_raw, out_shardings=(rsh, cache_sh))
+            self._step_fn = jax.jit(step_raw, donate_argnums=(2, 3),
+                                    out_shardings=(rsh, cache_sh))
 
     def _mesh_ctx(self):
         """Trace/execute under the mesh so `active_mesh()`-gated sharding
@@ -297,6 +317,37 @@ class ServingEngine:
         at most routing.RAGGED_N_BUCKETS per length)."""
         return {"prefill": self._admit_fn._cache_size(),
                 "decode": self._step_fn._cache_size()}
+
+    def entry_points(self, plen: int = 8,
+                     budget: Optional[float] = 0.5) -> dict:
+        """The two jitted serving graphs with example args shaped exactly
+        like a live admission/decode call — the contract surface
+        ``repro.analysis`` lints (a pass that lowers these sees the same
+        jaxpr/HLO a production call compiles). Args are built by the same
+        code paths ``_admit_one``/``step`` use, so the lint can never
+        drift from the real call signature."""
+        prompt = np.arange(1, plen + 1, dtype=np.int32) \
+            % max(2, self.cfg.vocab_size)
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        pol_row = self._policy_for(budget if self._use_policy else None)
+        bucket = None
+        if (self._use_policy and self.mode == "train"
+                and self.spec.routing_impl == "ragged"):
+            bucket = ragged_bucket(pol_row, plen)
+        admit = EntryPoint(
+            self._admit_fn,
+            (self.params, self.rp, batch, self._caches, jnp.int32(0),
+             pol_row, self._live_policy, jnp.float32(0.0), jnp.int32(0),
+             jnp.uint32(0), jnp.int32(plen)),
+            {"bucket": bucket}, donated=(3, 6))
+        step = EntryPoint(
+            self._step_fn,
+            (self.params, self.rp, self._tok, self._caches,
+             jnp.asarray(self._t), self._live_policy,
+             jnp.asarray(self._active), jnp.asarray(self._temp),
+             jnp.asarray(self._topk), jnp.asarray(self._seeds)),
+            {}, donated=(2, 3))
+        return {"admit": admit, "decode": step}
 
     # ------------------------- request lifecycle -----------------------------
 

@@ -66,3 +66,36 @@ def test_vlm_serving_with_image_context(key):
             for _ in range(2)]
     outs = engine.generate(reqs, extra_inputs={"image_embeds": img})
     assert all(len(o) == 4 for o in outs)
+
+
+def test_entry_points_donate_and_stay_compile_flat(key):
+    """The jitted admit/decode graphs must (a) alias every declared-donated
+    buffer in their lowerings, (b) actually consume donated inputs at run
+    time, and (c) keep compile_counts at {prefill: 1, decode: 1} across a
+    mixed-budget/-temperature workload (donation must not retrace)."""
+    cfg, ecfg, params, rp = _setup(key)
+    engine = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                           batch_size=2, max_seq=32)
+    eps = engine.entry_points()
+    for name, ep in eps.items():
+        n_donated = sum(len(jax.tree.leaves(ep.args[i]))
+                        for i in ep.donated)
+        txt = ep.fn.lower(*ep.args, **ep.static).as_text()
+        assert txt.count("tf.aliasing_output") == n_donated, \
+            (name, n_donated, txt.count("tf.aliasing_output"))
+    # run-time donation: a sacrificial copy of the decode args dies
+    ep = eps["decode"]
+    copies = tuple(jax.tree.map(jnp.copy, a) for a in ep.args)
+    jax.block_until_ready(ep.fn(*copies, **ep.static))
+    for i in ep.donated:
+        assert all(leaf.is_deleted()
+                   for leaf in jax.tree.leaves(copies[i])), i
+    # compile flatness over budgets/temps/seeds (engine state is fresh —
+    # the copies above were sacrificial, not the engine's live caches)
+    rng = np.random.default_rng(3)
+    reqs = [GenRequest(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32), 4,
+                       budget=b, temperature=t, top_k=k, seed=s)
+            for b, t, k, s in [(0.4, 0.0, 0, 0), (1.0, 0.7, 3, 9)]]
+    outs = engine.generate(reqs)
+    assert all(len(o) == 4 for o in outs)
+    assert engine.compile_counts() == {"prefill": 1, "decode": 1}

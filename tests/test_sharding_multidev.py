@@ -140,6 +140,16 @@ for h, o in zip(handles, oracle):     # token-for-token vs single device
     np.testing.assert_array_equal(np.asarray(h.output), o)
 print("SERVE-PARITY-OK")
 
+# ---- donation survives SPMD: the sharded caches alias through the jits ----
+from repro.launch.hloprof import input_output_alias
+dec = eng.entry_points()["decode"]
+n_donated = sum(len(jax.tree.leaves(dec.args[i])) for i in dec.donated)
+with mesh:
+    alias = input_output_alias(
+        dec.fn.lower(*dec.args, **dec.static).compile().as_text())
+assert len(alias) >= n_donated, (alias, n_donated)
+print("SPMD-DONATE-OK")
+
 # ---- live re-mesh mid-flight: 2x4 -> 1x4, identical greedy tokens ----
 assert (1, 4) in valid_mesh_shapes(4, 4)
 eng2 = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=4,
@@ -245,6 +255,6 @@ def test_sharded_serving_parity_and_live_remesh(tmp_path):
     RoutingPlan stays one-sort-per-block under the mesh; and the Pallas
     kernel entry points lower per-shard under shard_map."""
     out = _run_spmd_script(_SERVE_SCRIPT)
-    for tag in ("SERVE-PARITY-OK", "REMESH-OK", "ONE-SORT-OK",
-                "KERNEL-SHARD-OK"):
+    for tag in ("SERVE-PARITY-OK", "SPMD-DONATE-OK", "REMESH-OK",
+                "ONE-SORT-OK", "KERNEL-SHARD-OK"):
         assert tag in out, out
