@@ -45,6 +45,7 @@ class GraphBundle:
     params: object
     rp: object
     engine: ServingEngine
+    paged_engine: Optional[ServingEngine] = None
     mesh: object = None
     seq_len: int = 32
     train_batch: int = 4
@@ -57,9 +58,13 @@ class GraphBundle:
 
     def entries(self) -> dict:
         """{name: EntryPoint} over every graph the stack compiles: the
-        serving admit/decode pair plus the train step."""
+        serving admit/decode pair (ring AND paged KV layouts) plus the
+        train step."""
         if self._entries is None:
             self._entries = dict(self.engine.entry_points())
+            if self.paged_engine is not None:
+                for k, ep in self.paged_engine.entry_points().items():
+                    self._entries[f"paged_{k}"] = ep
             self._entries["train"] = self._train_entry()
         return self._entries
 
@@ -69,6 +74,8 @@ class GraphBundle:
         the engine, because the serving jits donate their caches."""
         if name == "train":
             return self.entries()["train"]
+        if name.startswith("paged_"):
+            return self.paged_engine.entry_points()[name[len("paged_"):]]
         return self.engine.entry_points()[name]
 
     def _train_entry(self) -> EntryPoint:
@@ -132,5 +139,19 @@ def build_bundle(mesh_shape=None, arch: str = "toy-lm", mode: str = "infer",
     batch = max(2, mesh_shape[0]) if mesh_shape else 2
     engine = ServingEngine(params, rp, cfg, ecfg, mode=mode,
                            batch_size=batch, max_seq=max_seq, mesh=mesh)
-    return GraphBundle(cfg, ecfg, params, rp, engine, mesh=mesh,
-                       seq_len=seq_len)
+    # the paged-KV engine lints alongside the ring one: its chunked-prefill
+    # admit and paged decode are separate compiled graphs with their own
+    # donation/pin/retrace contracts. Paged mode requires a dense MLP, so
+    # it gets its own router set under a no-experts elastic config.
+    paged_engine = None
+    if all(k == "attn" for k in cfg.layer_kinds) and cfg.moe is None \
+            and cfg.encoder is None:
+        pecfg = dataclasses.replace(ecfg, mlp_n_experts=0, mlp_expert_topk=0)
+        pparams = model_init(key, cfg, pecfg)
+        prp = router_init(jax.random.fold_in(key, 1), cfg, pecfg)
+        paged_engine = ServingEngine(pparams, prp, cfg, pecfg, mode=mode,
+                                     batch_size=batch, max_seq=max_seq,
+                                     mesh=mesh, kv_layout="paged",
+                                     page_size=8)
+    return GraphBundle(cfg, ecfg, params, rp, engine,
+                       paged_engine=paged_engine, mesh=mesh, seq_len=seq_len)

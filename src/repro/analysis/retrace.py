@@ -130,13 +130,33 @@ def _workload(bundle) -> List[Finding]:
             break
         eng.step()
     after = eng.compile_counts()
+    finds = []
     if after != {"prefill": 1, "decode": 1}:
-        return [Finding(
+        finds.append(Finding(
             "RETRACE-COMPILE-COUNT", "serve.engine",
             f"compile_counts {before} -> {after} over a 2-budget mixed-"
             "sampling workload; expected exactly {'prefill': 1, "
-            "'decode': 1}")]
-    return []
+            "'decode': 1}"))
+    # the paged engine's contract is stronger: chunked prefill keeps ONE
+    # compile across DIFFERENT prompt lengths (the ring engine is allowed
+    # one compile per length; the paged one is not)
+    peng = getattr(bundle, "paged_engine", None)
+    if peng is not None:
+        for i, plen in enumerate((3, 8, 13, 21)):
+            peng.submit(GenRequest(np.arange(1, plen + 1, dtype=np.int32),
+                                   max_new_tokens=2, budget=0.5 + 0.1 * i))
+        for _ in range(48):
+            if not peng.has_work:
+                break
+            peng.step()
+        pafter = peng.compile_counts()
+        if pafter != {"prefill": 1, "decode": 1}:
+            finds.append(Finding(
+                "RETRACE-COMPILE-COUNT", "serve.paged_engine",
+                f"paged compile_counts {pafter} over 4 distinct prompt "
+                "lengths; chunked prefill must keep exactly {'prefill': 1, "
+                "'decode': 1}"))
+    return finds
 
 
 def run(bundle) -> List[Finding]:

@@ -1,9 +1,10 @@
 from repro.kernels.ops import (decode_attention, flash_attention, fused_mlp,
-                               fused_mlp_routed, moe_gmm, resolve_backend)
+                               fused_mlp_routed, moe_gmm,
+                               paged_decode_attention, resolve_backend)
 
 __all__ = ["decode_attention", "flash_attention", "fused_mlp",
-           "fused_mlp_routed", "moe_gmm", "resolve_backend",
-           "analyzable_kernels"]
+           "fused_mlp_routed", "moe_gmm", "paged_decode_attention",
+           "resolve_backend", "analyzable_kernels"]
 
 
 def analyzable_kernels() -> dict:
@@ -18,10 +19,12 @@ def analyzable_kernels() -> dict:
     _fa = importlib.import_module("repro.kernels.flash_attention")
     _fm = importlib.import_module("repro.kernels.fused_mlp")
     _mg = importlib.import_module("repro.kernels.moe_gmm")
+    _pd = importlib.import_module("repro.kernels.paged_decode_attention")
     return {
         "flash_attention": _fa.analysis_example,
         "fused_mlp": _fm.analysis_example,
         "fused_mlp_routed": _fm.analysis_example_routed,
         "moe_gmm": _mg.analysis_example,
         "decode_attention": _da.analysis_example,
+        "paged_decode_attention": _pd.analysis_example,
     }

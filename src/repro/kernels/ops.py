@@ -37,6 +37,7 @@ import repro.kernels.decode_attention as _decode_mod
 import repro.kernels.flash_attention as _flash_mod
 import repro.kernels.fused_mlp as _fused_mlp_mod
 import repro.kernels.moe_gmm as _moe_gmm_mod
+import repro.kernels.paged_decode_attention as _paged_decode_mod
 from repro.kernels import ref
 
 BACKENDS = ("pallas", "interpret", "ref")
@@ -265,6 +266,20 @@ def decode_attention(q, k, v, kv_pos, t, kv_valid=None, *, window=0,
                                         interpret=_interp(kb))
 
 
+# -------------------------- paged decode attention ---------------------------
+
+@partial(jax.jit, static_argnames=("force_pallas", "backend"))
+def paged_decode_attention(q, kp, vp, table, t, pvalid, *,
+                           force_pallas=False, backend=None):
+    """Paged-pool decode attention (see kernels/paged_decode_attention.py).
+    Inference-only: no VJP (decode is never differentiated)."""
+    kb = "pallas" if force_pallas else resolve_backend(backend)
+    if kb == "ref":
+        return ref.paged_decode_attention_ref(q, kp, vp, table, t, pvalid)
+    return _paged_decode_mod.paged_decode_attention(
+        q, kp, vp, table, t, pvalid, interpret=_interp(kb))
+
+
 # --------------------------- SPMD kernel wrappers -----------------------------
 #
 # A pallas_call is a custom call — OPAQUE to GSPMD, which would replicate
@@ -322,6 +337,51 @@ def decode_attention_sharded(q, k, v, kv_pos, t, kv_valid, *, window=0,
                   P(bx, None)),
         out_specs=P(bx, None, md, None),
     )(q, k, v, kv_pos, t, kv_valid)
+
+
+def paged_decode_attention_sharded(q, kp, vp, table, t, pvalid, *,
+                                   backend=None, mesh=None):
+    """Paged-pool decode kernel, one grid PER SHARD: kv heads shard over
+    `model`, and the POOL's page axis shards over the data axes alongside
+    the slot batch — replica locality (the serving engine only hands a
+    slot pages from its own replica's contiguous id range, enforced by
+    ``PagePool``) is exactly pool-shard locality, so each shard gathers
+    only local pages. Page-table entries arrive as GLOBAL ids and are
+    rebased in-body by the shard's page offset. Requires Hp % model == 0,
+    K % model == 0, and B/N divisible by the data size; anything else, or
+    a ref/trivial-mesh call, falls back to the plain entry point."""
+    from jax.sharding import PartitionSpec as P
+    import jax.numpy as jnp
+    from repro.runtime import sharding as SH
+    kb = resolve_backend(backend)
+    mesh, ba, d, m = _mesh_layout(mesh)
+    B, _, Hp, _ = q.shape
+    N, K = kp.shape[0], kp.shape[2]
+    if (mesh is None or kb == "ref" or (d <= 1 and m <= 1)
+            or Hp % m or K % m or B % d or N % d):
+        return paged_decode_attention(q, kp, vp, table, t, pvalid,
+                                      backend=backend)
+    bx = ba if d > 1 else None
+    md = "model" if "model" in mesh.axis_names else None
+    pages_per_shard = N // d
+
+    def body(q, kp, vp, table, t, pvalid):
+        if bx is not None:
+            ridx = 0
+            for ax in bx:
+                ridx = ridx * mesh.shape[ax] + jax.lax.axis_index(ax)
+            table = jnp.where(table >= 0,
+                              table - ridx * pages_per_shard, -1)
+        return _paged_decode_mod.paged_decode_attention(
+            q, kp, vp, table, t, pvalid, interpret=_interp(kb))
+
+    return SH.shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(bx, None, md, None), P(bx, None, md, None),
+                  P(bx, None, md, None), P(bx, None), P(bx),
+                  P(bx, None)),
+        out_specs=P(bx, None, md, None),
+    )(q, kp, vp, table, t, pvalid)
 
 
 def fused_mlp_routed_sharded(x, idx, wi, wo, wg=None, token_weights=None,

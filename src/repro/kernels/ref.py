@@ -74,6 +74,39 @@ def decode_attention_ref(q, k, v, kv_pos, t, *, window=0, kv_valid=None,
     return ctx.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, kp, vp, table, t, pvalid, *,
+                               sm_scale=None):
+    """Paged-pool decode attention oracle. q: (B,1,H,Dh); kp, vp:
+    (N, page_size, K, Dh) global page pool; table: (B,P) i32 page-table
+    rows (-1 = unused); t: (B,) per-slot decode positions; pvalid:
+    (N, page_size) routing validity. Gathers each slot's pages and masks
+    by the implicit position ``p * page_size + lane``."""
+    B, Sq, H, Dh = q.shape
+    N, ps, K = kp.shape[0], kp.shape[1], kp.shape[2]
+    P = table.shape[1]
+    G = H // K
+    sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
+    table = jnp.asarray(table, jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
+    pid = jnp.maximum(table, 0)                       # (B, P)
+    k = kp[pid].reshape(B, P * ps, K, Dh)             # gather pages
+    v = vp[pid].reshape(B, P * ps, K, Dh)
+    pos = (jnp.arange(P)[:, None] * ps
+           + jnp.arange(ps)[None, :]).reshape(-1)     # (P*ps,) implicit
+    mask = ((table[:, :, None] >= 0)
+            & pvalid[pid]).reshape(B, P * ps)
+    mask &= pos[None, :] <= t[:, None]
+    qg = q.reshape(B, Sq, K, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * sm_scale
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", a, v.astype(jnp.float32))
+    ctx = ctx.reshape(B, Sq, H, Dh)
+    # rows with no attendable key match the kernel's exact zeros
+    ctx = jnp.where(mask.any(-1)[:, None, None, None], ctx, 0.0)
+    return ctx.astype(q.dtype)
+
+
 def _act(name):
     return jax.nn.silu if name == "swiglu" else jax.nn.gelu
 

@@ -24,6 +24,7 @@ submission (to `--remesh-to`, or the next `valid_mesh_shapes` entry):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -137,6 +138,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--mode", default="infer", choices=["infer", "base"])
+    ap.add_argument("--kv-layout", default="ring", choices=["ring", "paged"],
+                    help="KV cache layout: 'ring' reserves max_seq per slot; "
+                         "'paged' serves from a block-paged pool with prefix "
+                         "sharing and chunked prefill (one compile for any "
+                         "prompt length)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout only)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="total physical KV pages (default: ring-equivalent "
+                         "HBM, i.e. batch * pages-per-full-sequence)")
     ap.add_argument("--budget", default=None, type=_budget_list,
                     help="per-request compute budget(s) in (0,1]: a float, "
                          "or a comma list assigned round-robin (mixed "
@@ -193,6 +204,13 @@ def main():
 
     cfg = get_config(args.arch, args.variant)
     ecfg = get_elastic(args.arch, cfg)
+    if args.kv_layout == "paged" and ecfg is not None \
+            and getattr(ecfg, "mlp_n_experts", 0):
+        # paged prefill is chunked; moefied expert-capacity buffers depend
+        # on the chunking, so the paged engine requires a dense MLP
+        print(f"[serve] --kv-layout paged: dropping mlp_n_experts="
+              f"{ecfg.mlp_n_experts} (dense MLP required; see docs/paged_kv.md)")
+        ecfg = dataclasses.replace(ecfg, mlp_n_experts=0, mlp_expert_topk=0)
     key = jax.random.PRNGKey(0)
     params = model_init(key, cfg, ecfg)
     rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
@@ -201,7 +219,8 @@ def main():
                            max_seq=args.prompt_len + args.max_new,
                            eos_id=args.eos,
                            step_flop_budget=args.flop_budget,
-                           mesh=mesh)
+                           mesh=mesh, kv_layout=args.kv_layout,
+                           page_size=args.page_size, n_pages=args.n_pages)
     budgets = args.budget
     rng = np.random.default_rng(0)
     reqs = [GenRequest(rng.integers(0, cfg.vocab_size, args.prompt_len,
@@ -238,6 +257,11 @@ def main():
         print("sample output:", outs[0][:16])
     print(f"compiles: {engine.compile_counts()} (budgets, slots, and "
           f"sampling knobs never recompile)")
+    if args.kv_layout == "paged":
+        st = engine.paged_stats()
+        print(f"paged pool: peak {st['peak_allocated']}/{st['usable']} pages "
+              f"(page_size={st['page_size']}, "
+              f"{st['registered_prefixes']} prefixes registered)")
 
 
 if __name__ == "__main__":

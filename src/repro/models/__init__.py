@@ -1,9 +1,10 @@
 from repro.models.model import (batch_specs, cache_init, cache_insert,
                                 cache_specs, decode_step, forward, model_init,
-                                prefill, prefill_into_slot, router_init,
+                                paged_cache_init, prefill, prefill_chunk_step,
+                                prefill_into_slot, router_init,
                                 router_param_count, build_pattern)
 
 __all__ = ["batch_specs", "cache_init", "cache_insert", "cache_specs",
-           "decode_step", "forward", "model_init", "prefill",
-           "prefill_into_slot", "router_init", "router_param_count",
-           "build_pattern"]
+           "decode_step", "forward", "model_init", "paged_cache_init",
+           "prefill", "prefill_chunk_step", "prefill_into_slot",
+           "router_init", "router_param_count", "build_pattern"]

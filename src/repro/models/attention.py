@@ -394,3 +394,134 @@ def attn_cache_init(cfg, batch: int, max_seq: int, window: int = 0):
         "valid": jnp.zeros((batch, L), bool),
         "pos": jnp.full((batch, L), -1, jnp.int32),
     }
+
+
+# ------------------------------ paged KV pool --------------------------------
+#
+# The block-paged twin of the ring cache (runtime/pagedkv.py): one GLOBAL
+# per-layer pool of (n_pages, page_size, K, Dh) pages shared by every
+# serving slot, addressed through per-slot int32 page-table rows. Position
+# t of slot b lives at (table[b, t // page_size], t % page_size) — the
+# position is implicit in the table layout, so there is no `pos` array;
+# `pvalid` carries the ElastiFormer token-gate keep decision per lane.
+
+
+def attn_paged_cache_init(cfg, n_pages: int, page_size: int):
+    """One layer's slice of the global page pool."""
+    K, Dh = cfg.n_kv_heads, cfg.d_head
+    dt = dtype_of(cfg)
+    return {
+        "kp": jnp.zeros((n_pages, page_size, K, Dh), dt),
+        "vp": jnp.zeros((n_pages, page_size, K, Dh), dt),
+        "pvalid": jnp.zeros((n_pages, page_size), bool),
+    }
+
+
+def _paged_gather(cache, table, B: int):
+    """Gather a (B, P)-table's pages into position-ordered (B, P*ps, K, Dh)
+    K/V plus the (B, P*ps) validity mask and the implicit kv positions."""
+    ps = cache["kp"].shape[1]
+    P = table.shape[-1]
+    pid = jnp.maximum(table, 0)
+    kg = cache["kp"][pid].reshape(B, P * ps, *cache["kp"].shape[2:])
+    vg = cache["vp"][pid].reshape(B, P * ps, *cache["vp"].shape[2:])
+    kvv = ((table[..., None] >= 0)
+           & cache["pvalid"][pid]).reshape(B, P * ps)
+    kvpos = (jnp.arange(P)[:, None] * ps
+             + jnp.arange(ps)[None, :]).reshape(-1)
+    return kg, vg, kvv, kvpos
+
+
+def attn_decode_paged(
+    p, x, cache, t, table, trash, *, cfg, head_weights=None, lora=None,
+    use_rope: bool = True, write: Optional[jnp.ndarray] = None,
+    backend=None,
+):
+    """One decode step over the paged pool. x: (B,1,D); cache:
+    {'kp','vp': (N, ps, K, Dh), 'pvalid': (N, ps)}; t: (B,) i32 per-slot
+    positions; table: (B, P) i32 page-table rows (GLOBAL page ids, -1 =
+    unused entry — the host guarantees entry t // ps is backed for every
+    ACTIVE slot); trash: (B,) i32 per-slot trash-page ids — rows whose
+    table entry is -1 (inactive slots) are remapped there, so the write is
+    branch-free and never lands on a live page. write: (B,) bool token
+    gate. Returns (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    ps = cache["kp"].shape[1]
+    t = jnp.asarray(t, jnp.int32).reshape(-1)
+    pos = t[:, None]                                       # (B, 1)
+    q = _project_q(p, x, pos, cfg, lora, use_rope)
+    k_new, v_new = _project_kv(p, x, pos, cfg, lora, use_rope)
+    wr = jnp.ones((B,), bool) if write is None else write
+    entries = jnp.take_along_axis(table, (t // ps)[:, None], axis=1)[:, 0]
+    pages = jnp.where(entries >= 0, entries, trash)        # (B,)
+    offs = jax.lax.rem(t, jnp.int32(ps))
+    # per-slot page append: CoW guarantees the append page is exclusively
+    # owned, so distinct active rows never scatter to the same (page, lane).
+    # Under a mesh the scatter result is pinned back to the pool sharding
+    # (pages over data, kv-heads over `model`) — GSPMD cannot partition a
+    # page-indexed scatter and would otherwise replicate the whole pool.
+    def upd(c, n):
+        old = c[pages, offs]                               # (B, K, Dh)
+        new = jnp.where(wr[:, None, None], n[:, 0], old).astype(c.dtype)
+        return SH.constrain_page_pool(c.at[pages, offs].set(new), cfg)
+    kp = upd(cache["kp"], k_new)
+    vp = upd(cache["vp"], v_new)
+    pvalid = cache["pvalid"].at[pages, offs].set(wr)
+    new_cache = {"kp": kp, "vp": vp, "pvalid": pvalid}
+    if _kernel_ok(backend, cfg):
+        # paged decode kernel: the table and per-slot lengths ride scalar
+        # prefetch, the BlockSpec index_map gathers pages from the pool.
+        # Under a mesh it runs per-shard (kv-heads over `model`, pages and
+        # slots over data) — see ops.paged_decode_attention_sharded.
+        ctx = OPS.paged_decode_attention_sharded(q, kp, vp, table, t,
+                                                 pvalid, backend=backend)
+    else:
+        kg, vg, kvv, kvpos = _paged_gather(new_cache, table, B)
+        mask = _mask(pos, kvpos[None], True, 0, kvv)
+        ctx = sdpa(q, kg, vg, mask, cfg=cfg)
+        # rows with no attendable key: match the kernel's exact zeros
+        ctx = jnp.where(mask.any(-1)[:, :, None, None], ctx, 0.0)
+    if head_weights is not None:
+        ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, new_cache
+
+
+def attn_chunk(
+    p, x, cache, write_page, table_row, pos0, plen, *, cfg, keep=None,
+    head_weights=None, lora=None, use_rope: bool = True,
+):
+    """One CHUNK of a paged prefill, shaped like a decode: x is (1, C, D)
+    with C == page_size, covering absolute positions [pos0, pos0 + C). The
+    chunk's K/V fill exactly ONE page (``write_page``, a traced id — the
+    replica's trash page when this chunk's prefix page is shared and the
+    chunk only recomputes queries), then the queries attend over ALL pages
+    of ``table_row`` with causal masking on the implicit positions — so a
+    prompt of ANY length streams through this one compiled graph,
+    collapsing the per-length prefill buckets to a single compile.
+    ``keep``: (1, C) ElastiFormer token gate; lanes at positions >= plen
+    (chunk padding) are never marked valid. Returns (out (1,C,D),
+    new_cache)."""
+    B, C, _ = x.shape
+    positions = pos0 + jnp.arange(C, dtype=jnp.int32)[None, :]   # (1, C)
+    q = _project_q(p, x, positions, cfg, lora, use_rope)
+    k_new, v_new = _project_kv(p, x, positions, cfg, lora, use_rope)
+    wr = jnp.ones((B, C), bool) if keep is None else keep
+    wr = wr & (positions < plen)
+
+    def upd(c, n):
+        out = jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (write_page, 0, 0, 0))
+        return SH.constrain_page_pool(out, cfg)
+    kp = upd(cache["kp"], k_new)                           # (1,C,K,Dh) page
+    vp = upd(cache["vp"], v_new)
+    pvalid = jax.lax.dynamic_update_slice(cache["pvalid"], wr,
+                                          (write_page, 0))
+    new_cache = {"kp": kp, "vp": vp, "pvalid": pvalid}
+    kg, vg, kvv, kvpos = _paged_gather(new_cache, table_row[None], B)
+    mask = _mask(positions, kvpos[None], True, 0, kvv)
+    ctx = sdpa(q, kg, vg, mask, cfg=cfg)
+    if head_weights is not None:
+        ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, new_cache

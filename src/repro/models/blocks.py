@@ -588,8 +588,14 @@ def _decode_token_gate(rp, name, h, cap, pol):
 
 
 def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
-                 mode: str, elastic_on: bool, window: int = 0):
-    """One token. x: (B,1,D); returns (x', new_cache)."""
+                 mode: str, elastic_on: bool, window: int = 0,
+                 table=None, trash=None):
+    """One token. x: (B,1,D); returns (x', new_cache).
+
+    ``table``/``trash``: paged-KV operands (the per-slot page-table rows
+    and per-slot trash-page ids — see attention.attn_decode_paged). When
+    given and the cache is a page pool ({'kp','vp','pvalid'}), decode
+    attention appends through the page table instead of the ring."""
     B = x.shape[0]
     routed = elastic_on and mode != "base" and rp is not None
     backend = OPS.resolve_backend(
@@ -611,9 +617,14 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
             lora = _lora_gate(lora, dcap, pol.student)
         hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
                            auxes) if routed else None
-        y, new_cache["attn"] = A.attn_decode(
-            p["attn"], h, cache["attn"], t, cfg=cfg, window=window,
-            head_weights=hw, lora=lora, write=keep, backend=backend)
+        if table is not None and "kp" in cache["attn"]:
+            y, new_cache["attn"] = A.attn_decode_paged(
+                p["attn"], h, cache["attn"], t, table, trash, cfg=cfg,
+                head_weights=hw, lora=lora, write=keep, backend=backend)
+        else:
+            y, new_cache["attn"] = A.attn_decode(
+                p["attn"], h, cache["attn"], t, cfg=cfg, window=window,
+                head_weights=hw, lora=lora, write=keep, backend=backend)
     elif kind == "ssm":
         y, new_cache["ssm"] = S.ssm_decode(p["mixer"], h, cache["ssm"], cfg,
                                            write=keep)
@@ -661,6 +672,88 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
             y = y * w2[:, None, None].astype(y.dtype)
         x = x + y
     return x, new_cache
+
+
+def block_chunk(kind: str, p, rp, x, cache, write_page, table_row, pos0,
+                plen, *, cfg, spec, pol=None, mode: str, elastic_on: bool):
+    """One CHUNK of a paged prefill: x is (1, C, D) with C == page_size,
+    covering absolute positions [pos0, pos0 + C) of a plen-token prompt
+    (the last chunk arrives zero-padded). Mirrors ``block_apply``'s
+    inference-threshold branch EXACTLY — ``token_gate(mode)`` / head
+    routing / LoRA gating are all per-token, so streaming a prompt through
+    this graph chunk-by-chunk produces the same keep decisions and (up to
+    reduction order inside attention) the same activations as the one-shot
+    prefill — but writes K/V into ONE pool page (``write_page``) and
+    attends through ``table_row`` (see attention.attn_chunk). pos0 / plen /
+    write_page / table_row are traced, so ONE compile serves every chunk of
+    every prompt length. Paged serving is attention-only with dense MLPs
+    (engine-validated): ``moe_apply``'s expert-capacity buffers are sized
+    by the sequence chunking, so expert dispatch is the one sub-block
+    whose one-shot and chunked results can drop different tokens.
+    Returns (x', new_cache)."""
+    assert mode != "train", "block_chunk is a serving (infer/base) path"
+    if not is_attn(kind):
+        raise ValueError(f"paged chunk prefill requires attn blocks, "
+                         f"got {kind!r}")
+    routed = elastic_on and mode != "base" and rp is not None
+    backend = OPS.resolve_backend(
+        spec.kernel_backend if spec is not None else None)
+    impl = spec.routing_impl if spec is not None else "gather"
+    new_cache = dict(cache)
+    positions = (jnp.asarray(pos0, jnp.int32)
+                 + jnp.arange(x.shape[1], dtype=jnp.int32))   # (C,)
+    auxes = []                                   # serving: aux discarded
+
+    cap_mha = cap_mlp = None
+    if routed and spec is not None and rp:
+        if spec.mha_token_routed and "tok_mixer" in rp:
+            cap_mha = R.gate_capacity(pol.mha_token_capacity, pol.student)
+        if spec.mlp_token_routed and "tok_mlp" in rp:
+            cap_mlp = R.gate_capacity(pol.mlp_token_capacity, pol.student)
+
+    # ---- attention (paged page write + table attend) ----
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    lora = rp.get("lora") if routed else None
+    lora = _lora_gate(lora, cap_mha,
+                      pol.student if (routed and pol is not None) else None)
+    hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
+                       auxes) if routed else None
+    keep, wtok = None, None
+    if cap_mha is not None:
+        logits = R.token_logits(rp["tok_mixer"], h)
+        scores = jax.nn.sigmoid(logits)
+        keep, wtok = R.token_gate(logits, scores, cap_mha, mode,
+                                  theta=pol.theta, mxu=True)
+    y, new_cache["attn"] = A.attn_chunk(
+        p["attn"], h, cache["attn"], write_page, table_row, pos0, plen,
+        cfg=cfg, keep=keep, head_weights=hw, lora=lora)
+    if wtok is not None:
+        y = y * wtok[..., None].astype(y.dtype)
+    x = x + y
+
+    # ---- MLP (dense; per-token threshold routing) ----
+    if has_mlp(kind):
+        h = norm_apply(p["norm2"], x, cfg.norm)
+        f = _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes,
+                    backend=backend)
+        if cap_mlp is None:
+            delta = f(h, positions)
+        else:
+            delta, _ = R.route_tokens(
+                rp["tok_mlp"], h, f, cap_mlp, mode, positions=positions,
+                impl=impl, theta=pol.theta if pol is not None else 0.5)
+        x = x + delta
+    return x, new_cache
+
+
+def block_paged_cache_init(kind: str, cfg, n_pages: int, page_size: int):
+    """Paged twin of ``block_cache_init``: one layer's slice of the global
+    page pool (attention-only — the pool replaces the ring, recurrent
+    state has no paged form)."""
+    if not is_attn(kind) or kind == "xattn":
+        raise ValueError(f"paged KV cache requires self-attention blocks, "
+                         f"got {kind!r}")
+    return {"attn": A.attn_paged_cache_init(cfg, n_pages, page_size)}
 
 
 def cache_row_insert(full, row, slot, batch_axis: int = 0):

@@ -31,7 +31,8 @@ from repro.core.routing import (RouteAux, bcast_to, capacity_k, gate_capacity,
                                 is_full, is_static, gather_tokens,
                                 token_router_init, topk_indices,
                                 topk_mask_dyn)
-from repro.models.blocks import (block_apply, block_cache_init, block_decode,
+from repro.models.blocks import (block_apply, block_cache_init, block_chunk,
+                                 block_decode, block_paged_cache_init,
                                  block_router_init, block_init,
                                  cache_row_insert)
 from repro.models.layers import dense_init, dtype_of, norm_apply, norm_init
@@ -494,12 +495,18 @@ def prefill_into_slot(params, rparams, batch, caches, slot, cfg, ecfg=None,
 
 
 def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
-                mode: str = "infer", policy=None):
+                mode: str = "infer", policy=None, table=None, trash=None):
     """One decode step. token: (B,1) i32; t: scalar i32 position, or (B,)
     i32 per-row positions (continuous batching: each serving slot decodes
     at its own offset inside the same compiled step).
     Returns (logits (B,V), new caches). ``policy`` is traced: one compiled
-    decode step serves every (mixed-per-request) budget."""
+    decode step serves every (mixed-per-request) budget.
+
+    ``table``/``trash``: paged-KV mode — the (B, P) page-table rows and
+    (B,) per-slot trash-page ids. One table serves EVERY layer: pages are
+    allocated per slot once and each layer's pool slice is indexed with the
+    same page ids, so the table rides the scan as a loop-invariant capture
+    (never stacked into xs)."""
     spec, pol = as_spec_policy(ecfg, policy)
     period, P, _ = build_pattern(cfg, spec)
     x = _embed(params, cfg, token)
@@ -520,7 +527,8 @@ def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
             x, nc = block_decode(
                 ent.kind, lps[j], lrps[j], x, lcs[j], t, cfg=cfg, spec=spec,
                 pol=(pol if static_pol else lpol), mode=mode,
-                elastic_on=ent.elastic, window=ent.window)
+                elastic_on=ent.elastic, window=ent.window,
+                table=table, trash=trash)
             ncs.append(nc)
         return x, ncs
 
@@ -541,10 +549,89 @@ def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
         x, nc = block_decode(ent.kind, lp, lrp, x, caches["tail"][i], t,
                              cfg=cfg, spec=spec,
                              pol=(pol if static_pol else lpol), mode=mode,
-                             elastic_on=ent.elastic, window=ent.window)
+                             elastic_on=ent.elastic, window=ent.window,
+                             table=table, trash=trash)
         new_tail.append(nc)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = _logits(params, cfg, x[:, -1])
+    return logits, {"scan": new_scan, "tail": new_tail}
+
+
+# --------------------------- paged serving -----------------------------------
+
+def paged_cache_init(cfg, n_pages: int, page_size: int):
+    """Paged twin of ``cache_init``: per-layer slices of the GLOBAL page
+    pool, stacked into the same scan/tail pattern tree (scan leaves gain a
+    leading period dim). Attention-only — validated per layer kind."""
+    period, P, _ = build_pattern(cfg, None)
+    caches = [block_paged_cache_init(k, cfg, n_pages, page_size)
+              for k in cfg.layer_kinds]
+    scan, tail = _split_layers(caches, len(period), P)
+    return {"scan": scan, "tail": tail}
+
+
+def prefill_chunk_step(params, rparams, tokens, caches, write_page, table_row,
+                       pos0, plen, cfg, ecfg=None, mode: str = "infer",
+                       policy=None):
+    """One CHUNK of a paged prefill through the whole stack (the decode-
+    shaped prefill graph): tokens is (1, C) i32 with C == page_size,
+    zero-padded past ``plen``; ``write_page`` (scalar i32) is the pool page
+    this chunk's K/V land in at EVERY layer (each layer's pool slice shares
+    the id — same invariant as ``decode_step``'s table); ``table_row`` (P,)
+    i32 is the slot's page-table row (entries <= this chunk present);
+    ``pos0``/``plen`` are traced scalars. Chaining ceil(plen / C) calls of
+    this ONE compiled graph replaces every per-length prefill bucket.
+    Returns (logits (1, V) at the chunk's LAST REAL position — only the
+    final chunk's logits feed sampling — and the new caches)."""
+    spec, pol = as_spec_policy(ecfg, policy)
+    period, P_, _ = build_pattern(cfg, spec)
+    x = _embed(params, cfg, tokens)
+    has_rp = rparams is not None and mode != "base"
+    static_pol = _pol_static(pol)
+    layered = (not static_pol) and pol.has_layer_dim
+    if layered:
+        pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, len(period), P_)
+
+    def body(x, xs):
+        lps, lcs = xs["p"], xs["c"]
+        lrps = xs["r"] if has_rp else [None] * len(period)
+        lpols = xs.get("pol")
+        ncs = []
+        for j, ent in enumerate(period):
+            lpol = lpols[j] if lpols is not None else \
+                (None if static_pol else pol)
+            x, nc = block_chunk(
+                ent.kind, lps[j], lrps[j], x, lcs[j], write_page, table_row,
+                pos0, plen, cfg=cfg, spec=spec,
+                pol=(pol if static_pol else lpol), mode=mode,
+                elastic_on=ent.elastic)
+            ncs.append(nc)
+        return x, ncs
+
+    if params["scan"]:
+        xs = {"p": params["scan"], "c": caches["scan"]}
+        if has_rp:
+            xs["r"] = rparams["scan"]
+        if layered:
+            xs["pol"] = pol_scan
+        x, new_scan = jax.lax.scan(body, x, xs, unroll=flags.unroll())
+    else:
+        new_scan = []
+    new_tail = []
+    for i, lp in enumerate(params["tail"]):
+        ent = period[i % len(period)]
+        lrp = rparams["tail"][i] if has_rp else None
+        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+        x, nc = block_chunk(ent.kind, lp, lrp, x, caches["tail"][i],
+                            write_page, table_row, pos0, plen, cfg=cfg,
+                            spec=spec, pol=(pol if static_pol else lpol),
+                            mode=mode, elastic_on=ent.elastic)
+        new_tail.append(nc)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    lidx = jnp.clip(jnp.asarray(plen, jnp.int32) - 1
+                    - jnp.asarray(pos0, jnp.int32), 0, x.shape[1] - 1)
+    h_last = jax.lax.dynamic_index_in_dim(x, lidx, axis=1, keepdims=False)
+    logits = _logits(params, cfg, h_last)
     return logits, {"scan": new_scan, "tail": new_tail}
 
 

@@ -5,4 +5,5 @@ from repro.runtime.elastic import (make_mesh, rescale_serving_state,
 from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
                                            StragglerWatchdog, run_resilient,
                                            serve_resilient)
+from repro.runtime.pagedkv import PagePool
 from repro.runtime.scheduler import RequestHandle, SlotScheduler

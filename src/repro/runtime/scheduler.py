@@ -36,6 +36,14 @@ RUNNING = "running"
 DONE = "done"
 CANCELLED = "cancelled"
 
+# Admission-cost floor: a request whose roofline budget fraction rounds to
+# ~0 FLOPs still occupies a decode-slot lane of the compiled step (and, in
+# the paged engine, real KV pages), so its scheduling cost can never be 0 —
+# otherwise per-replica used-cost accounting sees a full replica as idle
+# and zero-cost rows bypass the FLOP budget entirely. One slot-lane is
+# never cheaper than 1/1024 of a full-budget row.
+MIN_COST = 2.0 ** -10
+
 
 class RequestHandle:
     """Lifecycle handle for one submitted request.
@@ -186,7 +194,15 @@ class SlotScheduler:
     # ---- queue ----
     def enqueue(self, handle: RequestHandle, cost: float = 1.0):
         handle.status = QUEUED
-        self.queue.append((handle, float(cost)))
+        self.queue.append((handle, max(float(cost), MIN_COST)))
+
+    def requeue_front(self, handle: RequestHandle, cost: float = 1.0):
+        """Put a PREEMPTED request back at the head of the queue (it was
+        admitted first; preemption-by-page-pressure must not also cost it
+        its FIFO position)."""
+        handle.status = QUEUED
+        handle.slot = None
+        self.queue.appendleft((handle, max(float(cost), MIN_COST)))
 
     def drop_queued(self, handle: RequestHandle) -> bool:
         """Remove a still-queued handle; True if it was found."""
@@ -212,13 +228,20 @@ class SlotScheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def admit(self) -> List[Tuple[int, RequestHandle]]:
+    def admit(self, page_check=None) -> List[Tuple[int, RequestHandle]]:
         """Pop queued requests into free slots under the per-replica FLOP
         budget; returns [(slot, handle)] for the engine to prefill. The
         head of the queue is placed on the least-loaded replica that can
         take it (lowest occupied cost, ties to the lowest replica index),
         so admissions spread across the replica axis instead of filling
-        replica 0 first — no replica starves while another queues."""
+        replica 0 first — no replica starves while another queues.
+
+        ``page_check(handle, replica) -> bool`` (optional) is the paged
+        engine's joint-packing hook: a replica is only a candidate when it
+        also has the free KV pages the request's prompt needs, so
+        admission packs on free pages AND FLOP budget together. A head
+        request no replica can page never jumps the queue — admission
+        stays FIFO and waits for frees/preemption."""
         out: List[Tuple[int, RequestHandle]] = []
         used = [self.replica_used_cost(r) for r in range(self.n_replicas)]
         while self.queue:
@@ -227,6 +250,10 @@ class SlotScheduler:
                      if self.free_slots_in(r)]
             if not cands:
                 break               # every replica is slot-full
+            if page_check is not None:
+                cands = [r for r in cands if page_check(handle, r)]
+                if not cands:
+                    break           # wait for page frees / preemption
             fit = [r for r in cands
                    if used[r] + cost <= self.flop_budget + 1e-9]
             if not fit:

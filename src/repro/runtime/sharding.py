@@ -215,6 +215,38 @@ def attn_kv_spec(cfg, mesh: Mesh, lead: int = 0) -> P:
     return P(*([None] * lead), batch_axes(mesh), *tail)
 
 
+def page_pool_spec(cfg, mesh: Mesh, lead: int = 0) -> P:
+    """The ONE placement rule for an (N, page_size, K, Dh) paged KV POOL
+    tensor (`runtime/pagedkv.py`): the page axis shards over the data axes
+    — replica locality of page ids makes pool-shard == scheduler-replica —
+    and kv-heads over `model` when divisible, else head_dim. Shared by
+    `cache_specs_tree` (the jit out_shardings pin) and
+    `constrain_page_pool` (the page-write pins) — they MUST agree or every
+    compiled step pays a pool re-layout copy."""
+    kv_div = cfg.n_kv_heads and cfg.n_kv_heads % model_axis_size(mesh) == 0
+    tail = (None, "model", None) if kv_div else (None, None, "model")
+    return P(*([None] * lead), batch_axes(mesh), *tail)
+
+
+def constrain_page_pool(x, cfg):
+    """Pin a page-pool leaf at its WRITE sites (chunked-prefill page
+    writes, decode per-slot appends, fork's CoW page copy) under the
+    active mesh — the paged twin of `constrain_kv_cache`: the writes are
+    page-indexed scatters GSPMD would otherwise resolve by replicating the
+    whole pool every step. Rank >= 4 is a K/V pool (page axis at
+    ndim - 4); rank < 4 is a per-lane validity pool (page axis at
+    ndim - 2). No-op outside a mesh context."""
+    m = active_mesh()
+    if m is None:
+        return x
+    if x.ndim >= 4:
+        spec = page_pool_spec(cfg, m, lead=x.ndim - 4)
+    else:
+        spec = P(*([None] * (x.ndim - 2)), batch_axes(m), None)
+    return jax.lax.with_sharding_constraint(
+        x, _fit_spec(spec, x.shape, m, relocate=True))
+
+
 def cache_specs_tree(cache_shapes, cfg, mesh: Mesh):
     """PartitionSpecs for a cache pytree (from models.cache_specs)."""
     ba = batch_axes(mesh)
@@ -223,6 +255,10 @@ def cache_specs_tree(cache_shapes, cfg, mesh: Mesh):
         key = jax.tree_util.keystr(path)
         nscan = key.count("['scan']")
         lead = [None] * nscan
+        if key.endswith("['kp']") or key.endswith("['vp']"):
+            return page_pool_spec(cfg, mesh, lead=nscan)
+        if key.endswith("['pvalid']"):
+            return P(*lead, ba, None)
         if "['attn']" in key or "['xattn']" in key:
             if key.endswith("['valid']") or key.endswith("['pos']"):
                 return P(*lead, ba, None)

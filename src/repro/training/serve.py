@@ -38,6 +38,7 @@ replica axis up/down live (in-flight requests resume bitwise).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from contextlib import nullcontext
 from typing import List, NamedTuple, Optional
@@ -48,7 +49,10 @@ import numpy as np
 
 from repro.core.policy import (ElasticPolicy, as_spec_policy, ragged_bucket,
                                solve_budget)
-from repro.models import cache_init, decode_step, prefill_into_slot
+from repro.models import (cache_init, decode_step, paged_cache_init,
+                          prefill_chunk_step, prefill_into_slot)
+from repro.runtime.pagedkv import (PagePool, copy_page_in_tree, n_pages_for,
+                                   prefix_keys)
 from repro.runtime.scheduler import RequestHandle, SlotScheduler
 
 
@@ -142,6 +146,41 @@ def _make_step_fn(cfg, spec, mode):
     return step
 
 
+def _make_chunk_admit_fn(cfg, spec, mode):
+    """Paged admission graph: ONE chunk of a chunked prefill (see
+    ``models.prefill_chunk_step``) + policy-row splice + sampling. Every
+    operand that varies per admission — the chunk tokens, page-table row,
+    write page, chunk offset, prompt length, slot, budgets, sampling knobs
+    — is traced, so this compiles EXACTLY ONCE for any mix of prompt
+    lengths (the per-length prefill buckets of the ring engine collapse to
+    one graph). The sampled token is only meaningful on the final chunk."""
+    def admit(params, rp, tokens, caches, table_row, write_page, pos0, plen,
+              slot, policy, live_policy, temperature, top_k, seed):
+        logits, caches = prefill_chunk_step(
+            params, rp, tokens, caches, write_page, table_row, pos0, plen,
+            cfg, spec, mode=mode, policy=policy)
+        if live_policy is not None and policy is not None:
+            live_policy = live_policy.set_row(slot, policy)
+        tok = sample_tokens(logits, temperature[None], top_k[None],
+                            seed[None], jnp.asarray(plen)[None])[0]
+        return tok, caches, live_policy
+    return admit
+
+
+def _make_paged_step_fn(cfg, spec, mode):
+    """Paged decode step: same as ``_make_step_fn`` plus the (B, P) page
+    table and (B,) per-slot trash-page ids (host-authoritative, passed as
+    traced operands — table updates never recompile)."""
+    def step(params, rp, tok, caches, t, policy, active,
+             temperature, top_k, seeds, table, trash):
+        logits, caches = decode_step(params, rp, tok[:, None], caches, t,
+                                     cfg, spec, mode=mode, policy=policy,
+                                     table=table, trash=trash)
+        nxt = sample_tokens(logits, temperature, top_k, seeds, t + 1)
+        return jnp.where(active, nxt, 0).astype(jnp.int32), caches
+    return step
+
+
 class ServingEngine:
     """Continuous-batching generation over a frozen base model + routers.
 
@@ -173,7 +212,8 @@ class ServingEngine:
                  max_seq: int = 256, default_budget: Optional[float] = None,
                  theta: float = 0.5, eos_id: Optional[int] = None,
                  step_flop_budget: Optional[float] = None, mesh=None,
-                 n_replicas: Optional[int] = None):
+                 n_replicas: Optional[int] = None, kv_layout: str = "ring",
+                 page_size: int = 16, n_pages: Optional[int] = None):
         self.params, self.rp = params, router_params
         self.cfg, self.mode = cfg, mode
         # base policy = the elastic config's own knobs (threshold routing
@@ -192,7 +232,31 @@ class ServingEngine:
         B = batch_size
         self.scheduler = SlotScheduler(
             B, step_flop_budget, self._replicas_for(mesh, n_replicas))
-        self._caches = cache_init(cfg, B, max_seq)
+        if kv_layout not in ("ring", "paged"):
+            raise ValueError(f"kv_layout must be 'ring' or 'paged', "
+                             f"got {kv_layout!r}")
+        self.kv_layout, self.page_size = kv_layout, int(page_size)
+        self.pool: Optional[PagePool] = None
+        if kv_layout == "paged":
+            self._validate_paged(mode)
+            R_ = self.scheduler.n_replicas
+            self.pages_per_slot = n_pages_for(max_seq, self.page_size)
+            if n_pages is None:
+                # ring-equivalent HBM: usable pages = B slots * full-length
+                # rows, plus one trash page per replica for masked writes
+                n_pages = B * self.pages_per_slot + R_
+            self.pool = PagePool(n_pages, self.page_size, n_replicas=R_)
+            self._caches = paged_cache_init(cfg, n_pages, self.page_size)
+            # host-authoritative page table, mirrored into every compiled
+            # call as a traced operand (same precedent as self._t)
+            self._table = np.full((B, self.pages_per_slot), -1, np.int32)
+            self._trash = np.array(
+                [self.pool.trash_page(self.scheduler.replica_of(s))
+                 for s in range(B)], np.int32)
+            self._admit_counter = itertools.count()
+            self._admit_seq = np.full((B,), -1, np.int64)
+        else:
+            self._caches = cache_init(cfg, B, max_seq)
         self._live_policy = (self._base_policy.broadcast_rows(B)
                              if self._use_policy else None)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -208,6 +272,57 @@ class ServingEngine:
         self.mesh = None
         self.remeshed_at: Optional[float] = None  # last reshard() wall time
         self._install_mesh(mesh)
+
+    # ---------------------------- paged KV mode ------------------------------
+
+    def _validate_paged(self, mode: str) -> None:
+        """The paged subsystem serves the elastic decoder hot path: global
+        self-attention layers with dense MLPs. Windows would need
+        page-eviction semantics, recurrent mixers have no paged state, and
+        MoE/moefied expert dispatch sizes its capacity buffers by the
+        sequence chunking — the one sub-block whose chunked and one-shot
+        prefills can drop different tokens, which would break the paged ==
+        ring token-parity contract."""
+        if mode not in ("infer", "base"):
+            raise ValueError(f"kv_layout='paged' serves infer/base modes, "
+                             f"got mode={mode!r}")
+        bad = [k for k in self.cfg.layer_kinds if k != "attn"]
+        if bad:
+            raise ValueError(f"kv_layout='paged' requires all-'attn' layer "
+                             f"kinds, got {sorted(set(bad))}")
+        if any(w and w > 0 for w in self.cfg.layer_windows):
+            raise ValueError("kv_layout='paged' does not support sliding-"
+                             "window layers")
+        if self.cfg.encoder is not None or self.cfg.family in ("vlm",
+                                                               "encoder"):
+            raise ValueError("kv_layout='paged' serves decoder-only LMs")
+        if self.cfg.moe is not None or (self.spec is not None
+                                        and self.spec.mlp_n_experts):
+            raise ValueError("kv_layout='paged' requires a dense MLP (no "
+                             "MoE / moefied experts): expert-capacity "
+                             "buffers depend on the prefill chunking")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+
+    def _prefix_namespace(self, req: GenRequest) -> tuple:
+        """Prefix-sharing hash namespace: pages hold post-gate K/V, so two
+        requests may share a page only when every knob that shapes the
+        written values agrees — mode, solved budget, and theta (sampling
+        knobs don't touch K/V)."""
+        b = req.budget if req.budget is not None else self.default_budget
+        return (self.mode, None if b is None else round(float(b), 6),
+                round(float(self.theta), 6))
+
+    def paged_stats(self) -> dict:
+        """Pool stats plus live-token page efficiency (host-side only)."""
+        st = self.pool.stats()
+        live_tok = int(self._t[self._active].sum())
+        held = int(sum((self._table[s] >= 0).sum()
+                       for s in range(self.B) if self._active[s]))
+        st["live_tokens"] = live_tok
+        st["pages_held_by_active"] = held
+        st["pages_per_token"] = (held / live_tok) if live_tok else 0.0
+        return st
 
     # ------------------------------ SPMD mesh --------------------------------
 
@@ -256,23 +371,38 @@ class ServingEngine:
         # on these aliases). The per-request policy ROW (admit arg 5) is
         # NOT donated: solved rows are cached in `_policy_cache` and reused
         # across admissions.
-        admit_raw = _make_admit_fn(self.cfg, self.spec, self.mode,
-                                   self.max_seq)
-        step_raw = _make_step_fn(self.cfg, self.spec, self.mode)
+        paged = self.kv_layout == "paged"
+        if paged:
+            admit_raw = _make_chunk_admit_fn(self.cfg, self.spec, self.mode)
+            step_raw = _make_paged_step_fn(self.cfg, self.spec, self.mode)
+            admit_static, admit_donate = (), (3, 10)
+            fork_raw = lambda caches, src, dst, n_keep: copy_page_in_tree(
+                caches, src, dst, n_keep, page_size=self.page_size,
+                cfg=self.cfg)
+        else:
+            admit_raw = _make_admit_fn(self.cfg, self.spec, self.mode,
+                                       self.max_seq)
+            step_raw = _make_step_fn(self.cfg, self.spec, self.mode)
+            admit_static, admit_donate = ("bucket",), (3, 6)
         if mesh is None:
-            self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",),
-                                     donate_argnums=(3, 6))
+            self._admit_fn = jax.jit(admit_raw, static_argnames=admit_static,
+                                     donate_argnums=admit_donate)
             self._step_fn = jax.jit(step_raw, donate_argnums=(2, 3))
+            if paged:
+                self._fork_fn = jax.jit(fork_raw, donate_argnums=(0,))
         else:
             rsh = SH.replicated(mesh)
             cache_sh = SH.cache_shardings(self._caches, self.cfg, mesh)
             pol_sh = (jax.tree.map(lambda _: rsh, self._live_policy)
                       if self._live_policy is not None else None)
-            self._admit_fn = jax.jit(admit_raw, static_argnames=("bucket",),
-                                     donate_argnums=(3, 6),
+            self._admit_fn = jax.jit(admit_raw, static_argnames=admit_static,
+                                     donate_argnums=admit_donate,
                                      out_shardings=(rsh, cache_sh, pol_sh))
             self._step_fn = jax.jit(step_raw, donate_argnums=(2, 3),
                                     out_shardings=(rsh, cache_sh))
+            if paged:
+                self._fork_fn = jax.jit(fork_raw, donate_argnums=(0,),
+                                        out_shardings=cache_sh)
 
     def _mesh_ctx(self):
         """Trace/execute under the mesh so `active_mesh()`-gated sharding
@@ -289,6 +419,11 @@ class ServingEngine:
         its replica axis from the new data axes (see
         ``SlotScheduler.set_replicas``). The two entry points recompile
         once against the new shardings (``compile_counts`` restarts)."""
+        if self.kv_layout == "paged":
+            raise NotImplementedError(
+                "live reshard of a paged engine is not supported: page ids "
+                "are replica-local (the pool freelists and trash pages are "
+                "derived from the data-axis size at construction)")
         jax.block_until_ready(self._caches)       # drain the in-flight step
         self.scheduler.set_replicas(self._replicas_for(mesh, None))
         self._install_mesh(mesh)
@@ -328,8 +463,28 @@ class ServingEngine:
         drift from the real call signature."""
         prompt = np.arange(1, plen + 1, dtype=np.int32) \
             % max(2, self.cfg.vocab_size)
-        batch = {"tokens": jnp.asarray(prompt[None])}
         pol_row = self._policy_for(budget if self._use_policy else None)
+        if self.kv_layout == "paged":
+            ck = np.zeros((self.page_size,), np.int32)
+            ck[:min(plen, self.page_size)] = prompt[:self.page_size]
+            admit = EntryPoint(
+                self._admit_fn,
+                (self.params, self.rp, jnp.asarray(ck[None]), self._caches,
+                 jnp.asarray(self._table[0]), jnp.int32(0), jnp.int32(0),
+                 jnp.int32(min(plen, self.page_size)), jnp.int32(0),
+                 pol_row, self._live_policy, jnp.float32(0.0), jnp.int32(0),
+                 jnp.uint32(0)),
+                {}, donated=(3, 10))
+            step = EntryPoint(
+                self._step_fn,
+                (self.params, self.rp, self._tok, self._caches,
+                 jnp.asarray(self._t), self._live_policy,
+                 jnp.asarray(self._active), jnp.asarray(self._temp),
+                 jnp.asarray(self._topk), jnp.asarray(self._seeds),
+                 jnp.asarray(self._table), jnp.asarray(self._trash)),
+                {}, donated=(2, 3))
+            return {"admit": admit, "decode": step}
+        batch = {"tokens": jnp.asarray(prompt[None])}
         bucket = None
         if (self._use_policy and self.mode == "train"
                 and self.spec.routing_impl == "ragged"):
@@ -366,6 +521,13 @@ class ServingEngine:
         b = request.budget
         if b is not None and not 0.0 < b <= 1.0:
             raise ValueError(f"budget must be in (0, 1], got {b}")
+        if self.kv_layout == "paged":
+            need = n_pages_for(prompt.size + request.max_new_tokens,
+                               self.page_size)
+            if need > self.pool.usable_per_replica:
+                raise ValueError(
+                    f"request needs {need} pages but a replica only has "
+                    f"{self.pool.usable_per_replica} usable pages")
         handle = RequestHandle(request, engine=self)
         if extra_inputs:
             self._extras[handle.id] = {
@@ -380,6 +542,8 @@ class ServingEngine:
         if handle.done:
             return False
         if handle.status == "running" and handle.slot is not None:
+            if self.kv_layout == "paged":
+                self._free_slot_pages(handle.slot)
             self.scheduler.free(handle.slot)
             self._active[handle.slot] = False
         else:
@@ -439,6 +603,144 @@ class ServingEngine:
         self._ngen[slot] = 0
         self._append(slot, handle, int(tok0))
 
+    # ----------------------- paged admission / decode ------------------------
+
+    def _page_check(self, handle: RequestHandle, replica: int) -> bool:
+        """Joint-packing hook for ``SlotScheduler.admit``: a replica is an
+        admission candidate only when its freelist covers the prompt's full
+        page count (conservative: prefix sharing can only reduce it)."""
+        plen = np.asarray(handle.request.prompt).size
+        return self.pool.can_alloc(replica, n_pages_for(plen, self.page_size))
+
+    def _free_slot_pages(self, slot: int) -> None:
+        """Return a slot's page-table row to the pool (refcounted — shared
+        prefix pages survive until their last holder frees) and clear it."""
+        pages = [int(p) for p in self._table[slot] if p >= 0]
+        if pages:
+            self.pool.free(pages)
+        self._table[slot] = -1
+
+    def _admit_one_paged(self, slot: int, handle: RequestHandle) -> bool:
+        """Paged admission: match shared prefix pages, allocate the rest,
+        then stream the prompt through the ONE compiled chunk graph
+        (page_size tokens per call). Fully-shared chunks are skipped —
+        except the FINAL chunk, which always runs (its activations feed the
+        first sampled token); when that chunk's page is shared the write is
+        aimed at the replica's trash page while attention gathers the real
+        shared page. Returns False when the pool cannot back the prompt
+        right now (caller re-queues; never raises mid-admission)."""
+        req = handle.request
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        plen, ps = prompt.size, self.page_size
+        n_chunks = n_pages_for(plen, ps)
+        n_full = plen // ps                  # full pages eligible to share
+        r = self.scheduler.replica_of(slot)
+        keys = prefix_keys(tuple(int(x) for x in prompt), ps,
+                           namespace=self._prefix_namespace(req))
+        row = np.full(self.pages_per_slot, -1, np.int32)
+        matched = 0
+        for i in range(n_full):
+            pg = self.pool.lookup_prefix(keys[i], r)
+            if pg is None:
+                break
+            self.pool.incref(pg)
+            row[i] = pg
+            matched += 1
+        fresh = self.pool.alloc(r, n_chunks - matched) \
+            if n_chunks > matched else []
+        if fresh is None:                    # raced out inside this batch
+            shared = [int(p) for p in row[:matched]]
+            if shared:
+                self.pool.free(shared)
+            return False
+        for j, pg in enumerate(fresh):
+            row[matched + j] = pg
+        self._table[slot] = row
+        pol_row = self._policy_for(req.budget if req.budget is not None
+                                   else self.default_budget)
+        seed = int(req.seed) & 0xFFFFFFFF
+        trash = self.pool.trash_page(r)
+        chunk_ids = list(range(matched, n_chunks)) or [n_chunks - 1]
+        with self._mesh_ctx():
+            for c in chunk_ids:
+                lo = c * ps
+                ck = np.zeros((ps,), np.int32)
+                ck[:min(ps, plen - lo)] = prompt[lo:lo + min(ps, plen - lo)]
+                wp = int(row[c]) if c >= matched else trash
+                tok0, self._caches, self._live_policy = self._admit_fn(
+                    self.params, self.rp, jnp.asarray(ck[None]),
+                    self._caches, jnp.asarray(row), jnp.int32(wp),
+                    jnp.int32(lo), jnp.int32(plen), jnp.int32(slot),
+                    pol_row, self._live_policy, jnp.float32(req.temperature),
+                    jnp.int32(req.top_k), jnp.uint32(seed))
+        for i in range(matched, n_full):     # freshly written full pages
+            self.pool.register_prefix(keys[i], int(row[i]))
+        self._tok = self._tok.at[slot].set(tok0)
+        self._t[slot] = plen
+        self._active[slot] = True
+        self._temp[slot] = req.temperature
+        self._topk[slot] = req.top_k
+        self._seeds[slot] = seed
+        self._ngen[slot] = 0
+        self._admit_seq[slot] = next(self._admit_counter)
+        self._append(slot, handle, int(tok0))
+        return True
+
+    def _pick_victim(self, replica: int) -> Optional[int]:
+        """Preemption order: the LATEST-admitted active slot of the replica
+        (FIFO priority — the request that has waited longest keeps its
+        pages)."""
+        spr = self.scheduler.slots_per_replica
+        cands = [s for s in range(replica * spr, (replica + 1) * spr)
+                 if self._active[s]]
+        return max(cands, key=lambda s: self._admit_seq[s]) if cands else None
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a running request under page pressure: recycle its pages,
+        free the slot, and re-queue it AT THE FRONT as a continuation
+        (prompt := original + generated so far). Sampling is keyed by
+        fold_in(seed, absolute position), so the re-admitted run continues
+        token-for-token as if never interrupted."""
+        handle = self.scheduler.slots[slot]
+        cost = self.scheduler.costs[slot]
+        self._free_slot_pages(slot)
+        self._active[slot] = False
+        self.scheduler.free(slot)
+        req = handle.request
+        prompt = np.concatenate([
+            np.asarray(req.prompt, np.int32).reshape(-1),
+            np.asarray(handle.output, np.int32)])
+        handle.request = dataclasses.replace(
+            req, prompt=prompt,
+            max_new_tokens=req.max_new_tokens - len(handle.output))
+        self.scheduler.requeue_front(handle, cost)
+
+    def _ensure_decode_pages(self) -> None:
+        """Host-side pre-alloc before the compiled decode step: every
+        active slot whose next write position crosses into an unbacked
+        page-table entry gets a fresh page — preempting the lowest-priority
+        slot of the SAME replica when the freelist is dry (possibly the
+        requester itself)."""
+        for slot in np.nonzero(self._active)[0]:
+            if not self._active[slot]:    # preempted by an earlier iteration
+                continue
+            pi = int(self._t[slot]) // self.page_size
+            if pi >= self.pages_per_slot or self._table[slot, pi] >= 0:
+                continue
+            r = self.scheduler.replica_of(int(slot))
+            while True:
+                pg = self.pool.alloc(r, 1)
+                if pg is not None:
+                    self._table[slot, pi] = pg[0]
+                    break
+                victim = self._pick_victim(r)
+                if victim is None:           # pragma: no cover - can't happen
+                    raise RuntimeError("page pool exhausted with no "
+                                       "preemptible slot")
+                self._preempt(victim)
+                if victim == slot:           # requester evicted itself
+                    break
+
     def _append(self, slot: int, handle: RequestHandle, tok: int):
         handle.append(tok)
         self._ngen[slot] += 1
@@ -451,6 +753,8 @@ class ServingEngine:
 
     def _finish(self, slot: int, handle: RequestHandle, reason: str):
         handle.finish(reason)
+        if self.kv_layout == "paged":
+            self._free_slot_pages(slot)
         self.scheduler.free(slot)
         self._active[slot] = False
 
@@ -459,26 +763,125 @@ class ServingEngine:
         decode over the slot array. Returns the number of progress events
         (admissions + slots that advanced) — admissions count, so a
         request finishing on its very first (prefill) token is not
-        mistaken for an idle engine. 0 = the engine is truly idle."""
-        admitted = self.scheduler.admit()
-        for slot, handle in admitted:
-            self._admit_one(slot, handle)
+        mistaken for an idle engine. 0 = the engine is truly idle.
+
+        Paged mode: admission packs jointly on free pages AND the FLOP
+        budget (``_page_check``); an admission that races out of pages
+        inside the batch is re-queued at the front; decode pre-allocates
+        crossing-page slots, preempting by page pressure when dry."""
+        paged = self.kv_layout == "paged"
+        if paged:
+            admitted = []
+            for slot, handle in self.scheduler.admit(
+                    page_check=self._page_check):
+                if self._admit_one_paged(slot, handle):
+                    admitted.append((slot, handle))
+                else:
+                    cost = self.scheduler.costs[slot]
+                    self.scheduler.free(slot)
+                    self.scheduler.requeue_front(handle, cost)
+        else:
+            admitted = self.scheduler.admit()
+            for slot, handle in admitted:
+                self._admit_one(slot, handle)
+        if paged:
+            self._ensure_decode_pages()       # may preempt: before `live`
         if not self._active.any():
             return len(admitted)
         live = [(s, h) for s, h in enumerate(self.scheduler.slots)
                 if h is not None and self._active[s]]
         with self._mesh_ctx():
-            self._tok, self._caches = self._step_fn(
-                self.params, self.rp, self._tok, self._caches,
-                jnp.asarray(self._t), self._live_policy,
-                jnp.asarray(self._active), jnp.asarray(self._temp),
-                jnp.asarray(self._topk), jnp.asarray(self._seeds))
+            if paged:
+                self._tok, self._caches = self._step_fn(
+                    self.params, self.rp, self._tok, self._caches,
+                    jnp.asarray(self._t), self._live_policy,
+                    jnp.asarray(self._active), jnp.asarray(self._temp),
+                    jnp.asarray(self._topk), jnp.asarray(self._seeds),
+                    jnp.asarray(self._table), jnp.asarray(self._trash))
+            else:
+                self._tok, self._caches = self._step_fn(
+                    self.params, self.rp, self._tok, self._caches,
+                    jnp.asarray(self._t), self._live_policy,
+                    jnp.asarray(self._active), jnp.asarray(self._temp),
+                    jnp.asarray(self._topk), jnp.asarray(self._seeds))
         toks = np.asarray(self._tok)
         self.scheduler.tick()
         for slot, handle in live:
             self._t[slot] += 1
             self._append(slot, handle, int(toks[slot]))
         return len(admitted) + len(live)
+
+    # ------------------------------- fork ------------------------------------
+
+    def fork(self, handle: RequestHandle,
+             max_new_tokens: Optional[int] = None,
+             seed: Optional[int] = None) -> RequestHandle:
+        """Copy-on-write fork of a RUNNING paged request: the child claims
+        a free slot on the parent's replica, shares every FULL page of the
+        parent's history by refcount, and deep-copies only the partial tail
+        page (one compiled ``copy_page_in_tree`` call — n_keep lanes kept).
+        The child continues from the parent's exact decode state: with the
+        same seed and greedy sampling its tokens bit-match an independent
+        run fed prompt + parent-output-so-far. Parent and child then
+        diverge freely — each appends into its OWN tail page."""
+        if self.kv_layout != "paged":
+            raise ValueError("fork() requires kv_layout='paged'")
+        if handle.status != "running" or handle.slot is None:
+            raise ValueError("fork() requires a running request")
+        s = handle.slot
+        r = self.scheduler.replica_of(s)
+        free = self.scheduler.free_slots_in(r)
+        if not free:
+            raise RuntimeError(f"no free slot on replica {r} to fork into")
+        req = handle.request
+        remaining = (req.max_new_tokens - len(handle.output)
+                     if max_new_tokens is None else int(max_new_tokens))
+        if remaining <= 0:
+            raise ValueError("nothing left to generate for the fork")
+        dst = self.pool.alloc(r, 1)
+        if dst is None:
+            raise RuntimeError(f"no free page on replica {r} to fork")
+        dst = dst[0]
+        cs = free[0]
+        t = int(self._t[s])
+        n_full, rem = t // self.page_size, t % self.page_size
+        row = np.full(self.pages_per_slot, -1, np.int32)
+        for i in range(n_full):
+            row[i] = self._table[s, i]
+            self.pool.incref(int(row[i]))
+        # the child's tail/append page: a copy of the parent's partial tail
+        # (rem lanes kept), or a blank pre-alloc when the tail is page-
+        # aligned (n_keep=0 masks every lane; src=dst is a no-op copy)
+        row[n_full] = dst
+        src = int(self._table[s, n_full]) if rem else dst
+        with self._mesh_ctx():
+            self._caches = self._fork_fn(self._caches, jnp.int32(src),
+                                         jnp.int32(dst), jnp.int32(rem))
+        self._table[cs] = row
+        prompt = np.concatenate([np.asarray(req.prompt, np.int32).reshape(-1),
+                                 np.asarray(handle.output, np.int32)])
+        creq = dataclasses.replace(
+            req, prompt=prompt, max_new_tokens=remaining,
+            seed=req.seed if seed is None else seed)
+        child = RequestHandle(creq, engine=self)
+        child.slot, child.status = cs, "running"
+        self.scheduler.slots[cs] = child
+        self.scheduler.costs[cs] = self.scheduler.costs[s]
+        self._tok = self._tok.at[cs].set(self._tok[s])
+        self._t[cs] = t
+        self._active[cs] = True
+        self._temp[cs] = creq.temperature
+        self._topk[cs] = creq.top_k
+        self._seeds[cs] = int(creq.seed) & 0xFFFFFFFF
+        self._ngen[cs] = 0
+        self._admit_seq[cs] = next(self._admit_counter)
+        if self._live_policy is not None:
+            pol_row = self._policy_for(req.budget if req.budget is not None
+                                       else self.default_budget)
+            with self._mesh_ctx():
+                self._live_policy = self._live_policy.set_row(
+                    jnp.int32(cs), pol_row)
+        return child
 
     # --------------------------- legacy wrapper ------------------------------
 

@@ -72,6 +72,44 @@ def test_sharding_flags_unpinned_cache_scatter():
         _mini({"w": _scatter_fixture(pin=True)}), "w") == []
 
 
+def _paged_write_fixture(pin: bool):
+    """A paged-pool append: per-slot scatter of one (K, Dh) row into the
+    (n_pages, page_size, K, Dh) float pool at a dynamic (page, offset).
+    The int32 page-TABLE update and the bool pvalid write ride along — both
+    deliberately below SHARD-CACHE-WRITE's radar (integer/rank-2
+    bookkeeping; replication is cheap, pinning would add collectives)."""
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+    def append(pool, pvalid, table, pages, offs, new, ent):
+        out = pool.at[pages, offs].set(new)
+        if pin:
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, P(("data",), None, "model", None)))
+        pv = pvalid.at[pages, offs].set(True)      # bool rank-2: exempt
+        tb = table.at[jnp.arange(2), 1].set(ent)   # int32 table: exempt
+        return out, pv, tb
+
+    return EntryPoint(append, (jnp.zeros((16, 8, 4, 32), jnp.float32),
+                               jnp.zeros((16, 8), bool),
+                               jnp.full((2, 4), -1, jnp.int32),
+                               jnp.zeros((2,), jnp.int32),
+                               jnp.zeros((2,), jnp.int32),
+                               jnp.ones((2, 4, 32), jnp.float32),
+                               jnp.zeros((2,), jnp.int32)), {})
+
+
+def test_sharding_flags_unpinned_page_pool_write():
+    """The paged-KV append pattern: the FLOAT pool scatter must be pinned
+    (one finding when it is not); the page-table / pvalid bookkeeping
+    scatters never fire regardless."""
+    finds = sharding_lint._cache_writes(
+        _mini({"w": _paged_write_fixture(pin=False)}), "w")
+    assert _rules(finds) == {"SHARD-CACHE-WRITE"}
+    assert len(finds) == 1               # table + pvalid stay silent
+    assert sharding_lint._cache_writes(
+        _mini({"w": _paged_write_fixture(pin=True)}), "w") == []
+
+
 # ------------------------------ host sync ------------------------------------
 
 def test_host_sync_flags_callbacks_and_numpy_operands():

@@ -70,6 +70,42 @@ def test_slot_scheduler_flop_packing_and_occupancy():
     assert big.admit() == []
 
 
+def test_zero_cost_requests_cannot_bypass_flop_budget():
+    """Regression: a cost-0 request (a budget fraction rounding to ~no
+    FLOPs) still occupies a decode-slot lane, so admission must charge it
+    at least MIN_COST — otherwise unbounded zero-cost rows pack into one
+    replica and the used-cost accounting reports a full replica as idle."""
+    from repro.runtime.scheduler import MIN_COST
+    sched = SlotScheduler(4, flop_budget=1.0)
+    hs = _dummy(4)
+    for h in hs:
+        sched.enqueue(h, cost=0.0)
+    sched.admit()
+    assert sched.used_cost >= 4 * MIN_COST > 0.0
+    # a preempted zero-cost continuation is floored too
+    sched.free(hs[0].slot)
+    sched.requeue_front(hs[0], 0.0)
+    assert sched.queue[0][1] == MIN_COST
+
+
+def test_admit_page_check_joint_packing():
+    """admit(page_check=...) only places requests on replicas that can
+    also page them, and a head request NO replica can page waits (FIFO —
+    it never jumps the queue)."""
+    sched = SlotScheduler(4, n_replicas=2)
+    hs = _dummy(3)
+    for h in hs:
+        sched.enqueue(h, cost=1.0)
+    # replica 0 has no pages: everything lands on replica 1
+    admitted = sched.admit(page_check=lambda h, r: r == 1)
+    assert [sched.replica_of(s) for s, _ in admitted] == [1, 1]
+    assert sched.pending == 1
+    # head request unpageable anywhere -> nobody admits (even with free
+    # slots on replica 0)
+    assert sched.admit(page_check=lambda h, r: False) == []
+    assert sched.free_slots_in(0) and sched.pending == 1
+
+
 def test_slot_scheduler_fifo_and_drop():
     sched = SlotScheduler(2)
     hs = _dummy(3)

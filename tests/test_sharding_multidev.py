@@ -246,6 +246,93 @@ print("KERNEL-SHARD-OK")
 """
 
 
+_PAGED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import ElasticConfig, get_config
+from repro.models import model_init, router_init
+from repro.runtime.elastic import make_mesh
+from repro.training import GenRequest, ServingEngine
+
+cfg = dataclasses.replace(get_config("toy-lm", "smoke"), dtype="float32")
+# dense MLP: paged mode excludes moefied experts (chunk-parity contract)
+ecfg = ElasticConfig(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+                     mha_head_topk=2, lora_rank=1)
+key = jax.random.PRNGKey(0)
+params = model_init(key, cfg, ecfg)
+rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+rng = np.random.default_rng(0)
+# FOUR distinct prompt lengths: the chunked prefill must hold ONE compile.
+# All-greedy rows: cross-mesh token parity is a GREEDY contract (the TP
+# all-reduce changes float association by ~1e-6, which gumbel-perturbed
+# sampling can amplify into a different token — same as the ring engine).
+reqs = [GenRequest(rng.integers(0, cfg.vocab_size, L, dtype=np.int32), 6,
+                   budget=b)
+        for L, b in ((5, 0.4), (13, 1.0), (16, None), (29, 0.6))]
+
+# oracle: single-device RING engine serving each request alone
+solo = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=2,
+                     max_seq=48)
+oracle = [solo.generate([r])[0] for r in reqs]
+
+# ---- paged engine, staggered admissions, 2x4 (data, model) mesh ----
+mesh = make_mesh((2, 4), ("data", "model"))
+eng = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=4,
+                    max_seq=48, mesh=mesh, kv_layout="paged", page_size=8)
+assert eng.scheduler.n_replicas == 2
+h0 = eng.submit(reqs[0])
+eng.step(); eng.step()            # r0 is 2 tokens in when r1 lands
+h1 = eng.submit(reqs[1])
+eng.step()
+h2, h3 = eng.submit(reqs[2]), eng.submit(reqs[3])
+handles = [h0, h1, h2, h3]
+while not all(h.done for h in handles):
+    assert eng.step() > 0
+assert eng.compile_counts() == {"prefill": 1, "decode": 1}, \
+    eng.compile_counts()
+# admissions spread over BOTH replicas; page ids stay replica-local
+assert {eng.scheduler.replica_of(h.slot) for h in handles} == {0, 1}
+for h, o in zip(handles, oracle):     # token-for-token vs 1-device ring
+    np.testing.assert_array_equal(np.asarray(h.output), o)
+st = eng.paged_stats()
+assert st["allocated"] == 0 and st["free"] == st["usable"], st
+print("PAGED-SPMD-PARITY-OK")
+
+# ---- prefix sharing + CoW fork still exact on the mesh ----
+pre = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+a = np.concatenate([pre, rng.integers(0, cfg.vocab_size, 4, dtype=np.int32)])
+hp = eng.submit(GenRequest(a, 8, budget=0.5))
+for _ in range(3):
+    eng.step()
+head = list(hp.output)
+hc = eng.fork(hp)
+while not (hp.done and hc.done):
+    assert eng.step() > 0
+ind = solo.generate([GenRequest(
+    np.concatenate([a, np.asarray(head, np.int32)]), 8 - len(head),
+    budget=0.5)])[0]
+np.testing.assert_array_equal(np.asarray(hc.output), ind)
+np.testing.assert_array_equal(np.asarray(hp.output[len(head):]), ind)
+assert eng.paged_stats()["allocated"] == 0
+print("PAGED-SPMD-FORK-OK")
+"""
+
+
+@pytest.mark.slow
+def test_paged_kv_spmd_parity(tmp_path):
+    """Paged-KV acceptance on the production mesh: on a 2x4 (data, model)
+    mesh the paged engine (block-paged pool, chunked prefill, per-replica
+    page ranges) is token-for-token identical to the single-device ring
+    engine across four distinct prompt lengths with ONE prefill compile,
+    and a mid-decode CoW fork bit-matches an independent run."""
+    out = _run_spmd_script(_PAGED_SCRIPT)
+    for tag in ("PAGED-SPMD-PARITY-OK", "PAGED-SPMD-FORK-OK"):
+        assert tag in out, out
+
+
 @pytest.mark.slow
 def test_sharded_serving_parity_and_live_remesh(tmp_path):
     """ISSUE 5 acceptance: on a 2x4 (data, model) mesh of 8 fake CPU
