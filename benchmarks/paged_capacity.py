@@ -13,20 +13,29 @@ peak of concurrently running slots plus page efficiency at that peak.
 A fourth scenario submits five distinct prompt lengths and records
 compile counts: the ring engine pays one prefill compile per length,
 chunked prefill keeps the paged engine at exactly {prefill: 1,
-decode: 1}.
+decode: 1}. A fifth ("quant", docs/quantization.md) replays a short-
+prompt workload through an fp32-paged and an int8-paged engine sized to
+the SAME KV byte budget: int8 pages cost ~0.28x the bytes (int8 K/V +
+f32 scale leaves), so the equal-byte pool holds ~3.5x the pages and the
+extra pages must become held slots.
 
 Emits ``BENCH_paged.json`` rows {mode, scenario, plen_mean_frac,
 kv_tokens, slots_at_capacity, capacity_ratio, pages_per_token,
-prefill_compiles, decode_compiles, tok_s} plus the harness
-`name,us_per_call,derived` lines (us_per_call = microseconds per
-generated token).
+prefill_compiles, decode_compiles, tok_s, kv_dtype, bytes_read} plus
+the harness `name,us_per_call,derived` lines (us_per_call =
+microseconds per generated token). ``bytes_read`` is the decode step's
+per-call KV-cache HBM read cost (``hloprof.cache_read_bytes`` over the
+compiled decode graph's entry params).
 
 Hard gates (CI runs this with --smoke):
   * scenarios whose prompts average <= 50% of max_seq must show
     >= 2x slots-at-capacity over ring at equal HBM;
   * the mixed-length scenario's paged engine must report exactly
     {prefill: 1, decode: 1};
-  * every paged pool must drain to zero allocated pages at the end.
+  * every paged pool must drain to zero allocated pages at the end;
+  * quant: int8 decode ``bytes_read`` <= 0.55x fp32's at equal KV token
+    capacity (both layouts), slots-at-capacity >= 1.8x fp32's at equal
+    KV HBM, and budget-1.0 greedy tokens match the fp32 engine exactly.
 
 Run: PYTHONPATH=src python benchmarks/paged_capacity.py [--smoke]
 """
@@ -46,6 +55,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import ElasticConfig, get_config
+from repro.launch.hloprof import cache_read_bytes
 from repro.models import model_init, router_init
 from repro.training import GenRequest, ServingEngine
 
@@ -67,6 +77,25 @@ SCENARIOS = [
     ("long", (49, 52, 60, 60), False),    # mean 55.25 = 86% of max_seq
 ]
 MIXED_LENS = (5, 11, 19, 27, 35)          # one prefill compile each (ring)
+QUANT_CYCLE = (9, 12, 20, 20)             # short prompts: page-limited fp32
+
+
+def kv_page_bytes(cfg, kv_dtype: str, page_size: int) -> int:
+    """HBM bytes of ONE page of one layer's K+V (+ scale leaves for
+    int8) — the unit the equal-byte quant comparison sizes pools in."""
+    K, Dh = cfg.n_kv_heads, cfg.d_head
+    per_tok = 2 * K * Dh * (1 if kv_dtype == "int8" else 4)
+    if kv_dtype == "int8":
+        per_tok += 2 * K * 4              # f32 kscale/vscale rows
+    return page_size * per_tok
+
+
+def decode_bytes_read(eng) -> int:
+    """Per-call KV-cache HBM read bytes of the engine's compiled decode
+    step (cache leaves matched among the entry params)."""
+    ep = eng.entry_points()["decode"]
+    hlo = ep.fn.lower(*ep.args, **ep.static).compile().as_text()
+    return cache_read_bytes(hlo, eng._caches)
 
 
 def make_requests(cfg, lengths, max_new, seed=0):
@@ -130,6 +159,29 @@ def main():
     n_reqs = 8 if args.smoke else 16
     scenarios = [s for s in SCENARIOS
                  if not (args.smoke and s[0] == "long")]
+    # decode-graph KV read bytes are shape-determined, identical across
+    # scenarios — measure once per layout on throwaway engines
+    br = {mode: decode_bytes_read(eng) for mode, eng in engines().items()}
+    # bandwidth gate at EQUAL TOKEN CAPACITY (same cache geometry, int8
+    # storage): the int8 pools + f32 scale leaves must read <= 0.55x the
+    # fp32 bytes per decode call — the ~0.28x the format promises, with
+    # headroom for the scale rows
+    br8 = {
+        "ring": decode_bytes_read(ServingEngine(
+            params, rp, cfg, ELASTIC, mode="infer", batch_size=B_RING,
+            max_seq=MAX_SEQ, kv_dtype="int8", weight_dtype="int8")),
+        "paged": decode_bytes_read(ServingEngine(
+            params, rp, cfg, ELASTIC, mode="infer", batch_size=B_PAGED,
+            max_seq=MAX_SEQ, kv_layout="paged", page_size=PAGE_SIZE,
+            n_pages=n_pages, kv_dtype="int8", weight_dtype="int8")),
+    }
+    for mode in sorted(br):
+        assert br8[mode] <= 0.55 * br[mode], (
+            f"{mode}: int8 decode reads {br8[mode]}B vs fp32 {br[mode]}B "
+            f"at equal KV capacity — above the 0.55x bytes_read gate "
+            f"(dequant leaking out of the kernels?)")
+        print(f"[quant] {mode} decode KV bytes_read: int8 {br8[mode]}B = "
+              f"{br8[mode] / br[mode]:.2f}x fp32 {br[mode]}B")
     rows = []
     for si, (name, cycle, gated) in enumerate(scenarios):
         lengths = [cycle[i % len(cycle)] for i in range(n_reqs)]
@@ -154,7 +206,8 @@ def main():
                          "pages_per_token": ppt,
                          "prefill_compiles": cc["prefill"],
                          "decode_compiles": cc["decode"],
-                         "tok_s": n_tok / dt})
+                         "tok_s": n_tok / dt,
+                         "kv_dtype": "fp32", "bytes_read": br[mode]})
             emit(f"paged_cap_{name}_{mode}", dt / max(n_tok, 1) * 1e6,
                  f"{peak}slots" + (f"@{ratio:.2f}x" if ratio else ""))
             if mode == "paged":
@@ -181,12 +234,57 @@ def main():
                      "pages_per_token": ppt,
                      "prefill_compiles": cc["prefill"],
                      "decode_compiles": cc["decode"],
-                     "tok_s": n_tok / dt})
+                     "tok_s": n_tok / dt,
+                     "kv_dtype": "fp32", "bytes_read": br[mode]})
         emit(f"paged_compile_{mode}", dt / max(n_tok, 1) * 1e6,
              f"prefill_compiles={cc['prefill']}")
     assert engs["ring"].compile_counts()["prefill"] == len(MIXED_LENS)
     assert engs["paged"].compile_counts() == {"prefill": 1, "decode": 1}, \
         engs["paged"].compile_counts()
+
+    # ---- quant: fp32-paged vs int8-paged at EQUAL KV HBM --------------
+    # the byte budget is 16 fp32 pages; int8 pages cost ~0.28x, so the
+    # int8 engine gets ~3.5x the page count for the same bytes
+    budget_bytes = 16 * kv_page_bytes(cfg, "fp32", PAGE_SIZE)
+    qpeaks, qbytes, qtok = {}, {}, {}
+    for kvd in ("fp32", "int8"):
+        n_pg = budget_bytes // kv_page_bytes(cfg, kvd, PAGE_SIZE) + 1
+        eng = ServingEngine(params, rp, cfg, ELASTIC, mode="infer",
+                            batch_size=B_PAGED, max_seq=MAX_SEQ,
+                            kv_layout="paged", page_size=PAGE_SIZE,
+                            n_pages=int(n_pg), kv_dtype=kvd,
+                            weight_dtype=kvd)
+        qbytes[kvd] = decode_bytes_read(eng)
+        # budget-1.0 greedy parity vs the fp32 reference engine
+        par = [GenRequest(np.random.default_rng(40 + i).integers(
+                   0, cfg.vocab_size, 12, dtype=np.int32), MAX_NEW,
+                   budget=1.0, seed=i) for i in range(4)]
+        qtok[kvd] = [np.asarray(o).tolist() for o in eng.generate(par)]
+        lengths = [QUANT_CYCLE[i % len(QUANT_CYCLE)] for i in range(24)]
+        reqs = make_requests(cfg, lengths, MAX_NEW, seed=23)
+        peak, ppt, dt, n_tok = run_engine(eng, reqs)
+        qpeaks[kvd] = peak
+        ratio = (peak / qpeaks["fp32"]) if kvd == "int8" else None
+        cc = eng.compile_counts()
+        rows.append({"mode": "paged", "scenario": "quant",
+                     "plen_mean_frac": float(np.mean(lengths)) / MAX_SEQ,
+                     "kv_tokens": int(n_pg - 1) * PAGE_SIZE,
+                     "slots_at_capacity": peak, "capacity_ratio": ratio,
+                     "pages_per_token": ppt,
+                     "prefill_compiles": cc["prefill"],
+                     "decode_compiles": cc["decode"],
+                     "tok_s": n_tok / dt,
+                     "kv_dtype": kvd, "bytes_read": qbytes[kvd]})
+        emit(f"paged_cap_quant_{kvd}", dt / max(n_tok, 1) * 1e6,
+             f"{peak}slots_{qbytes[kvd]}B")
+        st = eng.pool.stats()
+        assert st["allocated"] == 0, \
+            f"quant/{kvd}: pool leaked {st['allocated']} pages"
+    assert qtok["int8"] == qtok["fp32"], \
+        "int8 budget-1.0 greedy tokens diverge from the fp32 engine"
+    assert qpeaks["int8"] >= 1.8 * qpeaks["fp32"], (
+        f"int8-paged holds {qpeaks['int8']} slots vs fp32 "
+        f"{qpeaks['fp32']} at equal KV HBM — below the 1.8x gate")
 
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=2)

@@ -3,7 +3,9 @@
 For each budget in a sweep, lowers the toy-config train-mode forward under
 (a) the ragged capacity-bucket path and (b) the dense rank-masked reference
 path, and records per-step lowered FLOPs (XLA cost analysis — the number the
-CI FLOP gate asserts on) plus wall-clock of the jitted forward. Dense is the
+CI FLOP gate asserts on), the compiled ragged step's ``bytes_read``
+(``hloprof.bytes_moved`` — the memory-bound cost FLOPs miss), plus
+wall-clock of the jitted forward. Dense is the
 pre-refactor behavior: every budget costs full-budget compute; ragged FLOPs
 must track the budget — and, since the RoutingPlan/identity-path refactor,
 so must WALL-CLOCK (the gates at the bottom are the CI regression fence):
@@ -42,7 +44,7 @@ from common import emit, timed_median_grid  # noqa: E402
 from repro.configs.elasti_toy import toy_lm  # noqa: E402
 from repro.core.policy import ElasticPolicy, ElasticSpec, ragged_bucket  # noqa: E402
 from repro.kernels.ops import resolve_backend  # noqa: E402
-from repro.launch.hloprof import lowered_flops  # noqa: E402
+from repro.launch.hloprof import bytes_moved, lowered_flops  # noqa: E402
 from repro.models import forward, model_init, router_init  # noqa: E402
 
 BUDGETS = (1.0, 0.75, 0.5, 0.25)
@@ -115,7 +117,11 @@ def main():
                    lowered_flops(f_ragged, rp, batch, pol, bucket=bkt,
                                  static_argnames=("bucket",)),
                    lowered_flops(f_dense, rp, batch, pol,
-                                 static_argnames=("bucket",)))
+                                 static_argnames=("bucket",)),
+                   # bytes touched (reads + writes) by the compiled ragged
+                   # step — the memory-bound cost FLOPs miss
+                   bytes_moved(jit_ragged.lower(
+                       rp, batch, pol, bucket=bkt).compile().as_text()))
         cells[("ragged", b)] = (
             lambda pol=pol, bkt=bkt: jit_ragged(rp, batch, pol, bucket=bkt))
         cells[("dense", b)] = (
@@ -143,10 +149,11 @@ def main():
 
     rows = []
     for b in BUDGETS:
-        bkt, fl_r, fl_d = meta[b]
+        bkt, fl_r, fl_d, br = meta[b]
         rows.append({"budget": b, "bucket": bkt, "seq": seq,
                      "backend": backend,
                      "flops_ragged": fl_r, "flops_dense": fl_d,
+                     "bytes_read": br,
                      "us_ragged": us[("ragged", b)][0],
                      "us_dense": us[("dense", b)][0],
                      "us_ragged_med": us[("ragged", b)][1],

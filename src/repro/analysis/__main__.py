@@ -21,6 +21,14 @@ def main(argv=None) -> int:
                          "— a trivial mesh so constraint/pin rules stay "
                          "active on one device.")
     ap.add_argument("--arch", default="toy-lm")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="build the serving engines with this KV cache "
+                         "storage dtype (audits the quantized graphs)")
+    ap.add_argument("--weight-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="base weight storage dtype for the serving "
+                         "engines")
     ap.add_argument("--pass", dest="only", action="append", metavar="NAME",
                     help="run only this pass (repeatable)")
     ap.add_argument("--waive", action="append", default=[],
@@ -45,7 +53,9 @@ def main(argv=None) -> int:
     if args.mesh.lower() not in ("none", ""):
         mesh_shape = tuple(int(x) for x in args.mesh.split(","))
 
-    bundle = build_bundle(mesh_shape=mesh_shape, arch=args.arch)
+    bundle = build_bundle(mesh_shape=mesh_shape, arch=args.arch,
+                          kv_dtype=args.kv_dtype,
+                          weight_dtype=args.weight_dtype)
     report = run_all(bundle, waivers=waivers, only=args.only)
 
     if args.json == "-":

@@ -11,6 +11,15 @@
 * ``DTYPE-WIDE``: any f64/s64 value in the graph — an x64 leak (a Python
   float threading through ``np.float64`` or an enabled-x64 import order
   bug). CPU silently runs it; TPU pays a 2x emulation penalty or errors.
+* ``DTYPE-QUANT-HBM``: a large (>= 64Ki elements) int8 -> f32
+  ``convert_element_type`` in a SERVING graph. The quantization contract
+  (docs/quantization.md) is that int8 KV pages and weights dequantize
+  INSIDE the Pallas kernels, in-register after the tile load; the walker
+  skipping ``pallas_call`` sub-jaxprs is exactly that allowlist, so any
+  int8 upcast this rule can see is HBM-visible — a whole cache or weight
+  materialized at 4x its stored footprint, forfeiting the bandwidth the
+  int8 format bought. Training graphs are exempt (masters are fp32;
+  quantization is serving-only).
 """
 from __future__ import annotations
 
@@ -40,6 +49,16 @@ def _findings_for(bundle, name: str) -> List[Finding]:
                     f"{src.str_short()} -> {dst.str_short()} at "
                     f"{eqn_site(eqn)}: large activation silently widened "
                     "to f32 (2x HBM for this tensor)"))
+            if (name != "train" and str(src.dtype) == "int8"
+                    and str(dst.dtype) == "float32"
+                    and math.prod(dst.shape) >= _UPCAST_MIN_ELEMS):
+                finds.append(Finding(
+                    "DTYPE-QUANT-HBM", f"serve.{name}",
+                    f"{src.str_short()} -> {dst.str_short()} at "
+                    f"{eqn_site(eqn)}: int8 cache/weight dequantized "
+                    "OUTSIDE the kernels — HBM sees the f32 copy, "
+                    "forfeiting the 4x bandwidth win "
+                    "(docs/quantization.md)"))
         for v in eqn.outvars:
             dt = str(getattr(v.aval, "dtype", ""))
             if dt in _WIDE:

@@ -123,10 +123,15 @@ class GraphBundle:
 
 
 def build_bundle(mesh_shape=None, arch: str = "toy-lm", mode: str = "infer",
-                 max_seq: int = 48, seq_len: int = 32) -> GraphBundle:
+                 max_seq: int = 48, seq_len: int = 32,
+                 kv_dtype: str = "fp32",
+                 weight_dtype: str = "fp32") -> GraphBundle:
     """Stand up the toy-config serving + training graphs (optionally on a
     `(data, model)` mesh — works on one device with shape (1, 1), and on
-    the CI 8-fake-device job with (2, 4))."""
+    the CI 8-fake-device job with (2, 4)). ``kv_dtype``/``weight_dtype``
+    build the SERVING engines quantized (docs/quantization.md) so the
+    dtype pass can audit the int8 graphs; the train step always runs the
+    fp32 master weights."""
     cfg = _f32(get_config(arch, "smoke"))
     ecfg = get_elastic(arch, cfg)
     key = jax.random.PRNGKey(0)
@@ -138,7 +143,8 @@ def build_bundle(mesh_shape=None, arch: str = "toy-lm", mode: str = "infer",
         mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
     batch = max(2, mesh_shape[0]) if mesh_shape else 2
     engine = ServingEngine(params, rp, cfg, ecfg, mode=mode,
-                           batch_size=batch, max_seq=max_seq, mesh=mesh)
+                           batch_size=batch, max_seq=max_seq, mesh=mesh,
+                           kv_dtype=kv_dtype, weight_dtype=weight_dtype)
     # the paged-KV engine lints alongside the ring one: its chunked-prefill
     # admit and paged decode are separate compiled graphs with their own
     # donation/pin/retrace contracts. Paged mode requires a dense MLP, so
@@ -152,6 +158,7 @@ def build_bundle(mesh_shape=None, arch: str = "toy-lm", mode: str = "infer",
         paged_engine = ServingEngine(pparams, prp, cfg, pecfg, mode=mode,
                                      batch_size=batch, max_seq=max_seq,
                                      mesh=mesh, kv_layout="paged",
-                                     page_size=8)
+                                     page_size=8, kv_dtype=kv_dtype,
+                                     weight_dtype=weight_dtype)
     return GraphBundle(cfg, ecfg, params, rp, engine,
                        paged_engine=paged_engine, mesh=mesh, seq_len=seq_len)

@@ -184,6 +184,8 @@ class ElasticConfig:
     lambda_topk: float = 1.0
     routing_impl: str = "ragged"                 # ragged | gather | dense_mask
     kernel_backend: str = "auto"                 # auto | pallas | interpret | ref
+    kv_dtype: str = "fp32"                       # fp32 | bf16 | int8 (KV cache storage)
+    weight_dtype: str = "fp32"                   # fp32 | bf16 | int8 (base weights)
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0

@@ -73,6 +73,13 @@ class ElasticSpec:
     # jnp references/twins (fast CPU path), "auto" = pallas on TPU, ref
     # elsewhere. Static: changing it recompiles (it swaps the HLO).
     kernel_backend: str = "auto"       # auto | pallas | interpret | ref
+    # Serving storage widths (docs/quantization.md). "fp32" = native config
+    # dtype (no quantization); "int8" stores symmetric int8 with f32 scale
+    # sibling leaves (KV: per (token, kv-head); weights: per output
+    # channel), dequantized in-register inside the Pallas kernels. Static:
+    # they shape the cache pytree and the HLO, never traced.
+    kv_dtype: str = "fp32"             # fp32 | bf16 | int8
+    weight_dtype: str = "fp32"         # fp32 | bf16 | int8
 
     def applies_to_layer(self, idx: int) -> bool:
         return self.layers == "all" or idx % 2 == 0
@@ -195,6 +202,8 @@ def spec_from_config(ecfg) -> ElasticSpec:
         lambda_topk=ecfg.lambda_topk,
         routing_impl=ecfg.routing_impl,
         kernel_backend=getattr(ecfg, "kernel_backend", "auto"),
+        kv_dtype=getattr(ecfg, "kv_dtype", "fp32"),
+        weight_dtype=getattr(ecfg, "weight_dtype", "fp32"),
     )
 
 

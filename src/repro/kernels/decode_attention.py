@@ -53,8 +53,9 @@ def analysis_example():
             dict(kv_valid=valid, interpret=True))
 
 
-def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, o_ref,
-            m_sc, l_sc, acc_sc, *, window: int, sm_scale: float, n_kb: int):
+def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, ks_ref, vs_ref,
+            o_ref, m_sc, l_sc, acc_sc, *, window: int, sm_scale: float,
+            n_kb: int):
     ib = pl.program_id(0)
     ik = pl.program_id(2)
     t = t_ref[ib]
@@ -67,6 +68,10 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, o_ref,
 
     q = q_ref[0, 0].astype(jnp.float32)                  # (1, d)
     k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    if ks_ref is not None:
+        # int8 cache: widen in-register, per-(slot, kv-head) f32 scale —
+        # HBM only ever saw the int8 tile (docs/quantization.md)
+        k = k * ks_ref[0, 0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     s = s * sm_scale                                      # (1, bk)
@@ -84,6 +89,8 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, o_ref,
     l_sc[:, 0] = l_sc[:, 0] * alpha + jnp.sum(p, axis=1)
     m_sc[:, 0] = m_new
     v = v_ref[0, 0].astype(jnp.float32)
+    if vs_ref is not None:
+        v = v * vs_ref[0, 0][:, None]
     v = jnp.where(mask[0][:, None], v, 0.0)   # masked rows: 0 * NaN guard
     acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot(
         p, v, preferred_element_type=jnp.float32)
@@ -95,15 +102,18 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref, o_ref,
 
 
 def decode_attention(q, k, v, kv_pos, t, *, window: int = 0, kv_valid=None,
-                     block_k: int = 128, sm_scale: float | None = None,
+                     kscale=None, vscale=None, block_k: int = 128,
+                     sm_scale: float | None = None,
                      interpret: bool = False):
     """q: (B, 1, H, Dh); k, v: (B, L, K, Dh) ring caches; kv_pos: (B, L)
     i32 absolute positions (-1 = empty slot); t: (B,) i32 per-slot decode
-    positions; kv_valid: (B, L) bool (routing validity). Returns
-    (B, 1, H, Dh)."""
+    positions; kv_valid: (B, L) bool (routing validity); kscale/vscale:
+    (B, L, K) f32 per-(slot, kv-head) dequant scales when k/v are int8
+    (both or neither). Returns (B, 1, H, Dh)."""
     B, Sq, H, Dh = q.shape
     L, K = k.shape[1], k.shape[2]
     G = H // K
+    quantized = kscale is not None
     sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
     bk = min(block_k, L)
     nkb = pl.cdiv(L, bk)
@@ -117,6 +127,9 @@ def decode_attention(q, k, v, kv_pos, t, *, window: int = 0, kv_valid=None,
         k, v = jnp.pad(k, padw), jnp.pad(v, padw)
         if kv_valid is not None:
             kv_valid = jnp.pad(kv_valid, [(0, 0), (0, pad)])
+        if quantized:
+            kscale = jnp.pad(kscale, [(0, 0), (0, pad), (0, 0)])
+            vscale = jnp.pad(vscale, [(0, 0), (0, pad), (0, 0)])
 
     qt = q.transpose(0, 2, 1, 3)                          # (B,H,1,Dh)
     kt = k.transpose(0, 2, 1, 3)                          # (B,K,L,Dh)
@@ -131,13 +144,24 @@ def decode_attention(q, k, v, kv_pos, t, *, window: int = 0, kv_valid=None,
         pl.BlockSpec((1, bk), lambda b, h, j, *_: (b, j)),
     ]
     args = [qt, kt, vt, pos]
-    if kv_valid is not None:
+    have_valid = kv_valid is not None
+    if have_valid:
         in_specs.append(pl.BlockSpec((1, bk), lambda b, h, j, *_: (b, j)))
         args.append(kv_valid.astype(jnp.int32))
-        kfn = kernel
-    else:
-        kfn = lambda t_ref, q_ref, k_ref, v_ref, pos_ref, *rest: \
-            kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, None, *rest)
+    if quantized:
+        # scales ride as regular VMEM blocks, head-major like k/v
+        sspec = pl.BlockSpec((1, 1, bk), lambda b, h, j, *_: (b, h // G, j))
+        in_specs += [sspec, sspec]
+        args += [kscale.astype(jnp.float32).transpose(0, 2, 1),
+                 vscale.astype(jnp.float32).transpose(0, 2, 1)]
+
+    def kfn(t_ref, q_ref, k_ref, v_ref, pos_ref, *rest):
+        rs = list(rest)
+        valid_ref = rs.pop(0) if have_valid else None
+        ks_ref = rs.pop(0) if quantized else None
+        vs_ref = rs.pop(0) if quantized else None
+        return kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, valid_ref,
+                      ks_ref, vs_ref, *rs)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

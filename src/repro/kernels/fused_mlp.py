@@ -77,18 +77,32 @@ def analysis_example_routed():
             dict(valid_count=cnt, interpret=True))
 
 
-def _ffn_block(x, wi_ref, wg_ref, *, act: str):
-    hi = jax.lax.dot(x, wi_ref[...].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
+def _ffn_block(x, wi_ref, wg_ref, wis_ref=None, wgs_ref=None, *, act: str):
+    wi = wi_ref[...].astype(jnp.float32)
+    if wis_ref is not None:
+        # int8 weights: widen in-register, per-output-channel f32 scale —
+        # HBM only ever saw the int8 tile (docs/quantization.md)
+        wi = wi * wis_ref[0][None, :]
+    hi = jax.lax.dot(x, wi, preferred_element_type=jnp.float32)
     if wg_ref is not None:
-        hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
+        wg = wg_ref[...].astype(jnp.float32)
+        if wgs_ref is not None:
+            wg = wg * wgs_ref[0][None, :]
+        hg = jax.lax.dot(x, wg, preferred_element_type=jnp.float32)
         a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
         return a * hi
     return jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
 
 
-def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
+def _dq_wo(wo_ref, wos_ref):
+    wo = wo_ref[...].astype(jnp.float32)
+    if wos_ref is not None:
+        wo = wo * wos_ref[0][None, :]
+    return wo
+
+
+def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, wis_ref,
+            wgs_ref, wos_ref, o_ref, acc_sc, *,
             act: str, n_fb: int, weighted: bool, block_t: int):
     ib = pl.program_id(0)
     it = pl.program_id(1)
@@ -108,8 +122,8 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
 
         x = x_ref[0].astype(jnp.float32)                       # (bt, D)
         acc_sc[...] += jax.lax.dot(
-            _ffn_block(x, wi_ref, wg_ref, act=act),
-            wo_ref[...].astype(jnp.float32),
+            _ffn_block(x, wi_ref, wg_ref, wis_ref, wgs_ref, act=act),
+            _dq_wo(wo_ref, wos_ref),
             preferred_element_type=jnp.float32)
 
         @pl.when(jf == n_fb - 1)
@@ -125,11 +139,14 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref, o_ref, acc_sc, *,
 
 def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
               block_t: int = 256, block_f: int = 512, valid_count=None,
+              wi_scale=None, wo_scale=None, wg_scale=None,
               interpret: bool = False):
     """x: (T, D) or (B, T, D); wi/wg: (D, F); wo: (F, D); token_weights:
     (T,) / (B, T) or None; valid_count: traced/static count of real leading
     rows — scalar or per-row (B,); None = T. Rows >= the count produce
-    zeros and their tiles are skipped. Returns x-shaped output."""
+    zeros and their tiles are skipped. wi_scale/wg_scale: (F,) and
+    wo_scale: (D,) f32 per-output-channel dequant scales when the weights
+    are int8. Returns x-shaped output."""
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]
@@ -149,6 +166,8 @@ def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
     cnt = jnp.clip(jnp.asarray(
         T if valid_count is None else valid_count, jnp.int32), 0, T)
     cnt = jnp.broadcast_to(cnt.reshape(-1), (B,))
+    have_g = wg is not None
+    qw = wi_scale is not None
 
     kernel = functools.partial(_kernel, act=act, n_fb=nf,
                                weighted=token_weights is not None,
@@ -158,18 +177,36 @@ def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
         pl.BlockSpec((D, bf), lambda b, i, j, *_: (0, j)),
     ]
     args = [x, wi]
-    if wg is not None:
+    if have_g:
         in_specs.append(pl.BlockSpec((D, bf), lambda b, i, j, *_: (0, j)))
         args.append(wg)
-        kfn = kernel
-    else:
-        kfn = lambda cnt_ref, x_ref, wi_ref, wo_ref, tw_ref, o_ref, acc: \
-            kernel(cnt_ref, x_ref, wi_ref, None, wo_ref, tw_ref, o_ref, acc)
     in_specs += [
         pl.BlockSpec((bf, D), lambda b, i, j, *_: (j, 0)),
         pl.BlockSpec((1, bt, 128), lambda b, i, j, *_: (b, i, 0)),
     ]
     args += [wo, tw]
+    if qw:
+        # per-output-channel scale rows as (1, F)/(1, D) VMEM blocks
+        fspec = pl.BlockSpec((1, bf), lambda b, i, j, *_: (0, j))
+        dspec = pl.BlockSpec((1, D), lambda b, i, j, *_: (0, 0))
+        in_specs.append(fspec)
+        args.append(wi_scale.astype(jnp.float32).reshape(1, F))
+        if have_g:
+            in_specs.append(fspec)
+            args.append(wg_scale.astype(jnp.float32).reshape(1, F))
+        in_specs.append(dspec)
+        args.append(wo_scale.astype(jnp.float32).reshape(1, D))
+
+    def kfn(cnt_ref, x_ref, *rest):
+        rs = list(rest)
+        wi_ref = rs.pop(0)
+        wg_ref = rs.pop(0) if have_g else None
+        wo_ref, tw_ref = rs.pop(0), rs.pop(0)
+        wis_ref = rs.pop(0) if qw else None
+        wgs_ref = rs.pop(0) if (qw and have_g) else None
+        wos_ref = rs.pop(0) if qw else None
+        return kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref,
+                      wis_ref, wgs_ref, wos_ref, *rs)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -190,7 +227,8 @@ def fused_mlp(x, wi, wo, wg=None, token_weights=None, *, act: str = "swiglu",
 
 
 def _routed_kernel(cnt_ref, idx_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref,
-                   o_ref, acc_sc, *, act: str, n_fb: int):
+                   wis_ref, wgs_ref, wos_ref, o_ref, acc_sc, *,
+                   act: str, n_fb: int):
     ib = pl.program_id(0)
     it = pl.program_id(1)
     jf = pl.program_id(2)
@@ -209,8 +247,8 @@ def _routed_kernel(cnt_ref, idx_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref,
 
         x = x_ref[0].astype(jnp.float32)                        # (1, D)
         acc_sc[...] += jax.lax.dot(
-            _ffn_block(x, wi_ref, wg_ref, act=act),
-            wo_ref[...].astype(jnp.float32),
+            _ffn_block(x, wi_ref, wg_ref, wis_ref, wgs_ref, act=act),
+            _dq_wo(wo_ref, wos_ref),
             preferred_element_type=jnp.float32)
 
         @pl.when(jf == n_fb - 1)
@@ -222,7 +260,8 @@ def _routed_kernel(cnt_ref, idx_ref, x_ref, wi_ref, wg_ref, wo_ref, tw_ref,
 
 def fused_mlp_routed(x, idx, wi, wo, wg=None, token_weights=None, *,
                      act: str = "swiglu", block_f: int = 512,
-                     valid_count=None, interpret: bool = False):
+                     valid_count=None, wi_scale=None, wo_scale=None,
+                     wg_scale=None, interpret: bool = False):
     """Index-prefetch gather/scatter-fused routed MLP.
 
     x: (B, S, D) FULL residual-stream input; idx: (B, Kb) i32 RoutingPlan
@@ -253,6 +292,8 @@ def fused_mlp_routed(x, idx, wi, wo, wg=None, token_weights=None, *,
         Kb if valid_count is None else valid_count, jnp.int32), 0, Kb)
     cnt = jnp.broadcast_to(cnt.reshape(-1), (B,))
     idx = jnp.clip(idx.astype(jnp.int32), 0, S - 1)
+    have_g = wg is not None
+    qw = wi_scale is not None
 
     kernel = functools.partial(_routed_kernel, act=act, n_fb=nf)
     # x gather happens IN THE INDEX MAP: block (1,1,D) at row idx[b, t]
@@ -262,19 +303,36 @@ def fused_mlp_routed(x, idx, wi, wo, wg=None, token_weights=None, *,
         pl.BlockSpec((D, bf), lambda b, t, j, *_: (0, j)),
     ]
     args = [x, wi]
-    if wg is not None:
+    if have_g:
         in_specs.append(pl.BlockSpec((D, bf), lambda b, t, j, *_: (0, j)))
         args.append(wg)
-        kfn = kernel
-    else:
-        kfn = lambda cnt_ref, idx_ref, x_ref, wi_ref, wo_ref, tw_ref, o_ref, \
-            acc: kernel(cnt_ref, idx_ref, x_ref, wi_ref, None, wo_ref,
-                        tw_ref, o_ref, acc)
     in_specs += [
         pl.BlockSpec((bf, D), lambda b, t, j, *_: (j, 0)),
         pl.BlockSpec((1, 1, 1, 1), lambda b, t, j, *_: (b, t, 0, 0)),
     ]
     args += [wo, tw]
+    if qw:
+        # per-output-channel scale rows as (1, F)/(1, D) VMEM blocks
+        fspec = pl.BlockSpec((1, bf), lambda b, t, j, *_: (0, j))
+        dspec = pl.BlockSpec((1, D), lambda b, t, j, *_: (0, 0))
+        in_specs.append(fspec)
+        args.append(wi_scale.astype(jnp.float32).reshape(1, F))
+        if have_g:
+            in_specs.append(fspec)
+            args.append(wg_scale.astype(jnp.float32).reshape(1, F))
+        in_specs.append(dspec)
+        args.append(wo_scale.astype(jnp.float32).reshape(1, D))
+
+    def kfn(cnt_ref, idx_ref, x_ref, *rest):
+        rs = list(rest)
+        wi_ref = rs.pop(0)
+        wg_ref = rs.pop(0) if have_g else None
+        wo_ref, tw_ref = rs.pop(0), rs.pop(0)
+        wis_ref = rs.pop(0) if qw else None
+        wgs_ref = rs.pop(0) if (qw and have_g) else None
+        wos_ref = rs.pop(0) if qw else None
+        return kernel(cnt_ref, idx_ref, x_ref, wi_ref, wg_ref, wo_ref,
+                      tw_ref, wis_ref, wgs_ref, wos_ref, *rs)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

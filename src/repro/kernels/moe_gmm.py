@@ -46,8 +46,8 @@ def analysis_example():
             dict(group_counts=cnt, interpret=True))
 
 
-def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
-            act: str, n_fb: int, block_c: int):
+def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, wis_ref, wgs_ref,
+            wos_ref, o_ref, acc_sc, *, act: str, n_fb: int, block_c: int):
     ib = pl.program_id(0)
     ie = pl.program_id(1)
     ic = pl.program_id(2)
@@ -66,16 +66,25 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
             acc_sc[...] = jnp.zeros_like(acc_sc)
 
         x = x_ref[0, 0].astype(jnp.float32)                    # (bc, D)
-        hi = jax.lax.dot(x, wi_ref[0].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
+        wi = wi_ref[0].astype(jnp.float32)
+        if wis_ref is not None:
+            # int8 expert weights: widen in-register, per-(expert, output
+            # channel) f32 scale — HBM only ever saw the int8 tile
+            wi = wi * wis_ref[0, 0][None, :]
+        hi = jax.lax.dot(x, wi, preferred_element_type=jnp.float32)
         if wg_ref is not None:
-            hg = jax.lax.dot(x, wg_ref[0].astype(jnp.float32),
-                             preferred_element_type=jnp.float32)
+            wg = wg_ref[0].astype(jnp.float32)
+            if wgs_ref is not None:
+                wg = wg * wgs_ref[0, 0][None, :]
+            hg = jax.lax.dot(x, wg, preferred_element_type=jnp.float32)
             a = jax.nn.silu(hg) if act == "swiglu" else jax.nn.gelu(hg)
             h = a * hi
         else:
             h = jax.nn.gelu(hi) if act == "gelu" else jax.nn.silu(hi)
-        acc_sc[...] += jax.lax.dot(h, wo_ref[0].astype(jnp.float32),
+        wo = wo_ref[0].astype(jnp.float32)
+        if wos_ref is not None:
+            wo = wo * wos_ref[0, 0][None, :]
+        acc_sc[...] += jax.lax.dot(h, wo,
                                    preferred_element_type=jnp.float32)
 
         @pl.when(jf == n_fb - 1)
@@ -89,13 +98,16 @@ def _kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref, o_ref, acc_sc, *,
 
 def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
             block_c: int = 128, block_f: int = 512, group_counts=None,
+            wi_scale=None, wo_scale=None, wg_scale=None,
             interpret: bool = False):
     """x: (E, C, D) or batched (B, E, C, D) dispatched tokens; wi/wg:
     (E, D, Fe); wo: (E, Fe, D) — expert weights are shared across the batch
     dim; weights: (E, C) / (B, E, C) routing weights (0 for empty capacity
     slots); group_counts: (E,) / (B, E) per-expert count of real leading
     slots (None = C) — slots >= the count produce zeros and their tiles are
-    skipped. Returns x-shaped output."""
+    skipped. wi_scale/wg_scale: (E, Fe) and wo_scale: (E, D) f32
+    per-(expert, output-channel) dequant scales when the weights are int8.
+    Returns x-shaped output."""
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
@@ -112,6 +124,8 @@ def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
     cnt = (jnp.full((B, E), C, jnp.int32) if group_counts is None
            else jnp.clip(jnp.asarray(group_counts, jnp.int32), 0, C))
     cnt = jnp.broadcast_to(cnt, (B, E))
+    have_g = wg is not None
+    qw = wi_scale is not None
 
     kernel = functools.partial(_kernel, act=act, n_fb=nf, block_c=bc)
     in_specs = [
@@ -119,19 +133,37 @@ def moe_gmm(x, wi, wo, wg=None, weights=None, *, act: str = "swiglu",
         pl.BlockSpec((1, D, bf), lambda b, e, i, j, *_: (e, 0, j)),
     ]
     args = [x, wi]
-    if wg is not None:
+    if have_g:
         in_specs.append(
             pl.BlockSpec((1, D, bf), lambda b, e, i, j, *_: (e, 0, j)))
         args.append(wg)
-        kfn = kernel
-    else:
-        kfn = lambda cnt_ref, x_ref, wi_ref, wo_ref, w_ref, o_ref, acc: \
-            kernel(cnt_ref, x_ref, wi_ref, None, wo_ref, w_ref, o_ref, acc)
     in_specs += [
         pl.BlockSpec((1, bf, D), lambda b, e, i, j, *_: (e, j, 0)),
         pl.BlockSpec((1, 1, bc, 128), lambda b, e, i, j, *_: (b, e, i, 0)),
     ]
     args += [wo, w]
+    if qw:
+        # per-(expert, output-channel) scale rows as (E,1,Fe)/(E,1,D) blocks
+        fspec = pl.BlockSpec((1, 1, bf), lambda b, e, i, j, *_: (e, 0, j))
+        dspec = pl.BlockSpec((1, 1, D), lambda b, e, i, j, *_: (e, 0, 0))
+        in_specs.append(fspec)
+        args.append(wi_scale.astype(jnp.float32).reshape(E, 1, Fe))
+        if have_g:
+            in_specs.append(fspec)
+            args.append(wg_scale.astype(jnp.float32).reshape(E, 1, Fe))
+        in_specs.append(dspec)
+        args.append(wo_scale.astype(jnp.float32).reshape(E, 1, D))
+
+    def kfn(cnt_ref, x_ref, *rest):
+        rs = list(rest)
+        wi_ref = rs.pop(0)
+        wg_ref = rs.pop(0) if have_g else None
+        wo_ref, w_ref = rs.pop(0), rs.pop(0)
+        wis_ref = rs.pop(0) if qw else None
+        wgs_ref = rs.pop(0) if (qw and have_g) else None
+        wos_ref = rs.pop(0) if qw else None
+        return kernel(cnt_ref, x_ref, wi_ref, wg_ref, wo_ref, w_ref,
+                      wis_ref, wgs_ref, wos_ref, *rs)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

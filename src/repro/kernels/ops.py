@@ -146,12 +146,21 @@ _fused_mlp_op.defvjp(_fused_mlp_vjp_fwd, _fused_mlp_vjp_bwd)
 
 
 @partial(jax.jit, static_argnames=("act", "force_pallas", "backend"))
-def fused_mlp(x, wi, wo, wg=None, token_weights=None, valid_count=None, *,
+def fused_mlp(x, wi, wo, wg=None, token_weights=None, valid_count=None,
+              wi_scale=None, wo_scale=None, wg_scale=None, *,
               act="swiglu", force_pallas=False, backend=None):
     kb = "pallas" if force_pallas else resolve_backend(backend)
     if kb == "ref":
         return ref.fused_mlp_ref(x, wi, wo, wg, token_weights, act=act,
-                                 valid_count=valid_count)
+                                 valid_count=valid_count, wi_scale=wi_scale,
+                                 wo_scale=wo_scale, wg_scale=wg_scale)
+    if wi_scale is not None:
+        # int8 weights are a serving-only configuration (never
+        # differentiated), so the quantized path skips the custom VJP
+        return _fused_mlp_mod.fused_mlp(
+            x, wi, wo, wg, token_weights, act=act, valid_count=valid_count,
+            wi_scale=wi_scale, wo_scale=wo_scale, wg_scale=wg_scale,
+            interpret=_interp(kb))
     return _fused_mlp_op(act, kb, x, wi, wo, wg, token_weights, valid_count)
 
 
@@ -194,14 +203,24 @@ _fused_mlp_routed_op.defvjp(_fused_mlp_routed_vjp_fwd,
 
 @partial(jax.jit, static_argnames=("act", "force_pallas", "backend"))
 def fused_mlp_routed(x, idx, wi, wo, wg=None, token_weights=None,
-                     valid_count=None, *, act="swiglu", force_pallas=False,
+                     valid_count=None, wi_scale=None, wo_scale=None,
+                     wg_scale=None, *, act="swiglu", force_pallas=False,
                      backend=None):
     """Gather/scatter-fused routed MLP: x (B,S,D) full stream, idx (B,Kb)
     RoutingPlan indices; returns the (B,S,D) delta (see fused_mlp.py)."""
     kb = "pallas" if force_pallas else resolve_backend(backend)
     if kb == "ref":
         return ref.fused_mlp_routed_ref(x, idx, wi, wo, wg, token_weights,
-                                        act=act, valid_count=valid_count)
+                                        act=act, valid_count=valid_count,
+                                        wi_scale=wi_scale,
+                                        wo_scale=wo_scale,
+                                        wg_scale=wg_scale)
+    if wi_scale is not None:
+        # serving-only int8 path: no VJP (see fused_mlp above)
+        return _fused_mlp_mod.fused_mlp_routed(
+            x, idx, wi, wo, wg, token_weights, act=act,
+            valid_count=valid_count, wi_scale=wi_scale, wo_scale=wo_scale,
+            wg_scale=wg_scale, interpret=_interp(kb))
     return _fused_mlp_routed_op(act, kb, x, idx, wi, wo, wg, token_weights,
                                 valid_count)
 
@@ -241,43 +260,58 @@ _moe_gmm_op.defvjp(_moe_gmm_vjp_fwd, _moe_gmm_vjp_bwd)
 
 
 @partial(jax.jit, static_argnames=("act", "force_pallas", "backend"))
-def moe_gmm(x, wi, wo, wg=None, weights=None, group_counts=None, *,
+def moe_gmm(x, wi, wo, wg=None, weights=None, group_counts=None,
+            wi_scale=None, wo_scale=None, wg_scale=None, *,
             act="swiglu", force_pallas=False, backend=None):
     kb = "pallas" if force_pallas else resolve_backend(backend)
     if kb == "ref":
         return ref.moe_gmm_ref(x, wi, wo, wg, weights, act=act,
-                               group_counts=group_counts)
+                               group_counts=group_counts, wi_scale=wi_scale,
+                               wo_scale=wo_scale, wg_scale=wg_scale)
+    if wi_scale is not None:
+        # serving-only int8 path: no VJP (see fused_mlp above)
+        return _moe_gmm_mod.moe_gmm(
+            x, wi, wo, wg, weights, act=act, group_counts=group_counts,
+            wi_scale=wi_scale, wo_scale=wo_scale, wg_scale=wg_scale,
+            interpret=_interp(kb))
     return _moe_gmm_op(act, kb, x, wi, wo, wg, weights, group_counts)
 
 
 # ----------------------------- decode attention ------------------------------
 
 @partial(jax.jit, static_argnames=("window", "force_pallas", "backend"))
-def decode_attention(q, k, v, kv_pos, t, kv_valid=None, *, window=0,
-                     force_pallas=False, backend=None):
+def decode_attention(q, k, v, kv_pos, t, kv_valid=None, kscale=None,
+                     vscale=None, *, window=0, force_pallas=False,
+                     backend=None):
     """Ring-cache decode attention (see kernels/decode_attention.py).
+    kscale/vscale: (B, L, K) f32 dequant scales for int8 k/v caches.
     Inference-only: no VJP (decode is never differentiated)."""
     kb = "pallas" if force_pallas else resolve_backend(backend)
     if kb == "ref":
         return ref.decode_attention_ref(q, k, v, kv_pos, t, window=window,
-                                        kv_valid=kv_valid)
+                                        kv_valid=kv_valid, kscale=kscale,
+                                        vscale=vscale)
     return _decode_mod.decode_attention(q, k, v, kv_pos, t, window=window,
-                                        kv_valid=kv_valid,
+                                        kv_valid=kv_valid, kscale=kscale,
+                                        vscale=vscale,
                                         interpret=_interp(kb))
 
 
 # -------------------------- paged decode attention ---------------------------
 
 @partial(jax.jit, static_argnames=("force_pallas", "backend"))
-def paged_decode_attention(q, kp, vp, table, t, pvalid, *,
-                           force_pallas=False, backend=None):
+def paged_decode_attention(q, kp, vp, table, t, pvalid, kscale=None,
+                           vscale=None, *, force_pallas=False, backend=None):
     """Paged-pool decode attention (see kernels/paged_decode_attention.py).
+    kscale/vscale: (N, ps, K) f32 dequant scale pools for int8 kp/vp.
     Inference-only: no VJP (decode is never differentiated)."""
     kb = "pallas" if force_pallas else resolve_backend(backend)
     if kb == "ref":
-        return ref.paged_decode_attention_ref(q, kp, vp, table, t, pvalid)
+        return ref.paged_decode_attention_ref(q, kp, vp, table, t, pvalid,
+                                              kscale=kscale, vscale=vscale)
     return _paged_decode_mod.paged_decode_attention(
-        q, kp, vp, table, t, pvalid, interpret=_interp(kb))
+        q, kp, vp, table, t, pvalid, kscale=kscale, vscale=vscale,
+        interpret=_interp(kb))
 
 
 # --------------------------- SPMD kernel wrappers -----------------------------
@@ -303,12 +337,14 @@ def _mesh_layout(mesh):
 
 
 def decode_attention_sharded(q, k, v, kv_pos, t, kv_valid, *, window=0,
-                             backend=None, mesh=None):
+                             backend=None, mesh=None, kscale=None,
+                             vscale=None):
     """Ring-cache decode kernel, one grid PER SHARD: q heads and kv heads
     shard over `model`, batch (serving slots) over the data axes. Per-head
     attention has no cross-head contraction, so no collective is needed —
     the output stays head-sharded and the caller's wo projection reduces it
-    under GSPMD. Requires Hp % model == 0 and K % model == 0 (each shard's
+    under GSPMD. Scale leaves (int8 caches) shard like k/v minus the Dh
+    axis. Requires Hp % model == 0 and K % model == 0 (each shard's
     local head->kv-group mapping is then exact); anything else, or a
     ref/trivial-mesh call, falls back to the plain entry point."""
     from jax.sharding import PartitionSpec as P
@@ -319,28 +355,36 @@ def decode_attention_sharded(q, k, v, kv_pos, t, kv_valid, *, window=0,
     K = k.shape[2]
     if (mesh is None or kb == "ref" or (d <= 1 and m <= 1)
             or Hp % m or K % m or B % d):
-        return decode_attention(q, k, v, kv_pos, t, kv_valid,
-                                window=window, backend=backend)
+        return decode_attention(q, k, v, kv_pos, t, kv_valid, kscale,
+                                vscale, window=window, backend=backend)
     bx = ba if d > 1 else None
     # data-only meshes still shard the batch; `model` may be absent/size-1
     md = "model" if "model" in mesh.axis_names else None
+    quantized = kscale is not None
 
-    def body(q, k, v, kv_pos, t, kv_valid):
+    def body(q, k, v, kv_pos, t, kv_valid, *scales):
+        ks, vs = scales if quantized else (None, None)
         return _decode_mod.decode_attention(q, k, v, kv_pos, t,
                                             window=window, kv_valid=kv_valid,
+                                            kscale=ks, vscale=vs,
                                             interpret=_interp(kb))
 
+    in_specs = (P(bx, None, md, None), P(bx, None, md, None),
+                P(bx, None, md, None), P(bx, None), P(bx),
+                P(bx, None))
+    args = (q, k, v, kv_pos, t, kv_valid)
+    if quantized:
+        in_specs += (P(bx, None, md), P(bx, None, md))
+        args += (kscale, vscale)
     return SH.shard_map_compat(
-        body, mesh=mesh,
-        in_specs=(P(bx, None, md, None), P(bx, None, md, None),
-                  P(bx, None, md, None), P(bx, None), P(bx),
-                  P(bx, None)),
+        body, mesh=mesh, in_specs=in_specs,
         out_specs=P(bx, None, md, None),
-    )(q, k, v, kv_pos, t, kv_valid)
+    )(*args)
 
 
 def paged_decode_attention_sharded(q, kp, vp, table, t, pvalid, *,
-                                   backend=None, mesh=None):
+                                   backend=None, mesh=None, kscale=None,
+                                   vscale=None):
     """Paged-pool decode kernel, one grid PER SHARD: kv heads shard over
     `model`, and the POOL's page axis shards over the data axes alongside
     the slot batch — replica locality (the serving engine only hands a
@@ -359,13 +403,15 @@ def paged_decode_attention_sharded(q, kp, vp, table, t, pvalid, *,
     N, K = kp.shape[0], kp.shape[2]
     if (mesh is None or kb == "ref" or (d <= 1 and m <= 1)
             or Hp % m or K % m or B % d or N % d):
-        return paged_decode_attention(q, kp, vp, table, t, pvalid,
-                                      backend=backend)
+        return paged_decode_attention(q, kp, vp, table, t, pvalid, kscale,
+                                      vscale, backend=backend)
     bx = ba if d > 1 else None
     md = "model" if "model" in mesh.axis_names else None
     pages_per_shard = N // d
+    quantized = kscale is not None
 
-    def body(q, kp, vp, table, t, pvalid):
+    def body(q, kp, vp, table, t, pvalid, *scales):
+        ks, vs = scales if quantized else (None, None)
         if bx is not None:
             ridx = 0
             for ax in bx:
@@ -373,20 +419,28 @@ def paged_decode_attention_sharded(q, kp, vp, table, t, pvalid, *,
             table = jnp.where(table >= 0,
                               table - ridx * pages_per_shard, -1)
         return _paged_decode_mod.paged_decode_attention(
-            q, kp, vp, table, t, pvalid, interpret=_interp(kb))
+            q, kp, vp, table, t, pvalid, kscale=ks, vscale=vs,
+            interpret=_interp(kb))
 
+    in_specs = (P(bx, None, md, None), P(bx, None, md, None),
+                P(bx, None, md, None), P(bx, None), P(bx),
+                P(bx, None))
+    args = (q, kp, vp, table, t, pvalid)
+    if quantized:
+        # scale pools shard like the KV pool minus the Dh axis: pages over
+        # the data axes, kv-heads over `model`
+        in_specs += (P(bx, None, md), P(bx, None, md))
+        args += (kscale, vscale)
     return SH.shard_map_compat(
-        body, mesh=mesh,
-        in_specs=(P(bx, None, md, None), P(bx, None, md, None),
-                  P(bx, None, md, None), P(bx, None), P(bx),
-                  P(bx, None)),
+        body, mesh=mesh, in_specs=in_specs,
         out_specs=P(bx, None, md, None),
-    )(q, kp, vp, table, t, pvalid)
+    )(*args)
 
 
 def fused_mlp_routed_sharded(x, idx, wi, wo, wg=None, token_weights=None,
                              valid_count=None, *, act="swiglu", backend=None,
-                             mesh=None):
+                             mesh=None, wi_scale=None, wo_scale=None,
+                             wg_scale=None):
     """Gather/scatter-fused routed MLP with the FFN dim sharded over
     `model` (the dense-MLP TP rules: wi/wg (D, F/m), wo (F/m, D)): each
     shard runs the index-prefetch kernel on its slice — the RoutingPlan's
@@ -407,9 +461,11 @@ def fused_mlp_routed_sharded(x, idx, wi, wo, wg=None, token_weights=None,
     if (mesh is None or kb == "ref" or (d <= 1 and m <= 1)
             or F % m or B % d):
         return fused_mlp_routed(x, idx, wi, wo, wg, token_weights,
-                                valid_count, act=act, backend=backend)
+                                valid_count, wi_scale, wo_scale, wg_scale,
+                                act=act, backend=backend)
     bx = ba if d > 1 else None
     md = ("model" if m > 1 and "model" in mesh.axis_names else None)
+    qw = wi_scale is not None
     args = [x, idx, wi, wo]
     specs = [P(bx, None, None), P(bx, None), P(None, md),
              P(md, None)]
@@ -427,13 +483,34 @@ def fused_mlp_routed_sharded(x, idx, wi, wo, wg=None, token_weights=None,
     if valid_count is not None:
         args.append(valid_count)
         specs.append(P(bx) if getattr(valid_count, "ndim", 0) else P())
+    if qw:
+        # per-output-channel scales shard with their weight's output axis:
+        # wi/wg scales (F,) over `model`, wo scale (D,) replicated
+        args.append(wi_scale)
+        specs.append(P(md))
+        if have[0]:
+            args.append(wg_scale)
+            specs.append(P(md))
+        args.append(wo_scale)
+        specs.append(P(None))
 
     def body(x, idx, wi, wo, *rest):
         it = iter(rest)
         wg_l = next(it) if have[0] else None
         tw_l = next(it) if have[1] else None
         cnt = next(it) if valid_count is not None else None
-        y = _fused_mlp_routed_op(act, kb, x, idx, wi, wo, wg_l, tw_l, cnt)
+        if qw:
+            wis = next(it)
+            wgs = next(it) if have[0] else None
+            wos = next(it)
+            # serving-only int8 path: no VJP (see fused_mlp above)
+            y = _fused_mlp_mod.fused_mlp_routed(
+                x, idx, wi, wo, wg_l, tw_l, act=act, valid_count=cnt,
+                wi_scale=wis, wo_scale=wos, wg_scale=wgs,
+                interpret=_interp(kb))
+        else:
+            y = _fused_mlp_routed_op(act, kb, x, idx, wi, wo, wg_l, tw_l,
+                                     cnt)
         return jax.lax.psum(y, md) if md else y
 
     return SH.shard_map_compat(

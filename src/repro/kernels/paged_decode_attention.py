@@ -59,8 +59,8 @@ def analysis_example():
             dict(interpret=True))
 
 
-def _kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, o_ref,
-            m_sc, l_sc, acc_sc, *, page_size: int, sm_scale: float,
+def _kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, ks_ref, vs_ref,
+            o_ref, m_sc, l_sc, acc_sc, *, page_size: int, sm_scale: float,
             n_pb: int):
     ib = pl.program_id(0)
     ip = pl.program_id(2)
@@ -75,6 +75,10 @@ def _kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, o_ref,
 
     q = q_ref[0, 0].astype(jnp.float32)                   # (1, d)
     k = k_ref[0, 0].astype(jnp.float32)                   # (ps, d)
+    if ks_ref is not None:
+        # int8 pool: widen in-register, per-(lane, kv-head) f32 scale —
+        # HBM only ever saw the int8 page (docs/quantization.md)
+        k = k * ks_ref[0, 0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     s = s * sm_scale                                      # (1, ps)
@@ -89,6 +93,8 @@ def _kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, o_ref,
     l_sc[:, 0] = l_sc[:, 0] * alpha + jnp.sum(p, axis=1)
     m_sc[:, 0] = m_new
     v = v_ref[0, 0].astype(jnp.float32)
+    if vs_ref is not None:
+        v = v * vs_ref[0, 0][:, None]
     v = jnp.where(mask[0][:, None], v, 0.0)   # masked rows: 0 * NaN guard
     acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot(
         p, v, preferred_element_type=jnp.float32)
@@ -99,17 +105,20 @@ def _kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, o_ref,
         o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def paged_decode_attention(q, kp, vp, table, t, pvalid, *,
-                           sm_scale: float | None = None,
+def paged_decode_attention(q, kp, vp, table, t, pvalid, *, kscale=None,
+                           vscale=None, sm_scale: float | None = None,
                            interpret: bool = False):
     """q: (B, 1, H, Dh); kp, vp: (N, page_size, K, Dh) global page pool;
     table: (B, P) i32 page-table rows (-1 = unused entry); t: (B,) i32
     per-slot decode positions; pvalid: (N, page_size) bool per-lane
-    routing validity. Returns (B, 1, H, Dh)."""
+    routing validity; kscale/vscale: (N, page_size, K) f32 per-(lane,
+    kv-head) dequant scale pools when kp/vp are int8 (both or neither).
+    Returns (B, 1, H, Dh)."""
     B, Sq, H, Dh = q.shape
     N, ps, K = kp.shape[0], kp.shape[1], kp.shape[2]
     P = table.shape[1]
     G = H // K
+    quantized = kscale is not None
     sm_scale = Dh ** -0.5 if sm_scale is None else sm_scale
     table = jnp.asarray(table, jnp.int32)
     t = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
@@ -124,18 +133,33 @@ def paged_decode_attention(q, kp, vp, table, t, pvalid, *,
     # masked in-kernel by the entry >= 0 test
     page_im = lambda b, h, p, tbl, tt: \
         (h // G, jnp.maximum(tbl[b, p], 0), 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, Dh),
+                     lambda b, h, p, tbl, tt: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, ps, Dh), page_im),
+        pl.BlockSpec((1, 1, ps, Dh), page_im),
+        pl.BlockSpec((1, ps),
+                     lambda b, h, p, tbl, tt:
+                     (jnp.maximum(tbl[b, p], 0), 0)),
+    ]
+    args = [qt, kt, vt, pvalid.astype(jnp.int32)]
+    if quantized:
+        # scale pool rides head-major like the KV pool, gathered by the
+        # same page-table index map
+        sspec = pl.BlockSpec((1, 1, ps), lambda b, h, p, tbl, tt:
+                             (h // G, jnp.maximum(tbl[b, p], 0), 0))
+        in_specs += [sspec, sspec]
+        args += [kscale.astype(jnp.float32).transpose(2, 0, 1),
+                 vscale.astype(jnp.float32).transpose(2, 0, 1)]
+        kfn = kernel
+    else:
+        kfn = lambda tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, *rest: \
+            kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pv_ref, None, None,
+                   *rest)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, Dh),
-                         lambda b, h, p, tbl, tt: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, Dh), page_im),
-            pl.BlockSpec((1, 1, ps, Dh), page_im),
-            pl.BlockSpec((1, ps),
-                         lambda b, h, p, tbl, tt:
-                         (jnp.maximum(tbl[b, p], 0), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, Dh),
                                lambda b, h, p, tbl, tt: (b, h, 0, 0)),
         scratch_shapes=[
@@ -145,11 +169,11 @@ def paged_decode_attention(q, kp, vp, table, t, pvalid, *,
         ],
     )
     out = pl.pallas_call(
-        kernel,
+        kfn,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(table, t, qt, kt, vt, pvalid.astype(jnp.int32))
+    )(table, t, *args)
     return out.transpose(0, 2, 1, 3)

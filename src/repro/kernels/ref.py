@@ -10,6 +10,22 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def _dq_kv(x, scale):
+    """int8 KV + per-(token, head) scale -> f32 (identity when no scale)."""
+    if scale is None:
+        return x
+    return x.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def _dq_w(w, scale):
+    """int8 weight + per-output-channel scale -> f32: the scale spans the
+    LAST axis block — (F,) for (D, F), (D,) for (F, D), (E, F)/(E, D) for
+    expert stacks — broadcasting over the reduced axis at -2."""
+    if scale is None:
+        return w
+    return w.astype(jnp.float32) * scale.astype(jnp.float32)[..., None, :]
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
                         sm_scale=None, kv_count=None):
     """q: (B,Sq,H,Dh); k,v: (B,Sk,K,Dh) -> (B,Sq,H,Dh). Dense softmax.
@@ -46,10 +62,12 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
 
 
 def decode_attention_ref(q, k, v, kv_pos, t, *, window=0, kv_valid=None,
-                         sm_scale=None):
+                         kscale=None, vscale=None, sm_scale=None):
     """Ring-cache decode attention oracle. q: (B,1,H,Dh); k,v: (B,L,K,Dh);
     kv_pos: (B,L) absolute positions (-1 = empty); t: (B,) per-slot decode
-    positions. Masks by the cache's position array, not by slot index."""
+    positions; kscale/vscale: (B,L,K) f32 dequant scales for int8 k/v.
+    Masks by the cache's position array, not by slot index."""
+    k, v = _dq_kv(k, kscale), _dq_kv(v, vscale)
     B, Sq, H, Dh = q.shape
     L, K = k.shape[1], k.shape[2]
     G = H // K
@@ -74,13 +92,15 @@ def decode_attention_ref(q, k, v, kv_pos, t, *, window=0, kv_valid=None,
     return ctx.astype(q.dtype)
 
 
-def paged_decode_attention_ref(q, kp, vp, table, t, pvalid, *,
-                               sm_scale=None):
+def paged_decode_attention_ref(q, kp, vp, table, t, pvalid, *, kscale=None,
+                               vscale=None, sm_scale=None):
     """Paged-pool decode attention oracle. q: (B,1,H,Dh); kp, vp:
     (N, page_size, K, Dh) global page pool; table: (B,P) i32 page-table
     rows (-1 = unused); t: (B,) per-slot decode positions; pvalid:
-    (N, page_size) routing validity. Gathers each slot's pages and masks
-    by the implicit position ``p * page_size + lane``."""
+    (N, page_size) routing validity; kscale/vscale: (N, page_size, K) f32
+    dequant scale pools for int8 kp/vp. Gathers each slot's pages and
+    masks by the implicit position ``p * page_size + lane``."""
+    kp, vp = _dq_kv(kp, kscale), _dq_kv(vp, vscale)
     B, Sq, H, Dh = q.shape
     N, ps, K = kp.shape[0], kp.shape[1], kp.shape[2]
     P = table.shape[1]
@@ -112,8 +132,12 @@ def _act(name):
 
 
 def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
-                  valid_count=None):
-    """x: (T, D) or (B, T, D); valid_count: None | scalar | (B,)."""
+                  valid_count=None, wi_scale=None, wo_scale=None,
+                  wg_scale=None):
+    """x: (T, D) or (B, T, D); valid_count: None | scalar | (B,);
+    wi_scale/wg_scale (F,) and wo_scale (D,): int8 weight dequant."""
+    wi, wo, wg = _dq_w(wi, wi_scale), _dq_w(wo, wo_scale), \
+        (_dq_w(wg, wg_scale) if wg is not None else None)
     xf = x.astype(jnp.float32)
     h = xf @ wi.astype(jnp.float32)
     if wg is not None:
@@ -136,7 +160,8 @@ def fused_mlp_ref(x, wi, wo, wg=None, token_weights=None, *, act="swiglu",
 
 
 def fused_mlp_routed_ref(x, idx, wi, wo, wg=None, token_weights=None, *,
-                         act="swiglu", valid_count=None):
+                         act="swiglu", valid_count=None, wi_scale=None,
+                         wo_scale=None, wg_scale=None):
     """Gather/compute/scatter oracle for the index-prefetch routed MLP.
     x: (B, S, D); idx: (B, Kb); returns the (B, S, D) delta."""
     B, S, D = x.shape
@@ -146,15 +171,20 @@ def fused_mlp_routed_ref(x, idx, wi, wo, wg=None, token_weights=None, *,
     tw = (jnp.ones((B, Kb), x.dtype) if token_weights is None
           else token_weights)
     y = fused_mlp_ref(x_sel, wi, wo, wg, tw, act=act,
-                      valid_count=valid_count)
+                      valid_count=valid_count, wi_scale=wi_scale,
+                      wo_scale=wo_scale, wg_scale=wg_scale)
     out = jnp.zeros_like(x)
     b = jnp.arange(B)[:, None]
     return out.at[b, idx].add(y.astype(x.dtype))
 
 
 def moe_gmm_ref(x, wi, wo, wg=None, weights=None, *, act="swiglu",
-                group_counts=None):
-    """x: (E, C, D) or batched (B, E, C, D); group_counts: (E,) / (B, E)."""
+                group_counts=None, wi_scale=None, wo_scale=None,
+                wg_scale=None):
+    """x: (E, C, D) or batched (B, E, C, D); group_counts: (E,) / (B, E);
+    wi_scale/wg_scale (E, Fe) and wo_scale (E, D): int8 weight dequant."""
+    wi, wo, wg = _dq_w(wi, wi_scale), _dq_w(wo, wo_scale), \
+        (_dq_w(wg, wg_scale) if wg is not None else None)
     xf = x.astype(jnp.float32)
     h = jnp.einsum("...ecd,edf->...ecf", xf, wi.astype(jnp.float32))
     if wg is not None:

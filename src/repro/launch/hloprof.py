@@ -111,6 +111,33 @@ def donated_param_types(hlo: str) -> list:
             if i < len(types)]
 
 
+_JAX2HLO = {"float32": "f32", "float64": "f64", "bfloat16": "bf16",
+            "float16": "f16", "int8": "s8", "uint8": "u8", "int16": "s16",
+            "uint16": "u16", "int32": "s32", "uint32": "u32", "int64": "s64",
+            "uint64": "u64", "bool": "pred"}
+
+
+def cache_read_bytes(hlo: str, caches) -> int:
+    """Bytes of the compiled module's entry params that ARE the KV-cache
+    leaves, matched by dtype+shape type string — the per-call HBM read
+    cost of the cache (every leaf is threaded in whole each step). A
+    quantized cache counts its int8 pools PLUS the f32 scale leaves, so
+    the ratio against the fp32 cache is the honest bandwidth win the
+    ``bytes_read`` bench column gates on."""
+    import jax
+    want = defaultdict(int)
+    for leaf in jax.tree.leaves(caches):
+        dt = _JAX2HLO.get(str(leaf.dtype))
+        if dt is not None:
+            want[f"{dt}[{','.join(map(str, leaf.shape))}]"] += 1
+    total = 0
+    for ts in entry_param_types(hlo):
+        if want.get(ts, 0) > 0:
+            want[ts] -= 1
+            total += shape_bytes(ts)
+    return total
+
+
 def biggest_tensors(hlo: str, n: int = 15):
     """The n largest single instruction outputs (op, bytes, shape-str)."""
     out = []

@@ -148,6 +148,15 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="total physical KV pages (default: ring-equivalent "
                          "HBM, i.e. batch * pages-per-full-sequence)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="KV cache storage dtype; int8 stores per-(token,"
+                         "head) scales as sibling leaves and dequantizes "
+                         "inside the decode kernels (docs/quantization.md)")
+    ap.add_argument("--weight-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="base weight storage dtype; int8 quantizes per "
+                         "output channel at engine init")
     ap.add_argument("--budget", default=None, type=_budget_list,
                     help="per-request compute budget(s) in (0,1]: a float, "
                          "or a comma list assigned round-robin (mixed "
@@ -220,7 +229,9 @@ def main():
                            eos_id=args.eos,
                            step_flop_budget=args.flop_budget,
                            mesh=mesh, kv_layout=args.kv_layout,
-                           page_size=args.page_size, n_pages=args.n_pages)
+                           page_size=args.page_size, n_pages=args.n_pages,
+                           kv_dtype=args.kv_dtype,
+                           weight_dtype=args.weight_dtype)
     budgets = args.budget
     rng = np.random.default_rng(0)
     reqs = [GenRequest(rng.integers(0, cfg.vocab_size, args.prompt_len,

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.lora import lora_apply
 from repro.kernels import ops as OPS
-from repro.models import flags
+from repro.models import flags, quant
 from repro.models.layers import dense_init, dtype_of, rope_apply, rope_tables
 from repro.runtime import sharding as SH
 
@@ -105,7 +105,10 @@ def _lora_scale(lora, d):
 
 
 def _project_q(p, x, positions, cfg, lora, use_rope):
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])       # (B,S,Hp,Dh)
+    # maybe_dequant: identity for fp32/bf16 trees, int8 * scale otherwise
+    q = jnp.einsum("bsd,dhk->bshk", x,
+                   quant.maybe_dequant(p, "wq", x.dtype))
+    # (B,S,Hp,Dh)
     if lora is not None and "q" in lora:
         H, Dh = cfg.n_heads, cfg.d_head
         dq = lora_apply(lora["q"], x).reshape(x.shape[0], x.shape[1], H, Dh)
@@ -124,8 +127,10 @@ def _project_q(p, x, positions, cfg, lora, use_rope):
 
 
 def _project_kv(p, x, positions, cfg, lora, use_rope):
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    k = jnp.einsum("bsd,dhk->bshk", x,
+                   quant.maybe_dequant(p, "wk", x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x,
+                   quant.maybe_dequant(p, "wv", x.dtype))
     if lora is not None and "v" in lora:
         K, Dh = p["wv"].shape[1], p["wv"].shape[2]
         dv = lora_apply(lora["v"], x).reshape(x.shape[0], x.shape[1], K, Dh)
@@ -302,7 +307,8 @@ def attn_apply(
             ctx = sdpa(q, k, v, mask, cfg=cfg)
     if head_weights is not None:
         ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", ctx,
+                     quant.maybe_dequant(p, "wo", ctx.dtype))
     return out, k, v
 
 
@@ -324,11 +330,17 @@ def attn_decode(
     enter the cache.  Returns (out (B,1,D), new_cache)."""
     B = x.shape[0]
     L = cache["k"].shape[1]
+    quantized = "kscale" in cache
     t = jnp.asarray(t, jnp.int32)
     per_row = t.ndim == 1
     pos = t[:, None] if per_row else jnp.full((B, 1), t, jnp.int32)
     q = _project_q(p, x, pos, cfg, lora, use_rope)
     k_new, v_new = _project_kv(p, x, pos, cfg, lora, use_rope)
+    if quantized:
+        # quantize ONCE, at the write site (docs/quantization.md): the
+        # stored (int8, scale) bytes are what every later read dequantizes
+        k_new, ks_new = quant.quantize_kv(k_new)         # (B,1,K,Dh),(B,1,K)
+        v_new, vs_new = quant.quantize_kv(v_new)
     wr = jnp.ones((B,), bool) if write is None else write
     if per_row:
         # per-row ring slots: scatter each row's k/v into its own slot.
@@ -344,6 +356,13 @@ def attn_decode(
             return SH.constrain_kv_cache(c.at[bi, slots].set(new), cfg)
         ck = upd(cache["k"], k_new)
         cv = upd(cache["v"], v_new)
+        if quantized:
+            def upds(c, n):   # scale leaves: same scatter, minus Dh
+                old = c[bi, slots]                           # (B, K)
+                new = jnp.where(wr[:, None], n[:, 0], old).astype(c.dtype)
+                return SH.constrain_kv_scale(c.at[bi, slots].set(new), cfg)
+            cks = upds(cache["kscale"], ks_new)
+            cvs = upds(cache["vscale"], vs_new)
         # the slot is consumed by position t either way (stale entry evicted)
         valid = cache["valid"].at[bi, slots].set(wr)
         cpos = cache["pos"].at[bi, slots].set(t)
@@ -355,12 +374,20 @@ def attn_decode(
             slot, axis=1)
         ck = upd(cache["k"], k_new)
         cv = upd(cache["v"], v_new)
+        if quantized:
+            upds = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                c, jnp.where(wr[:, None, None], n, old(c)).astype(c.dtype),
+                slot, axis=1)
+            cks = upds(cache["kscale"], ks_new)
+            cvs = upds(cache["vscale"], vs_new)
         # the slot is consumed by position t either way (stale entry evicted)
         valid = jax.lax.dynamic_update_slice_in_dim(
             cache["valid"], wr[:, None], slot, axis=1)
         cpos = jax.lax.dynamic_update_slice_in_dim(
             cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
     new_cache = {"k": ck, "v": cv, "valid": valid, "pos": cpos}
+    if quantized:
+        new_cache["kscale"], new_cache["vscale"] = cks, cvs
     kv_valid = valid & (cpos >= 0)
     if _kernel_ok(backend, cfg):
         # ring-cache decode kernel: per-slot positions ride scalar
@@ -368,32 +395,46 @@ def attn_decode(
         # Under a mesh the kernel runs per-shard (heads over `model`,
         # slots over data) via shard_map — see ops.decode_attention_sharded.
         tvec = t if per_row else jnp.broadcast_to(t, (B,))
-        ctx = OPS.decode_attention_sharded(q, ck, cv, cpos, tvec, valid,
-                                           window=window or 0,
-                                           backend=backend)
-    elif L > BLOCKED_THRESHOLD:
-        ctx = blocked_sdpa(q, ck, cv, pos, cpos, True, window, kv_valid,
-                           cfg=cfg)
+        ctx = OPS.decode_attention_sharded(
+            q, ck, cv, cpos, tvec, valid, window=window or 0,
+            backend=backend,
+            kscale=cks if quantized else None,
+            vscale=cvs if quantized else None)
     else:
-        mask = _mask(pos, cpos, True, window, kv_valid)
-        ctx = sdpa(q, ck, cv, mask, cfg=cfg)
+        ckf = quant.dequantize_kv(ck, cks, q.dtype) if quantized else ck
+        cvf = quant.dequantize_kv(cv, cvs, q.dtype) if quantized else cv
+        if L > BLOCKED_THRESHOLD:
+            ctx = blocked_sdpa(q, ckf, cvf, pos, cpos, True, window,
+                               kv_valid, cfg=cfg)
+        else:
+            mask = _mask(pos, cpos, True, window, kv_valid)
+            ctx = sdpa(q, ckf, cvf, mask, cfg=cfg)
     if head_weights is not None:
         ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", ctx,
+                     quant.maybe_dequant(p, "wo", ctx.dtype))
     return out, new_cache
 
 
-def attn_cache_init(cfg, batch: int, max_seq: int, window: int = 0):
-    """Ring cache of length window (local layers) or max_seq (global)."""
+def attn_cache_init(cfg, batch: int, max_seq: int, window: int = 0,
+                    kv_dtype: str = "fp32"):
+    """Ring cache of length window (local layers) or max_seq (global).
+    kv_dtype (docs/quantization.md): "fp32" stores the native config dtype,
+    "bf16" a plain cast, "int8" adds per-(slot, token, kv-head) f32
+    ``kscale``/``vscale`` sibling leaves."""
     L = min(max_seq, window) if window and window > 0 else max_seq
     K, Dh = cfg.n_kv_heads, cfg.d_head
-    dt = dtype_of(cfg)
-    return {
+    dt = quant.kv_store_dtype(quant.check_kv_dtype(kv_dtype), dtype_of(cfg))
+    cache = {
         "k": jnp.zeros((batch, L, K, Dh), dt),
         "v": jnp.zeros((batch, L, K, Dh), dt),
         "valid": jnp.zeros((batch, L), bool),
         "pos": jnp.full((batch, L), -1, jnp.int32),
     }
+    if kv_dtype == "int8":
+        cache["kscale"] = jnp.ones((batch, L, K), jnp.float32)
+        cache["vscale"] = jnp.ones((batch, L, K), jnp.float32)
+    return cache
 
 
 # ------------------------------ paged KV pool --------------------------------
@@ -406,25 +447,40 @@ def attn_cache_init(cfg, batch: int, max_seq: int, window: int = 0):
 # `pvalid` carries the ElastiFormer token-gate keep decision per lane.
 
 
-def attn_paged_cache_init(cfg, n_pages: int, page_size: int):
-    """One layer's slice of the global page pool."""
+def attn_paged_cache_init(cfg, n_pages: int, page_size: int,
+                          kv_dtype: str = "fp32"):
+    """One layer's slice of the global page pool. kv_dtype
+    (docs/quantization.md): "int8" adds per-(page, lane, kv-head) f32
+    ``kscale``/``vscale`` sibling pools."""
     K, Dh = cfg.n_kv_heads, cfg.d_head
-    dt = dtype_of(cfg)
-    return {
+    dt = quant.kv_store_dtype(quant.check_kv_dtype(kv_dtype), dtype_of(cfg))
+    cache = {
         "kp": jnp.zeros((n_pages, page_size, K, Dh), dt),
         "vp": jnp.zeros((n_pages, page_size, K, Dh), dt),
         "pvalid": jnp.zeros((n_pages, page_size), bool),
     }
+    if kv_dtype == "int8":
+        cache["kscale"] = jnp.ones((n_pages, page_size, K), jnp.float32)
+        cache["vscale"] = jnp.ones((n_pages, page_size, K), jnp.float32)
+    return cache
 
 
-def _paged_gather(cache, table, B: int):
+def _paged_gather(cache, table, B: int, dtype=None):
     """Gather a (B, P)-table's pages into position-ordered (B, P*ps, K, Dh)
-    K/V plus the (B, P*ps) validity mask and the implicit kv positions."""
+    K/V plus the (B, P*ps) validity mask and the implicit kv positions.
+    int8 pools come back dequantized (``dtype``, default f32) — this is
+    the jnp twin, the kernel path dequantizes in-register."""
     ps = cache["kp"].shape[1]
     P = table.shape[-1]
     pid = jnp.maximum(table, 0)
     kg = cache["kp"][pid].reshape(B, P * ps, *cache["kp"].shape[2:])
     vg = cache["vp"][pid].reshape(B, P * ps, *cache["vp"].shape[2:])
+    if "kscale" in cache:
+        K = kg.shape[-2]
+        kg = quant.dequantize_kv(
+            kg, cache["kscale"][pid].reshape(B, P * ps, K), dtype)
+        vg = quant.dequantize_kv(
+            vg, cache["vscale"][pid].reshape(B, P * ps, K), dtype)
     kvv = ((table[..., None] >= 0)
            & cache["pvalid"][pid]).reshape(B, P * ps)
     kvpos = (jnp.arange(P)[:, None] * ps
@@ -447,10 +503,15 @@ def attn_decode_paged(
     gate. Returns (out (B,1,D), new_cache)."""
     B = x.shape[0]
     ps = cache["kp"].shape[1]
+    quantized = "kscale" in cache
     t = jnp.asarray(t, jnp.int32).reshape(-1)
     pos = t[:, None]                                       # (B, 1)
     q = _project_q(p, x, pos, cfg, lora, use_rope)
     k_new, v_new = _project_kv(p, x, pos, cfg, lora, use_rope)
+    if quantized:
+        # quantize ONCE, at the write site (docs/quantization.md)
+        k_new, ks_new = quant.quantize_kv(k_new)         # (B,1,K,Dh),(B,1,K)
+        v_new, vs_new = quant.quantize_kv(v_new)
     wr = jnp.ones((B,), bool) if write is None else write
     entries = jnp.take_along_axis(table, (t // ps)[:, None], axis=1)[:, 0]
     pages = jnp.where(entries >= 0, entries, trash)        # (B,)
@@ -468,22 +529,33 @@ def attn_decode_paged(
     vp = upd(cache["vp"], v_new)
     pvalid = cache["pvalid"].at[pages, offs].set(wr)
     new_cache = {"kp": kp, "vp": vp, "pvalid": pvalid}
+    if quantized:
+        def upds(c, n):   # scale pools: same scatter, minus Dh
+            old = c[pages, offs]                           # (B, K)
+            new = jnp.where(wr[:, None], n[:, 0], old).astype(c.dtype)
+            return SH.constrain_page_pool(c.at[pages, offs].set(new), cfg)
+        new_cache["kscale"] = upds(cache["kscale"], ks_new)
+        new_cache["vscale"] = upds(cache["vscale"], vs_new)
     if _kernel_ok(backend, cfg):
         # paged decode kernel: the table and per-slot lengths ride scalar
         # prefetch, the BlockSpec index_map gathers pages from the pool.
         # Under a mesh it runs per-shard (kv-heads over `model`, pages and
         # slots over data) — see ops.paged_decode_attention_sharded.
-        ctx = OPS.paged_decode_attention_sharded(q, kp, vp, table, t,
-                                                 pvalid, backend=backend)
+        ctx = OPS.paged_decode_attention_sharded(
+            q, kp, vp, table, t, pvalid, backend=backend,
+            kscale=new_cache.get("kscale"),
+            vscale=new_cache.get("vscale"))
     else:
-        kg, vg, kvv, kvpos = _paged_gather(new_cache, table, B)
+        kg, vg, kvv, kvpos = _paged_gather(new_cache, table, B,
+                                           dtype=q.dtype)
         mask = _mask(pos, kvpos[None], True, 0, kvv)
         ctx = sdpa(q, kg, vg, mask, cfg=cfg)
         # rows with no attendable key: match the kernel's exact zeros
         ctx = jnp.where(mask.any(-1)[:, :, None, None], ctx, 0.0)
     if head_weights is not None:
         ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", ctx,
+                     quant.maybe_dequant(p, "wo", ctx.dtype))
     return out, new_cache
 
 
@@ -506,6 +578,13 @@ def attn_chunk(
     positions = pos0 + jnp.arange(C, dtype=jnp.int32)[None, :]   # (1, C)
     q = _project_q(p, x, positions, cfg, lora, use_rope)
     k_new, v_new = _project_kv(p, x, positions, cfg, lora, use_rope)
+    if "kscale" in cache:
+        # quantize ONCE, at the write site; the queries below then attend
+        # the QUANTIZED pool via _paged_gather, so a chunked prefill is
+        # bitwise identical to the decode path reading the same pages
+        # (docs/quantization.md)
+        k_new, ks_new = quant.quantize_kv(k_new)         # (1,C,K,Dh),(1,C,K)
+        v_new, vs_new = quant.quantize_kv(v_new)
     wr = jnp.ones((B, C), bool) if keep is None else keep
     wr = wr & (positions < plen)
 
@@ -518,10 +597,19 @@ def attn_chunk(
     pvalid = jax.lax.dynamic_update_slice(cache["pvalid"], wr,
                                           (write_page, 0))
     new_cache = {"kp": kp, "vp": vp, "pvalid": pvalid}
-    kg, vg, kvv, kvpos = _paged_gather(new_cache, table_row[None], B)
+    if "kscale" in cache:
+        def upds(c, n):
+            out = jax.lax.dynamic_update_slice(
+                c, n.astype(c.dtype), (write_page, 0, 0))
+            return SH.constrain_page_pool(out, cfg)
+        new_cache["kscale"] = upds(cache["kscale"], ks_new)
+        new_cache["vscale"] = upds(cache["vscale"], vs_new)
+    kg, vg, kvv, kvpos = _paged_gather(new_cache, table_row[None], B,
+                                       dtype=q.dtype)
     mask = _mask(positions, kvpos[None], True, 0, kvv)
     ctx = sdpa(q, kg, vg, mask, cfg=cfg)
     if head_weights is not None:
         ctx = ctx * _pad_heads(head_weights, cfg)[..., None].astype(ctx.dtype)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", ctx,
+                     quant.maybe_dequant(p, "wo", ctx.dtype))
     return out, new_cache

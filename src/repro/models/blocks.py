@@ -51,6 +51,7 @@ from repro.runtime import sharding as SH
 from repro.core.moefy import moefy_mlp
 from repro.core.lora import lora_init
 from repro.models import attention as A
+from repro.models import quant
 from repro.models import rglru as G
 from repro.models import ssm as S
 from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
@@ -210,9 +211,12 @@ def _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes, backend=None):
             auxes.append(a)
             return y
         if backend in ("pallas", "interpret"):
-            return OPS.fused_mlp(h, p["mlp"]["wi"], p["mlp"]["wo"],
-                                 p["mlp"].get("wg"),
-                                 valid_count=token_count, act=cfg.act,
+            mp = p["mlp"]
+            return OPS.fused_mlp(h, mp["wi"], mp["wo"], mp.get("wg"),
+                                 valid_count=token_count,
+                                 wi_scale=mp.get("wi_scale"),
+                                 wo_scale=mp.get("wo_scale"),
+                                 wg_scale=mp.get("wg_scale"), act=cfg.act,
                                  backend=backend)
         return mlp_apply(p["mlp"], h, cfg.act)
     return f
@@ -403,7 +407,9 @@ def block_apply(
             delta = y * wtok[..., None].astype(y.dtype)
         if collect_cache:
             L = max_cache_len or Seq
-            cache["attn"] = _pad_cache(k, v, keep, L, window)
+            cache["attn"] = _pad_cache(
+                k, v, keep, L, window,
+                kv_dtype=spec.kv_dtype if spec is not None else "fp32")
     else:  # ssm / rglru — dense masked routing (state pass-through semantics)
         keep = None
         if cap_mha is not None:
@@ -493,6 +499,9 @@ def block_apply(
                 delta = routed_op(
                     h, plan.idx, p["mlp"]["wi"], p["mlp"]["wo"],
                     p["mlp"].get("wg"), w_sel, valid_count=plan.count,
+                    wi_scale=p["mlp"].get("wi_scale"),
+                    wo_scale=p["mlp"].get("wo_scale"),
+                    wg_scale=p["mlp"].get("wg_scale"),
                     act=cfg.act, backend=backend).astype(x.dtype)
             else:
                 h_sel = R.plan_gather(h, plan)
@@ -545,17 +554,35 @@ def _scatter_kv(t, idx, b, s):
     return out.at[bi, idx].set(t)
 
 
-def _pad_cache(k, v, keep, max_len: int, window: int = 0):
-    """Lay prefill k/v into the ring-cache format (slot = pos % L)."""
+def _pad_cache(k, v, keep, max_len: int, window: int = 0,
+               kv_dtype: str = "fp32"):
+    """Lay prefill k/v into the ring-cache format (slot = pos % L).
+
+    ``kv_dtype`` "int8" quantizes here — the ring's one-shot-prefill WRITE
+    site (docs/quantization.md): decode steps then dequantize the stored
+    rows, so the cache row a later decode reads is identical to what a
+    decode-time write of the same token would have stored. (The in-flight
+    prefill attention above ran on the f32 k/v — that is the documented
+    ring-vs-paged bit-stability caveat.) "bf16" narrowing is handled by
+    the `.astype` at the `cache_row_insert` splice."""
     B, S = k.shape[:2]
     L = min(max_len, window) if window and window > 0 else max_len
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    quantized = kv_dtype == "int8"
+    if quantized:
+        k, ks = quant.quantize_kv(k)                     # (B,S,K,Dh),(B,S,K)
+        v, vs = quant.quantize_kv(v)
     if S <= L:
         pad = L - S
         pw = [(0, 0), (0, pad), (0, 0), (0, 0)]
-        return {"k": jnp.pad(k, pw), "v": jnp.pad(v, pw),
-                "valid": jnp.pad(keep, [(0, 0), (0, pad)]),
-                "pos": jnp.pad(pos, [(0, 0), (0, pad)], constant_values=-1)}
+        out = {"k": jnp.pad(k, pw), "v": jnp.pad(v, pw),
+               "valid": jnp.pad(keep, [(0, 0), (0, pad)]),
+               "pos": jnp.pad(pos, [(0, 0), (0, pad)], constant_values=-1)}
+        if quantized:
+            sw = [(0, 0), (0, pad), (0, 0)]
+            out["kscale"] = jnp.pad(ks, sw, constant_values=1.0)
+            out["vscale"] = jnp.pad(vs, sw, constant_values=1.0)
+        return out
     # keep the last L positions, scattered to their ring slots
     k, v = k[:, -L:], v[:, -L:]
     keep, pos = keep[:, -L:], pos[:, -L:]
@@ -567,6 +594,10 @@ def _pad_cache(k, v, keep, max_len: int, window: int = 0):
         "valid": jnp.zeros_like(keep).at[bi, slots].set(keep),
         "pos": jnp.full_like(pos, -1).at[bi, slots].set(pos),
     }
+    if quantized:
+        ks, vs = ks[:, -L:], vs[:, -L:]
+        out["kscale"] = jnp.ones_like(ks).at[bi, slots].set(ks)
+        out["vscale"] = jnp.ones_like(vs).at[bi, slots].set(vs)
     return out
 
 
@@ -644,7 +675,8 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
         mask = A._mask(pos, kvp, False, 0, xc["valid"])
         q = A._project_q(p["xattn"], hx, pos, cfg, None, False)
         ctx = A.sdpa(q, xc["k"], xc["v"], mask)
-        x = x + jnp.einsum("bshk,hkd->bsd", ctx, p["xattn"]["wo"])
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx,
+                           quant.maybe_dequant(p["xattn"], "wo", ctx.dtype))
 
     if has_mlp(kind):
         h = norm_apply(p["norm2"], x, cfg.norm)
@@ -746,14 +778,16 @@ def block_chunk(kind: str, p, rp, x, cache, write_page, table_row, pos0,
     return x, new_cache
 
 
-def block_paged_cache_init(kind: str, cfg, n_pages: int, page_size: int):
+def block_paged_cache_init(kind: str, cfg, n_pages: int, page_size: int,
+                           kv_dtype: str = "fp32"):
     """Paged twin of ``block_cache_init``: one layer's slice of the global
     page pool (attention-only — the pool replaces the ring, recurrent
     state has no paged form)."""
     if not is_attn(kind) or kind == "xattn":
         raise ValueError(f"paged KV cache requires self-attention blocks, "
                          f"got {kind!r}")
-    return {"attn": A.attn_paged_cache_init(cfg, n_pages, page_size)}
+    return {"attn": A.attn_paged_cache_init(cfg, n_pages, page_size,
+                                            kv_dtype=kv_dtype)}
 
 
 def cache_row_insert(full, row, slot, batch_axis: int = 0):
@@ -772,10 +806,11 @@ def cache_row_insert(full, row, slot, batch_axis: int = 0):
 
 
 def block_cache_init(kind: str, cfg, batch: int, max_seq: int, enc_len: int = 0,
-                     window: int = 0):
+                     window: int = 0, kv_dtype: str = "fp32"):
     c = {}
     if is_attn(kind):
-        c["attn"] = A.attn_cache_init(cfg, batch, max_seq, window)
+        c["attn"] = A.attn_cache_init(cfg, batch, max_seq, window,
+                                      kv_dtype=kv_dtype)
     if kind == "xattn":
         c["xattn"] = {
             "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head),

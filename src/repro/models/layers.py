@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import quant
+
 
 def dtype_of(cfg) -> jnp.dtype:
     return jnp.dtype(cfg.dtype)
@@ -82,9 +84,9 @@ def mlp_init(key, cfg):
 
 
 def mlp_apply(p, x, act: str):
-    h = x @ p["wi"]
+    h = x @ quant.maybe_dequant(p, "wi", x.dtype)
     if is_gated(act):
-        h = act_fn(act)(x @ p["wg"]) * h
+        h = act_fn(act)(x @ quant.maybe_dequant(p, "wg", x.dtype)) * h
     else:
         h = act_fn(act)(h)
-    return h @ p["wo"]
+    return (h @ quant.maybe_dequant(p, "wo", x.dtype)).astype(x.dtype)

@@ -385,11 +385,12 @@ def forward(params, rparams, batch, cfg, ecfg=None, mode: str = "base",
 
 # ------------------------------ serving --------------------------------------
 
-def cache_init(cfg, batch: int, max_seq: int):
+def cache_init(cfg, batch: int, max_seq: int, kv_dtype: str = "fp32"):
     period, P, _ = build_pattern(cfg, None)
     enc_len = cfg.n_image_tokens or cfg.encoder_seq
     caches = [block_cache_init(k, cfg, batch, max_seq, enc_len,
-                               window=cfg.layer_windows[i])
+                               window=cfg.layer_windows[i],
+                               kv_dtype=kv_dtype)
               for i, k in enumerate(cfg.layer_kinds)]
     scan, tail = _split_layers(caches, len(period), P)
     return {"scan": scan, "tail": tail}
@@ -559,12 +560,14 @@ def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
 
 # --------------------------- paged serving -----------------------------------
 
-def paged_cache_init(cfg, n_pages: int, page_size: int):
+def paged_cache_init(cfg, n_pages: int, page_size: int,
+                     kv_dtype: str = "fp32"):
     """Paged twin of ``cache_init``: per-layer slices of the GLOBAL page
     pool, stacked into the same scan/tail pattern tree (scan leaves gain a
     leading period dim). Attention-only — validated per layer kind."""
     period, P, _ = build_pattern(cfg, None)
-    caches = [block_paged_cache_init(k, cfg, n_pages, page_size)
+    caches = [block_paged_cache_init(k, cfg, n_pages, page_size,
+                                     kv_dtype=kv_dtype)
               for k in cfg.layer_kinds]
     scan, tail = _split_layers(caches, len(period), P)
     return {"scan": scan, "tail": tail}
@@ -660,5 +663,6 @@ def batch_specs(cfg, seq_len: int, global_batch: int, kind: str):
     return specs
 
 
-def cache_specs(cfg, batch: int, max_seq: int):
-    return jax.eval_shape(lambda: cache_init(cfg, batch, max_seq))
+def cache_specs(cfg, batch: int, max_seq: int, kv_dtype: str = "fp32"):
+    return jax.eval_shape(lambda: cache_init(cfg, batch, max_seq,
+                                             kv_dtype=kv_dtype))

@@ -19,7 +19,7 @@ from repro.core.routing import RouteAux, bcast_to, is_full, topk_mask, \
     topk_mask_dyn
 from repro.kernels import ops as OPS
 from repro.models.layers import act_fn, dense_init, dtype_of, is_gated
-from repro.models import flags
+from repro.models import flags, quant
 
 
 def moe_init(key, cfg):
@@ -54,13 +54,20 @@ def _expert_ffn(p, x_sel, act, backend=None, counts=None):
     counts are exact, not a bound."""
     if backend in ("pallas", "interpret"):
         return OPS.moe_gmm(x_sel, p["wi"], p["wo"], p.get("wg"),
-                           group_counts=counts, act=act, backend=backend)
-    h = jnp.einsum("becd,edf->becf", x_sel, p["wi"])
+                           group_counts=counts,
+                           wi_scale=p.get("wi_scale"),
+                           wo_scale=p.get("wo_scale"),
+                           wg_scale=p.get("wg_scale"),
+                           act=act, backend=backend)
+    h = jnp.einsum("becd,edf->becf", x_sel,
+                   quant.maybe_dequant(p, "wi", x_sel.dtype))
     if "wg" in p:
-        h = act_fn(act)(jnp.einsum("becd,edf->becf", x_sel, p["wg"])) * h
+        h = act_fn(act)(jnp.einsum("becd,edf->becf", x_sel,
+                                   quant.maybe_dequant(p, "wg", x_sel.dtype))) * h
     else:
         h = act_fn(act)(h)
-    return jnp.einsum("becf,efd->becd", h, p["wo"])
+    return jnp.einsum("becf,efd->becd", h,
+                      quant.maybe_dequant(p, "wo", x_sel.dtype)).astype(x_sel.dtype)
 
 
 def moe_apply(
@@ -202,12 +209,12 @@ def moe_apply(
 
 
 def _dense_ffn(p, x, act):
-    h = x @ p["wi"]
+    h = x @ quant.maybe_dequant(p, "wi", x.dtype)
     if "wg" in p:
-        h = act_fn(act)(x @ p["wg"]) * h
+        h = act_fn(act)(x @ quant.maybe_dequant(p, "wg", x.dtype)) * h
     else:
         h = act_fn(act)(h)
-    return h @ p["wo"]
+    return (h @ quant.maybe_dequant(p, "wo", x.dtype)).astype(x.dtype)
 
 
 def moe_decode(p, x, *, act: str, top_k: int, router_w=None,
@@ -231,16 +238,23 @@ def moe_decode(p, x, *, act: str, top_k: int, router_w=None,
         sel = jnp.arange(k)[None, :] < bcast_to(kt, 2)        # (B,k)
         full = bcast_to(is_full(top_k_traced, E), 2)
         vals = jnp.where(full, 1.0, jnp.where(sel, vals, 0.0))
-    wi_sel = jnp.take(p["wi"], idx, axis=0)                   # (B,k,D,Fe)
-    wo_sel = jnp.take(p["wo"], idx, axis=0)
+    def take_w(name):
+        # gather selected experts' weights, then dequant the gathered
+        # slice only — HBM traffic stays ∝ top-k int8 expert rows
+        w_sel = jnp.take(p[name], idx, axis=0)                # (B,k,D,Fe)
+        sc = p.get(name + "_scale")
+        if sc is None:
+            return w_sel
+        return (w_sel.astype(jnp.float32)
+                * jnp.take(sc, idx, axis=0)[:, :, None, :]).astype(x.dtype)
+    wi_sel, wo_sel = take_w("wi"), take_w("wo")
     h = jnp.einsum("bsd,bkdf->bkf", x, wi_sel)
     if "wg" in p:
-        wg_sel = jnp.take(p["wg"], idx, axis=0)
-        h = act_fn(act)(jnp.einsum("bsd,bkdf->bkf", x, wg_sel)) * h
+        h = act_fn(act)(jnp.einsum("bsd,bkdf->bkf", x, take_w("wg"))) * h
     else:
         h = act_fn(act)(h)
     y = jnp.einsum("bkf,bkfd,bk->bd", h, wo_sel, vals.astype(h.dtype))
-    y = y[:, None]
+    y = y[:, None].astype(x.dtype)
     if "shared" in p:
         y = y + _dense_ffn(p["shared"], x, act)
     return y, RouteAux.zero()

@@ -1,0 +1,168 @@
+"""Symmetric int8 quantization for the serving engine's KV caches and base
+weights (``ElasticSpec.kv_dtype`` / ``ElasticSpec.weight_dtype``).
+
+Protocol (docs/quantization.md):
+
+* KV rows are quantized ONCE, at the cache write site, per (token, head):
+  ``scale = max|x| over Dh / 127`` (f32), ``q = round(x / scale)`` clipped to
+  [-127, 127]. The scale rides as a sibling pytree leaf next to the int8
+  tensor (ring: ``kscale``/``vscale`` (B, L, K); paged pool: (N, page_size,
+  K)), so row splices, page copies, forks, and preemption replays move the
+  EXACT stored bytes — re-quantizing a dequantized value drifts, copying
+  (int8, scale) pairs cannot.
+* Weights are quantized once at engine init, per OUTPUT channel (the axes
+  the consuming contraction does NOT reduce), with an f32 ``{name}_scale``
+  sibling leaf.
+* Dequantization is ``q.astype(f32) * scale`` — inside the Pallas kernels
+  it happens in-register after the tile load (never as an HBM-visible op);
+  the jnp ref twins apply the same expression on whole (small) tensors.
+
+``"fp32"`` means "native config dtype, no quantization" (the legacy
+behavior); ``"bf16"`` is a plain cast (no scales — bf16 keeps f32's
+exponent range).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KV_DTYPES = ("fp32", "bf16", "int8")
+WEIGHT_DTYPES = ("fp32", "bf16", "int8")
+
+INT8_MAX = 127.0
+
+
+def check_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    return kv_dtype
+
+
+def check_weight_dtype(weight_dtype: str) -> str:
+    if weight_dtype not in WEIGHT_DTYPES:
+        raise ValueError(f"weight_dtype must be one of {WEIGHT_DTYPES}, "
+                         f"got {weight_dtype!r}")
+    return weight_dtype
+
+
+def kv_store_dtype(kv_dtype: str, cfg_dtype) -> jnp.dtype:
+    """Storage dtype of the k/v cache leaves for a given ``kv_dtype``."""
+    if kv_dtype == "int8":
+        return jnp.dtype(jnp.int8)
+    if kv_dtype == "bf16":
+        return jnp.dtype(jnp.bfloat16)
+    return jnp.dtype(cfg_dtype)
+
+
+def quantize_kv(x):
+    """Per-(token, head) symmetric int8: x (..., Dh) -> (q int8 (..., Dh),
+    scale f32 (...,)). Deterministic (round-half-away via jnp.round), so
+    identical f32 inputs always produce identical stored bytes — the
+    bit-stability contract prefix sharing and replay rely on."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax, 1.0) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=None):
+    """Inverse of quantize_kv (f32 compute, optionally cast to ``dtype`` —
+    the activation dtype, so bf16 models keep their legacy compute dtype).
+    Only for the jnp ref paths — the Pallas kernels apply the same
+    expression in-register per tile."""
+    x = q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+    return x if dtype is None else x.astype(dtype)
+
+
+# ------------------------------ weights --------------------------------------
+#
+# Reduced (input) axes are END-RELATIVE, so the same rule covers per-layer
+# params and the pattern scan's stacked (L, ...) leaves:
+#   * attention wq/wk/wv (..., D, H, Dh): reduce D        -> scale (..., H, Dh)
+#   * attention wo       (..., H, Dh, D): reduce (H, Dh)  -> scale (..., D)
+#   * mlp wi/wg          (..., D, F):     reduce D        -> scale (..., F)
+#   * mlp wo             (..., F, D):     reduce F        -> scale (..., D)
+#   * expert stacks      (..., E, D, F) / (..., E, F, D): reduce the middle
+# "wo" is ambiguous between the attention and MLP shapes; quantization and
+# dequantization both disambiguate by the SIBLING names in the param dict
+# (an attention dict carries "wq", an MLP dict carries "wi").
+
+
+def _reduce_axes(node: dict, name: str):
+    """End-relative reduced axes for weight ``name`` in param dict
+    ``node``, or None if the name is not a quantizable base matrix."""
+    if name in ("wq", "wk", "wv"):
+        return (-3,)
+    if name == "wo" and "wq" in node:
+        return (-3, -2)                    # attention out-projection
+    if name in ("wi", "wg", "wo") and "wi" in node:
+        return (-2,)                       # dense MLP / expert stacks
+    return None
+
+
+def quantize_weight(w, reduce_axes):
+    """Per-output-channel symmetric int8: scale has w's shape minus the
+    reduced axes."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes)
+    scale = jnp.where(amax > 0, amax, 1.0) / INT8_MAX
+    sb = jnp.expand_dims(scale, reduce_axes)
+    q = jnp.clip(jnp.round(wf / sb), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_weight(q, scale, reduce_axes):
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale.astype(jnp.float32), reduce_axes))
+
+
+def maybe_dequant(p: dict, name: str, dtype=None):
+    """Read weight ``name`` from param dict ``p``, dequantizing if a
+    ``{name}_scale`` sibling is present (engine-quantized params). The
+    single accessor every jnp weight consumer goes through, so fp32-mode
+    trees take the exact legacy path. ``dtype`` (the activation dtype)
+    casts the dequantized result so downstream einsums keep the legacy
+    compute dtype — without it a bf16 model's residual stream would be
+    promoted to f32 and break the scan carry."""
+    w = p[name]
+    scale = p.get(name + "_scale")
+    if scale is None:
+        return w
+    wd = dequantize_weight(w, scale, _reduce_axes(p, name))
+    return wd if dtype is None else wd.astype(dtype)
+
+
+def quantize_params_tree(params, weight_dtype: str):
+    """Engine-init transform: quantize/cast the base attention projections
+    and MLP/MoE matrices in a model param tree, leaving routers, norms,
+    embeddings, LoRA and biases untouched. int8 adds f32 ``{name}_scale``
+    sibling leaves; bf16 is a plain cast. Returns a NEW tree (inputs are
+    never mutated)."""
+    check_weight_dtype(weight_dtype)
+    if weight_dtype == "fp32":
+        return params
+
+    def walk(node):
+        if isinstance(node, (list, tuple)):    # scan/tail stacking lists
+            return type(node)(walk(v) for v in node)
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, (dict, list, tuple)):
+                out[k] = walk(v)
+                continue
+            axes = _reduce_axes(node, k) \
+                if getattr(v, "ndim", 0) >= 2 else None
+            if axes is None:
+                out[k] = v
+            elif weight_dtype == "bf16":
+                out[k] = v.astype(jnp.bfloat16)
+            else:
+                q, scale = quantize_weight(v, axes)
+                out[k] = q
+                out[k + "_scale"] = scale
+        return out
+
+    return walk(params)

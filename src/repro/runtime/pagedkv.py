@@ -191,22 +191,31 @@ def copy_page_in_tree(caches, src, dst, n_keep, *, page_size, cfg):
 
     ``src``/``dst``/``n_keep`` are traced scalars, so one compile serves
     every fork. Pool leaves are identified by name (``kp``/``vp`` rank 4,
-    ``pvalid`` rank 2, +1 leading dim per pattern-scan stack); the page
-    axis is located from the rank, not the keystr.
+    ``kscale``/``vscale`` int8 dequant-scale pools rank 3, ``pvalid``
+    rank 2, +1 leading dim per pattern-scan stack); the page axis is
+    located from the rank, not the keystr.
+
+    Quantized pools copy the int8 page AND its scale row VERBATIM —
+    quantize-once-on-write (docs/quantization.md): re-quantizing a
+    dequantized tail here would drift the child's bytes off the parent's,
+    breaking fork/preemption-replay bit-stability. Invalidated positions
+    (>= ``n_keep``) are masked via ``pvalid`` only.
     """
     keep = jnp.arange(page_size, dtype=jnp.int32) < n_keep
+    _AX_OFF = {"kp": 4, "vp": 4, "kscale": 3, "vscale": 3, "pvalid": 2}
 
     def cp(path, leaf):
         name = _leaf_name(path)
-        if name not in ("kp", "vp", "pvalid"):
+        if name not in _AX_OFF:
             return leaf
-        ax = leaf.ndim - (2 if name == "pvalid" else 4)
+        ax = leaf.ndim - _AX_OFF[name]
         row = jax.lax.dynamic_index_in_dim(leaf, src, axis=ax, keepdims=False)
         if name == "pvalid":
             row = row & keep
         out = jax.lax.dynamic_update_index_in_dim(leaf, row, dst, axis=ax)
         if name != "pvalid":
-            out = SH.constrain_page_pool(out, cfg)
+            out = SH.constrain_page_pool(out, cfg,
+                                         scale=name in ("kscale", "vscale"))
         return out
 
     return jax.tree_util.tree_map_with_path(cp, caches)

@@ -228,18 +228,45 @@ def page_pool_spec(cfg, mesh: Mesh, lead: int = 0) -> P:
     return P(*([None] * lead), batch_axes(mesh), *tail)
 
 
-def constrain_page_pool(x, cfg):
+def kv_scale_spec(cfg, mesh: Mesh, lead: int = 0) -> P:
+    """Placement for an int8-KV dequant-scale leaf (docs/quantization.md):
+    ring (B, L, K) and paged (N, page_size, K) share one layout — leading
+    axis over the data axes, kv-heads over `model` when divisible. The
+    head_dim fallback of `attn_kv_spec`/`page_pool_spec` has no analogue
+    here (scales carry no Dh axis), so the K axis replicates instead."""
+    kv_div = cfg.n_kv_heads and cfg.n_kv_heads % model_axis_size(mesh) == 0
+    return P(*([None] * lead), batch_axes(mesh), None,
+             "model" if kv_div else None)
+
+
+def constrain_kv_scale(x, cfg):
+    """Pin a (B, L, K) ring-cache scale leaf at its write sites — the
+    scale twin of `constrain_kv_cache`, sharing `kv_scale_spec` with the
+    jit out_shardings pin. No-op outside a mesh context."""
+    m = active_mesh()
+    if m is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, _fit_spec(kv_scale_spec(cfg, m), x.shape, m, relocate=True))
+
+
+def constrain_page_pool(x, cfg, scale: bool = False):
     """Pin a page-pool leaf at its WRITE sites (chunked-prefill page
     writes, decode per-slot appends, fork's CoW page copy) under the
     active mesh — the paged twin of `constrain_kv_cache`: the writes are
     page-indexed scatters GSPMD would otherwise resolve by replicating the
     whole pool every step. Rank >= 4 is a K/V pool (page axis at
-    ndim - 4); rank < 4 is a per-lane validity pool (page axis at
-    ndim - 2). No-op outside a mesh context."""
+    ndim - 4); rank 3 is an int8 dequant-scale pool (N, page_size, K);
+    rank 2 is a per-lane validity pool (page axis at ndim - 2). Pass
+    ``scale=True`` for a scale pool with extra leading (pattern-scan)
+    dims, where rank alone cannot tell it from a K/V pool. No-op outside
+    a mesh context."""
     m = active_mesh()
     if m is None:
         return x
-    if x.ndim >= 4:
+    if scale or x.ndim == 3:
+        spec = kv_scale_spec(cfg, m, lead=x.ndim - 3)
+    elif x.ndim >= 4:
         spec = page_pool_spec(cfg, m, lead=x.ndim - 4)
     else:
         spec = P(*([None] * (x.ndim - 2)), batch_axes(m), None)
@@ -259,6 +286,11 @@ def cache_specs_tree(cache_shapes, cfg, mesh: Mesh):
             return page_pool_spec(cfg, mesh, lead=nscan)
         if key.endswith("['pvalid']"):
             return P(*lead, ba, None)
+        if key.endswith("['kscale']") or key.endswith("['vscale']"):
+            # int8 dequant scales: ring (B, L, K) and paged (N, ps, K)
+            # share kv_scale_spec — MUST precede the ['attn'] fallback
+            # (which assumes the rank-4 K/V layout)
+            return kv_scale_spec(cfg, mesh, lead=nscan)
         if "['attn']" in key or "['xattn']" in key:
             if key.endswith("['valid']") or key.endswith("['pos']"):
                 return P(*lead, ba, None)

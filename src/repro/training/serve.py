@@ -47,10 +47,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import (ElasticPolicy, as_spec_policy, ragged_bucket,
-                               solve_budget)
+from repro.core.policy import (ElasticPolicy, ElasticSpec, as_spec_policy,
+                               ragged_bucket, solve_budget)
 from repro.models import (cache_init, decode_step, paged_cache_init,
                           prefill_chunk_step, prefill_into_slot)
+from repro.models.quant import (check_kv_dtype, check_weight_dtype,
+                                quantize_params_tree)
 from repro.runtime.pagedkv import (PagePool, copy_page_in_tree, n_pages_for,
                                    prefix_keys)
 from repro.runtime.scheduler import RequestHandle, SlotScheduler
@@ -213,7 +215,13 @@ class ServingEngine:
                  theta: float = 0.5, eos_id: Optional[int] = None,
                  step_flop_budget: Optional[float] = None, mesh=None,
                  n_replicas: Optional[int] = None, kv_layout: str = "ring",
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 kv_dtype: str = "fp32", weight_dtype: str = "fp32"):
+        self.kv_dtype = check_kv_dtype(kv_dtype)
+        self.weight_dtype = check_weight_dtype(weight_dtype)
+        # quantize base weights ONCE, before any sharding/jit sees the tree
+        # (scale leaves must exist when param specs are derived)
+        params = quantize_params_tree(params, self.weight_dtype)
         self.params, self.rp = params, router_params
         self.cfg, self.mode = cfg, mode
         # base policy = the elastic config's own knobs (threshold routing
@@ -222,6 +230,16 @@ class ServingEngine:
         self.spec, self._base_policy = as_spec_policy(elastic)
         if self._base_policy is not None:
             self._base_policy = self._base_policy.replace(theta=theta)
+        if (self.kv_dtype, self.weight_dtype) != ("fp32", "fp32"):
+            # the spec is what the traced graphs consult for cache writes,
+            # so it must carry the dtypes even when no elastic config was
+            # given (plain dense serving of a quantized model)
+            base_spec = self.spec if self.spec is not None else ElasticSpec()
+            self.spec = dataclasses.replace(
+                base_spec, kv_dtype=self.kv_dtype,
+                weight_dtype=self.weight_dtype)
+            if self._base_policy is None:   # keep spec => policy invariant
+                self._base_policy = ElasticPolicy.uniform(1.0, static=True)
         self.B, self.max_seq = batch_size, max_seq
         self.default_budget, self.theta = default_budget, theta
         self.eos_id = eos_id if eos_id is not None else cfg.eos_id
@@ -246,7 +264,8 @@ class ServingEngine:
                 # rows, plus one trash page per replica for masked writes
                 n_pages = B * self.pages_per_slot + R_
             self.pool = PagePool(n_pages, self.page_size, n_replicas=R_)
-            self._caches = paged_cache_init(cfg, n_pages, self.page_size)
+            self._caches = paged_cache_init(cfg, n_pages, self.page_size,
+                                            kv_dtype=self.kv_dtype)
             # host-authoritative page table, mirrored into every compiled
             # call as a traced operand (same precedent as self._t)
             self._table = np.full((B, self.pages_per_slot), -1, np.int32)
@@ -256,7 +275,8 @@ class ServingEngine:
             self._admit_counter = itertools.count()
             self._admit_seq = np.full((B,), -1, np.int64)
         else:
-            self._caches = cache_init(cfg, B, max_seq)
+            self._caches = cache_init(cfg, B, max_seq,
+                                      kv_dtype=self.kv_dtype)
         self._live_policy = (self._base_policy.broadcast_rows(B)
                              if self._use_policy else None)
         self._tok = jnp.zeros((B,), jnp.int32)
@@ -307,11 +327,11 @@ class ServingEngine:
     def _prefix_namespace(self, req: GenRequest) -> tuple:
         """Prefix-sharing hash namespace: pages hold post-gate K/V, so two
         requests may share a page only when every knob that shapes the
-        written values agrees — mode, solved budget, and theta (sampling
-        knobs don't touch K/V)."""
+        written values agrees — mode, solved budget, theta, and the KV
+        storage dtype (sampling knobs don't touch K/V)."""
         b = req.budget if req.budget is not None else self.default_budget
         return (self.mode, None if b is None else round(float(b), 6),
-                round(float(self.theta), 6))
+                round(float(self.theta), 6), self.kv_dtype)
 
     def paged_stats(self) -> dict:
         """Pool stats plus live-token page efficiency (host-side only)."""

@@ -159,6 +159,39 @@ def test_dtype_flags_large_bf16_upcast():
     assert dtype_lint._findings_for(_mini({"f": small}), "f") == []
 
 
+def test_dtype_flags_quantized_hbm_dequant():
+    """DTYPE-QUANT-HBM: a LARGE int8 -> f32 convert in a serve graph means
+    a quantized cache/weight was dequantized OUTSIDE the kernels — HBM sees
+    the f32 copy, forfeiting the bandwidth win. Small converts stay silent,
+    train is exempt (fp32 masters), and the same convert INSIDE a
+    pallas_call body (the fused-dequant pattern) never fires: the walker
+    skips kernel sub-jaxprs, which IS the allowlist."""
+    def f(q, s):
+        return q.astype(jnp.float32) * s
+
+    big = (jnp.zeros((512, 512), jnp.int8), jnp.ones((), jnp.float32))
+    ep = EntryPoint(f, big, {})
+    assert _rules(dtype_lint._findings_for(_mini({"f": ep}), "f")) \
+        == {"DTYPE-QUANT-HBM"}
+    assert dtype_lint._findings_for(_mini({"train": ep}), "train") == []
+    small = EntryPoint(
+        f, (jnp.zeros((8, 8), jnp.int8), jnp.ones((), jnp.float32)), {})
+    assert dtype_lint._findings_for(_mini({"f": small}), "f") == []
+
+    import jax.experimental.pallas as pl
+
+    def kern(q_ref, s_ref, o_ref):
+        o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+    def fused(q, s):
+        return pl.pallas_call(kern, out_shape=jax.ShapeDtypeStruct(
+            (512, 512), jnp.float32), interpret=True)(q, s)
+
+    inside = EntryPoint(fused, (jnp.zeros((512, 512), jnp.int8),
+                                jnp.ones((512, 512), jnp.float32)), {})
+    assert dtype_lint._findings_for(_mini({"k": inside}), "k") == []
+
+
 # ------------------------------ pallas ---------------------------------------
 
 def _rec(grid, block, shape, index_map, args=(), nsp_spec=None):

@@ -345,3 +345,74 @@ def test_sharded_serving_parity_and_live_remesh(tmp_path):
     for tag in ("SERVE-PARITY-OK", "SPMD-DONATE-OK", "REMESH-OK",
                 "ONE-SORT-OK", "KERNEL-SHARD-OK"):
         assert tag in out, out
+
+
+_QUANT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax
+import numpy as np
+from repro.configs import ElasticConfig, get_config
+from repro.models import model_init, router_init
+from repro.runtime.elastic import make_mesh
+from repro.training import GenRequest, ServingEngine
+
+cfg = dataclasses.replace(get_config("toy-lm", "smoke"), dtype="float32")
+ecfg = ElasticConfig(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+                     mha_head_topk=2, lora_rank=1)
+key = jax.random.PRNGKey(0)
+params = model_init(key, cfg, ecfg)
+rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+rng = np.random.default_rng(0)
+# all-greedy rows: cross-mesh token parity is a greedy contract
+reqs = [GenRequest(rng.integers(0, cfg.vocab_size, L, dtype=np.int32), 6,
+                   budget=b)
+        for L, b in ((5, 0.4), (13, 1.0), (16, None), (29, 0.6))]
+kw = dict(mode="infer", max_seq=48, kv_dtype="int8", weight_dtype="int8")
+
+# oracle: single-device int8 RING engine serving each request alone
+solo = ServingEngine(params, rp, cfg, ecfg, batch_size=2, **kw)
+oracle = [solo.generate([r])[0] for r in reqs]
+
+# ---- int8 paged engine on the 2x4 production mesh, staggered ----
+mesh = make_mesh((2, 4), ("data", "model"))
+eng = ServingEngine(params, rp, cfg, ecfg, batch_size=4, mesh=mesh,
+                    kv_layout="paged", page_size=8, **kw)
+assert eng.scheduler.n_replicas == 2
+h0 = eng.submit(reqs[0])
+eng.step(); eng.step()            # r0 is 2 tokens in when r1 lands
+h1 = eng.submit(reqs[1])
+eng.step()
+h2, h3 = eng.submit(reqs[2]), eng.submit(reqs[3])
+handles = [h0, h1, h2, h3]
+while not all(h.done for h in handles):
+    assert eng.step() > 0
+assert eng.compile_counts() == {"prefill": 1, "decode": 1}, \
+    eng.compile_counts()
+assert {eng.scheduler.replica_of(h.slot) for h in handles} == {0, 1}
+for h, o in zip(handles, oracle):     # token-for-token vs 1-device int8
+    np.testing.assert_array_equal(np.asarray(h.output), o)
+st = eng.paged_stats()
+assert st["allocated"] == 0 and st["free"] == st["usable"], st
+# the int8 pools AND their f32 scale siblings live on the mesh (the
+# sharding pins cover both leaves — docs/quantization.md)
+from jax.sharding import NamedSharding
+leaves = jax.tree.leaves(eng._caches)
+assert any(str(l.dtype) == "int8" for l in leaves), \
+    sorted({str(l.dtype) for l in leaves})
+for l in leaves:
+    assert isinstance(l.sharding, NamedSharding), l.sharding
+print("QUANT-SPMD-PARITY-OK")
+"""
+
+
+@pytest.mark.slow
+def test_quantized_serving_spmd_parity(tmp_path):
+    """int8 KV + int8 weights on the 2x4 (data, model) mesh: the sharded
+    paged engine is token-for-token identical to the single-device int8
+    ring engine on a staggered mixed-budget workload, compile counts stay
+    flat, the pool drains, and every cache leaf (int8 pool + f32 scale
+    sibling) is placed on the mesh."""
+    out = _run_spmd_script(_QUANT_SCRIPT)
+    assert "QUANT-SPMD-PARITY-OK" in out, out
