@@ -1,0 +1,305 @@
+"""Autoscale bench: the SLO controller vs fixed budgets under overload.
+
+Replays the same arrival schedule (bursty: 4x rate spike in the middle of
+the trace; full mode adds a diurnal sinusoid) and the same heavy-tailed,
+mixed-tenant request list through four policies on identical model state:
+
+  * controller — ``SLOController`` closes the loop on the elastic budget:
+    degrade admissions, then in-flight rows (``ElasticPolicy.set_row``,
+    zero recompiles), then shed, with hysteretic restore after the burst.
+  * fixed-1.0 / fixed-0.5 / fixed-0.25 — the open-loop baselines: every
+    request pinned to one budget for the whole trace.
+
+All rates and the SLO target are derived from calibrated service rates
+(drained on the actual request mix), so the bench is machine-speed
+invariant: base load is 45% of the measured full-budget service rate and
+the burst runs AT the measured FLOOR-budget service rate — roughly 2x
+what budget 1.0 can drain, while the degraded engine serves it at line
+rate.
+
+The headline is the goodput-vs-attainment trade: ``goodput_tok_s`` weights
+each SLO-met token by the budget it was served at, so fixed-0.25 cannot
+win by serving everything cheap, and fixed-1.0 cannot win by serving rich
+tokens that miss their SLO. Gates (enforced on the bursty trace):
+
+  G1 controller p95 TTFT <= SLO            G2 fixed-1.0 p95 TTFT > SLO
+  G3 controller goodput >= 1.3x best fixed baseline at comparable
+     attainment (within 0.02)              G4 queue drains, and the
+     controller's backlog peak < fixed-1.0's (no unbounded growth)
+  G5 compile_counts == {prefill: 1, decode: 1} through every degradation
+     stage (the one-compile contract survives the controller)
+
+Emits ``BENCH_autoscale.json`` rows {policy, trace, slo_ms, attainment,
+goodput_tok_s, tok_s, ttft_p95_ms, ...} plus harness `name,us_per_call,
+derived` lines (us_per_call = microseconds per generated token).
+
+Run: PYTHONPATH=src python benchmarks/autoscale.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, toy_cfg
+from benchmarks.workloads import (arrival_times, bursty_times, make_requests,
+                                  replay, summarize)
+from repro.configs import ElasticConfig
+from repro.models import model_init, router_init
+from repro.runtime import SLOController, SLOTarget
+from repro.training import GenRequest, ServingEngine
+
+# dense MLP: the paged layout excludes moefied experts (chunked prefill)
+ELASTIC = ElasticConfig(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+                        mha_head_topk=2, lora_rank=1)
+FLOOR = 0.25
+BATCH = 8
+FLOP = 2.0     # per-replica step budget: 2 full-budget slots, 8 at floor
+
+
+def build_engine(state, max_seq, controller=None):
+    params, rp, cfg = state
+    return ServingEngine(params, rp, cfg, ELASTIC, mode="infer",
+                         batch_size=BATCH, max_seq=max_seq,
+                         kv_layout="paged", page_size=16,
+                         step_flop_budget=FLOP, controller=controller)
+
+
+def warm(eng, cfg):
+    """Compile prefill + decode graphs outside any timed window."""
+    hs = [eng.submit(GenRequest(
+        np.arange(12, dtype=np.int32) % cfg.vocab_size, 4, seed=990 + i))
+        for i in range(2)]
+    while not all(h.done for h in hs):
+        eng.step()
+
+
+def _drain_rate(eng, reqs):
+    hs = [eng.submit(r) for r in reqs]
+    t0 = time.perf_counter()
+    while not all(h.done for h in hs):
+        eng.step()
+    return len(reqs) / (time.perf_counter() - t0)
+
+
+def calibrate(state, max_seq, reqs):
+    """(steady decode step seconds, req/s at budget 1.0, req/s at the
+    floor budget). Service rates are measured by draining saturated
+    batches of the ACTUAL request mix, so chunked-prefill cost (admission
+    streams every chunk inline — a budget-independent ceiling) and
+    per-step host overhead are folded in; the analytic concurrency-times-
+    tokens-per-step estimate misses both and overstates floor headroom."""
+    eng = build_engine(state, max_seq)
+    cfg = state[2]
+    warm(eng, cfg)
+    floor_reqs = [dataclasses.replace(r, budget=FLOOR, seed=r.seed + 500)
+                  for r in reqs]
+    # best-of-3: a transient background load during ONE measurement must
+    # not soften the derived burst pressure / SLO for the whole bench —
+    # take the fastest step and the highest service rate observed
+    step_s, svc1, svc_floor = float("inf"), 0.0, 0.0
+    for _ in range(3):
+        hs = [eng.submit(GenRequest(
+            np.arange(16, dtype=np.int32) % cfg.vocab_size, 8,
+            seed=900 + i)) for i in range(BATCH)]
+        t0 = time.perf_counter()
+        steps = 0
+        while not all(h.done for h in hs):
+            eng.step()
+            steps += 1
+        step_s = min(step_s,
+                     (time.perf_counter() - t0) / max(steps, 1))
+        svc1 = max(svc1, _drain_rate(eng, reqs))
+        svc_floor = max(svc_floor, _drain_rate(eng, floor_reqs))
+    return step_s, svc1, svc_floor
+
+
+def run_policy(state, max_seq, reqs, arrive, targets, step_s, slo_ms,
+               controlled):
+    ctrl = None
+    if controlled:
+        # step_down 0.75: admission hits the floor ONE eval after the burst
+        # lands (the onset transient is the whole G1 risk); patience 2 +
+        # 3x-SLO sample TTL keep restore out of the burst (mid-burst
+        # restore thrash re-builds the backlog at budget 1.0)
+        ctrl = SLOController(
+            targets=targets, floor=FLOOR, step_down=0.75, step_up=0.5,
+            window=32, min_samples=3,
+            eval_interval_s=max(0.03, 2.0 * step_s),
+            hysteresis=0.7, patience=2, queue_factor=1.0,
+            escalate_after=10 ** 6,   # single-host paged: no remesh stage
+            sample_ttl_s=max(0.5, 3.0 * slo_ms / 1e3))
+    # warm BEFORE attaching the controller: compile time must be neither
+    # inside the timed trace nor a (huge) TTFT sample in its windows
+    eng = build_engine(state, max_seq)
+    warm(eng, state[2])
+    eng.controller = ctrl
+    handles, elapsed, info = replay(eng, reqs, arrive)
+    s = summarize(handles, elapsed, targets)
+    s["queue_peak"] = info["queue_peak"]
+    s["compiles"] = eng.compile_counts()
+    s["drained"] = (eng.scheduler.pending == 0 and not eng.has_work)
+    if ctrl is not None:
+        s["controller"] = ctrl.summary()
+    return s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests, bursty trace only)")
+    ap.add_argument("--out", default="BENCH_autoscale.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        # n sets the burst LENGTH (burst_frac * n requests at the burst
+        # rate): long enough that fixed-1.0's backlog decisively blows the
+        # SLO — a short spike sits on the G2 knife-edge
+        n, traces = 140, ("bursty",)
+        prompt_hi, new_lo, new_hi, max_seq = 16, 4, 16, 48
+    else:
+        n, traces = 160, ("bursty", "diurnal")
+        prompt_hi, new_lo, new_hi, max_seq = 32, 4, 32, 80
+
+    # 2x the stock toy width: step time must be compute-dominated, not
+    # host-overhead-dominated, or calibration drifts vs the timed trace
+    cfg = toy_cfg(d_model=256)
+    key = jax.random.PRNGKey(0)
+    params = model_init(key, cfg, ELASTIC)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ELASTIC)
+    state = (params, rp, cfg)
+
+    cal_reqs = make_requests(24, cfg.vocab_size, prompt_hi=prompt_hi,
+                             max_new_lo=new_lo, max_new_hi=new_hi, seed=5)
+    step_s, svc1, svc_floor = calibrate(state, max_seq, cal_reqs)
+    print(f"calibrated: decode step {step_s * 1e3:.2f} ms, service "
+          f"{svc1:.1f} req/s @1.0, {svc_floor:.1f} req/s @floor")
+
+    # SLO target: a healthy request's TTFT is a few step times of queue
+    # wait + chunked prefill; 40x steady step is met with margin at base
+    # load (and by the degraded engine's onset transient) and blown once
+    # a fixed-1.0 burst backlog builds.
+    slo_ms = max(50.0, 40.0 * step_s * 1e3)
+    targets = {
+        "interactive": SLOTarget(p95_ttft_ms=slo_ms, shed_order=0),
+        "batch": SLOTarget(p95_ttft_ms=4.0 * slo_ms, shed_order=1,
+                           deadline_ms=40.0 * slo_ms),
+        "default": SLOTarget(p95_ttft_ms=slo_ms),
+    }
+    mix = {"interactive": 0.7, "batch": 0.3}
+
+    # base load = 45% of measured full-budget capacity; the burst runs
+    # AT the measured FLOOR capacity — fixed-1.0's backlog grows at
+    # roughly half the burst rate (decisive SLO blowout), while the
+    # degraded engine serves at line rate and sheds only the onset
+    # transient past its keep depth
+    base_rate = 0.45 * svc1
+    burst_rate = 0.95 * svc_floor
+    burst_factor = max(2.0, burst_rate / base_rate)
+    print(f"base rate {base_rate:.1f} req/s, burst {burst_rate:.1f} req/s "
+          f"({burst_rate / svc1:.1f}x capacity@1.0); "
+          f"SLO p95 TTFT {slo_ms:.0f} ms")
+
+    policies = [("controller", None), ("fixed-1.0", 1.0),
+                ("fixed-0.5", 0.5), ("fixed-0.25", 0.25)]
+    rows, failures = [], []
+    for trace in traces:
+        if trace == "bursty":
+            rate = base_rate
+            arrive = bursty_times(np.random.default_rng(3), rate, n,
+                                  burst_factor=burst_factor,
+                                  burst_frac=0.30)
+        else:
+            # diurnal swings +-80% around a hotter base: peaks overload
+            # budget 1.0, troughs sit under hysteresis so restore fires
+            rate = 0.8 * svc1
+            arrive = arrival_times(trace, rate, n, seed=3)
+        by_policy = {}
+        for name, budget in policies:
+            reqs = make_requests(n, cfg.vocab_size, prompt_hi=prompt_hi,
+                                 max_new_lo=new_lo, max_new_hi=new_hi,
+                                 class_mix=mix, budget=budget, seed=11)
+            s = run_policy(state, max_seq, reqs, arrive, targets, step_s,
+                           slo_ms, controlled=budget is None)
+            by_policy[name] = s
+            ctrl_sum = s.get("controller")
+            rows.append({
+                "policy": name, "trace": trace, "slo_ms": round(slo_ms, 2),
+                "arrival_rate": round(rate, 2),
+                "attainment": round(s["attainment"], 4),
+                "goodput_tok_s": round(s["goodput_tok_s"], 2),
+                "tok_s": round(s["tok_s"], 2),
+                "ttft_p95_ms": s["ttft_p95_ms"], "p95_ms": s["p95_ms"],
+                "served": s["served"], "shed": s["shed"],
+                "expired": s["expired"], "queue_peak": s["queue_peak"],
+                "elapsed_s": round(s["elapsed_s"], 3),
+                "admission_budget": (ctrl_sum or {}).get("admission_budget"),
+                "inflight_budget": (ctrl_sum or {}).get("inflight_budget"),
+            })
+            emit(f"autoscale_{trace}_{name}",
+                 s["elapsed_s"] / max(s["n_tokens"], 1) * 1e6,
+                 f"{s['goodput_tok_s']:.1f}good/s@{s['attainment']:.2f}")
+            if s["compiles"] != {"prefill": 1, "decode": 1}:
+                failures.append(f"G5 {trace}/{name}: compiles "
+                                f"{s['compiles']} != 1/1")
+            if not s["drained"]:
+                failures.append(f"G4 {trace}/{name}: queue did not drain")
+
+        ctrl, fix1 = by_policy["controller"], by_policy["fixed-1.0"]
+        if trace == "bursty":
+            if not ctrl["ttft_p95_ms"] <= slo_ms:
+                failures.append(f"G1: controller p95 TTFT "
+                                f"{ctrl['ttft_p95_ms']:.0f} ms > SLO "
+                                f"{slo_ms:.0f} ms")
+            if not fix1["ttft_p95_ms"] > slo_ms:
+                failures.append(f"G2: fixed-1.0 p95 TTFT "
+                                f"{fix1['ttft_p95_ms']:.0f} ms met the SLO "
+                                f"— burst too weak to discriminate")
+            rivals = [(nm, by_policy[nm]) for nm, b in policies
+                      if b is not None
+                      and by_policy[nm]["attainment"]
+                      >= ctrl["attainment"] - 0.02]
+            if rivals:
+                best_nm, best = max(rivals,
+                                    key=lambda kv: kv[1]["goodput_tok_s"])
+                if ctrl["goodput_tok_s"] < 1.3 * best["goodput_tok_s"]:
+                    failures.append(
+                        f"G3: controller goodput "
+                        f"{ctrl['goodput_tok_s']:.1f} < 1.3x {best_nm}'s "
+                        f"{best['goodput_tok_s']:.1f} at comparable "
+                        f"attainment")
+            else:
+                print("G3: no fixed baseline reaches the controller's "
+                      "attainment — controller dominates outright")
+            if not ctrl["queue_peak"] < fix1["queue_peak"]:
+                failures.append(
+                    f"G4: controller backlog peak {ctrl['queue_peak']} !< "
+                    f"fixed-1.0's {fix1['queue_peak']}")
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"\nwrote {args.out} ({len(rows)} rows)")
+    for r in rows:
+        print(f"  {r['trace']:8s} {r['policy']:11s} "
+              f"attain={r['attainment']:.2f} "
+              f"goodput={r['goodput_tok_s']:7.1f} tok/s "
+              f"ttft_p95={r['ttft_p95_ms']:8.1f} ms "
+              f"shed={r['shed']:2d} queue_peak={r['queue_peak']}")
+    if failures:
+        for msg in failures:
+            print(f"[autoscale] GATE FAIL: {msg}")
+        sys.exit(1)
+    print("[autoscale] all gates passed: controller-on dominates "
+          "fixed budgets under overload")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """Schema-drift gate for the checked-in benchmark trajectories.
 
-`BENCH_serving.json` / `BENCH_ragged.json` are TRACKED: the committed rows
+`BENCH_serving.json` / `BENCH_ragged.json` / `BENCH_autoscale.json` are
+TRACKED: the committed rows
 are the performance trajectory reviewers diff against. This gate keeps that
 trajectory honest — CI runs the fresh `--smoke` bench to a scratch path and
 fails if the checked-in file no longer speaks the same schema (a column was
@@ -10,8 +11,8 @@ without the committed file being refreshed).
 Checked:
   * both files are non-empty JSON lists of row objects;
   * the union of row keys matches exactly (missing AND stale columns fail);
-  * categorical axes (`mode`, `backend`, `budget`, `kv_dtype`) present in
-    the fresh run are covered by the checked-in rows.
+  * categorical axes (`mode`, `backend`, `budget`, `kv_dtype`, `policy`,
+    `trace`) present in the fresh run are covered by the checked-in rows.
 
 Findings are reported through ``repro.analysis``'s Finding/Report types, so
 this gate's ``--json`` artifact diffs cleanly against the lint-graphs job's
@@ -61,7 +62,7 @@ def check(tracked_path: str, fresh_path: str) -> list:
             "BENCH-SCHEMA-STALE-COL", target,
             f"stale columns in the tracked file: {sorted(tkeys - fkeys)} — "
             f"the bench no longer emits them"))
-    for col in ("mode", "backend", "budget", "kv_dtype"):
+    for col in ("mode", "backend", "budget", "kv_dtype", "policy", "trace"):
         fv = {r[col] for r in fresh if col in r}
         tv = {r[col] for r in tracked if col in r}
         if fv and not fv <= tv:

@@ -10,7 +10,8 @@ toy config) through two serving disciplines on identical model state:
     batch wait for the next one.
 
 Emits ``BENCH_serving.json`` rows {mode, arrival_rate, budgets, tok_s,
-mean_ms, p95_ms, occupancy} plus the harness `name,us_per_call,derived`
+mean_ms, p50_ms, p95_ms, ttft_p50_ms, ttft_p95_ms, itl_mean_ms,
+itl_p95_ms, occupancy} plus the harness `name,us_per_call,derived`
 lines (us_per_call = microseconds per generated token).
 
 Expected shape: continuous wins latency at every rate (no batch-formation
@@ -114,20 +115,24 @@ def main():
             cont.scheduler.reset_stats()
             handles, dt_c = open_loop(cont, reqs, rate, arrive=arrive)
             tok_c = sum(len(h.output) for h in handles)
-            mean_c, p95_c = latency_stats(handles)
+            stats = latency_stats(handles)
             rows.append({"mode": "continuous", "arrival_rate": rate,
                          "budgets": budgets, "tok_s": tok_c / dt_c,
-                         "mean_ms": mean_c, "p95_ms": p95_c,
-                         "occupancy": cont.occupancy})
+                         "occupancy": cont.occupancy, **stats})
             emit(f"serve_cont_r{rate:g}_b{len(budgets)}",
                  dt_c / max(tok_c, 1) * 1e6, f"{tok_c / dt_c:.1f}tok/s")
 
             tok_l, dt_l, lat = lockstep(lock, reqs, arrive)
             lat = np.asarray(lat)
+            # lockstep has no per-token timestamps (generate() is opaque):
+            # TTFT/ITL columns stay None so the row schema matches
             rows.append({"mode": "lockstep", "arrival_rate": rate,
                          "budgets": budgets, "tok_s": tok_l / dt_l,
                          "mean_ms": float(lat.mean() * 1e3),
+                         "p50_ms": float(np.percentile(lat, 50) * 1e3),
                          "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                         "ttft_p50_ms": None, "ttft_p95_ms": None,
+                         "itl_mean_ms": None, "itl_p95_ms": None,
                          "occupancy": None})
             emit(f"serve_lock_r{rate:g}_b{len(budgets)}",
                  dt_l / max(tok_l, 1) * 1e6, f"{tok_l / dt_l:.1f}tok/s")

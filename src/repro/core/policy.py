@@ -151,11 +151,29 @@ class ElasticPolicy:
             lambda v: jnp.broadcast_to(
                 jnp.asarray(v, jnp.float32), (batch,)) + 0.0, self)
 
-    def set_row(self, i, row: "ElasticPolicy") -> "ElasticPolicy":
+    def clamp_capacities(self, floor: float) -> "ElasticPolicy":
+        """Lower-bound every capacity fraction at ``floor`` (in (0, 1]).
+        The SLO controller's degradation stages go through this so a
+        misconfigured or runaway controller can never drive a live row
+        to a vanishing capacity; top-k leaves already floor at 1 in the
+        roofline solver and ``theta``/``student`` are not budgets."""
+        f = jnp.float32(floor)
+        clamp = lambda v: jnp.maximum(jnp.asarray(v, jnp.float32), f)
+        return self.replace(
+            mlp_token_capacity=clamp(self.mlp_token_capacity),
+            mha_token_capacity=clamp(self.mha_token_capacity),
+            vlm_token_capacity=clamp(self.vlm_token_capacity))
+
+    def set_row(self, i, row: "ElasticPolicy", *,
+                floor: Optional[float] = None) -> "ElasticPolicy":
         """Splice ``row`` (scalar leaves) into batch row ``i`` of this
         (B,)-leaf policy. ``i`` may be traced (dynamic_update_index), so
         admitting a request into a serving slot NEVER recompiles: the row
-        update is part of the one compiled admission graph."""
+        update is part of the one compiled admission graph. ``floor``
+        (optional) bounds the spliced row's capacities from below via
+        ``clamp_capacities`` — the degradation path's safety rail."""
+        if floor is not None:
+            row = row.clamp_capacities(floor)
         def upd(live, r):
             live = jnp.asarray(live, jnp.float32)
             return jax.lax.dynamic_update_index_in_dim(

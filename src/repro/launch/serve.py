@@ -99,11 +99,29 @@ def open_loop(engine, requests, rate: float, seed: int = 0, arrive=None,
     return handles, time.perf_counter() - t0
 
 
-def latency_stats(handles):
-    lat = np.asarray([h.latency for h in handles if h.latency is not None])
-    if lat.size == 0:
-        return 0.0, 0.0
-    return float(lat.mean() * 1e3), float(np.percentile(lat, 95) * 1e3)
+def latency_stats(handles) -> dict:
+    """Latency columns (milliseconds) over SERVED handles — rejected /
+    deadline-expired requests are excluded (their "latency" is time to
+    rejection, not service). Columns: end-to-end mean/p50/p95, TTFT
+    (arrival -> first token: queue wait + prefill) p50/p95, and
+    inter-token latency (decode-step gap) mean/p95 — all sourced from the
+    per-token timestamps on ``RequestHandle``."""
+    done = [h for h in handles
+            if h is not None and h.latency is not None
+            and h.status != "rejected"]
+    lat = np.asarray([h.latency for h in done], float)
+    ttft = np.asarray([h.ttft for h in done if h.ttft is not None], float)
+    itl = np.asarray([g for h in done for g in h.inter_token()], float)
+    pct = lambda a, q: float(np.percentile(a, q) * 1e3) if a.size else 0.0
+    return {
+        "mean_ms": float(lat.mean() * 1e3) if lat.size else 0.0,
+        "p50_ms": pct(lat, 50),
+        "p95_ms": pct(lat, 95),
+        "ttft_p50_ms": pct(ttft, 50),
+        "ttft_p95_ms": pct(ttft, 95),
+        "itl_mean_ms": float(itl.mean() * 1e3) if itl.size else 0.0,
+        "itl_p95_ms": pct(itl, 95),
+    }
 
 
 def replica_report(engine, handles) -> str:
@@ -122,10 +140,13 @@ def replica_report(engine, handles) -> str:
          f"{len(handles) - len(hs_all)} earlier requests excluded)"]
     for r in range(sched.n_replicas):
         hs = [h for h in hs_all if sched.replica_of(h.slot) == r]
-        mean_ms, p95_ms = latency_stats(hs)
-        lines.append(f"  replica {r}: {len(hs)} requests, occupancy "
-                     f"{sched.replica_occupancy[r]:.0%}, latency mean "
-                     f"{mean_ms:.0f} ms / p95 {p95_ms:.0f} ms")
+        st = latency_stats(hs)
+        lines.append(
+            f"  replica {r}: {len(hs)} requests, occupancy "
+            f"{sched.replica_occupancy[r]:.0%}, e2e mean {st['mean_ms']:.0f}"
+            f" / p50 {st['p50_ms']:.0f} / p95 {st['p95_ms']:.0f} ms, "
+            f"ttft p95 {st['ttft_p95_ms']:.0f} ms, "
+            f"itl p95 {st['itl_p95_ms']:.1f} ms")
     return "\n".join(lines)
 
 
@@ -165,6 +186,22 @@ def main():
                     help="open-loop mode: Poisson request arrivals at this "
                          "rate (req/s); reports per-request latency and "
                          "slot occupancy on top of throughput")
+    ap.add_argument("--trace", default="poisson",
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="open-loop arrival process (benchmarks/workloads"
+                         ".py): 'bursty' = 4x burst in the middle 40%% of "
+                         "requests, 'diurnal' = sinusoidal rate around "
+                         "--arrival-rate")
+    ap.add_argument("--controller", action="store_true",
+                    help="enable the SLO feedback controller (graceful "
+                         "degradation: admission budgets -> in-flight "
+                         "budgets -> load shedding -> remesh escalation; "
+                         "docs/serving.md)")
+    ap.add_argument("--slo-p95-ms", type=float, default=None,
+                    help="p95 TTFT SLO target in ms for the default class "
+                         "(implies --controller; default 500)")
+    ap.add_argument("--slo-floor", type=float, default=0.25,
+                    help="lowest budget the controller may degrade to")
     ap.add_argument("--flop-budget", type=float, default=None,
                     help="per-replica, per-step FLOP admission budget in "
                          "full-budget-row units (default: slots per "
@@ -220,10 +257,18 @@ def main():
         print(f"[serve] --kv-layout paged: dropping mlp_n_experts="
               f"{ecfg.mlp_n_experts} (dense MLP required; see docs/paged_kv.md)")
         ecfg = dataclasses.replace(ecfg, mlp_n_experts=0, mlp_expert_topk=0)
+    controller = None
+    if args.controller or args.slo_p95_ms is not None:
+        from repro.runtime.controller import SLOController, SLOTarget
+        slo_ms = args.slo_p95_ms if args.slo_p95_ms is not None else 500.0
+        controller = SLOController(
+            targets={"default": SLOTarget(p95_ttft_ms=slo_ms)},
+            floor=args.slo_floor)
     key = jax.random.PRNGKey(0)
     params = model_init(key, cfg, ecfg)
     rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
     engine = ServingEngine(params, rp, cfg, ecfg, mode=args.mode,
+                           controller=controller,
                            batch_size=args.batch,
                            max_seq=args.prompt_len + args.max_new,
                            eos_id=args.eos,
@@ -242,19 +287,46 @@ def main():
             for i in range(args.requests)]
 
     if args.arrival_rate is not None:
+        arrive = None
+        if args.trace != "poisson":
+            try:
+                from benchmarks.workloads import arrival_times
+            except ImportError:     # not launched from the repo root
+                import pathlib
+                import sys
+                sys.path.insert(
+                    0, str(pathlib.Path(__file__).resolve().parents[3]))
+                from benchmarks.workloads import arrival_times
+            arrive = arrival_times(args.trace, args.arrival_rate,
+                                   len(reqs), seed=0)
         # warm the compile caches outside the timed window
         engine.generate([reqs[0]])
         engine.scheduler.reset_stats()
         handles, dt = open_loop(engine, reqs, args.arrival_rate,
+                                arrive=arrive,
                                 remesh_at=args.remesh_at,
                                 remesh_to=args.remesh_to)
         n_tok = sum(len(h.output) for h in handles)
-        mean_ms, p95_ms = latency_stats(handles)
-        print(f"open loop: {len(reqs)} requests @ {args.arrival_rate} req/s, "
-              f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
-        print(f"latency: mean {mean_ms:.0f} ms, p95 {p95_ms:.0f} ms; "
+        st = latency_stats(handles)
+        print(f"open loop: {len(reqs)} requests @ {args.arrival_rate} req/s "
+              f"({args.trace}), {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s)")
+        print(f"latency: e2e mean {st['mean_ms']:.0f} / p50 "
+              f"{st['p50_ms']:.0f} / p95 {st['p95_ms']:.0f} ms; "
+              f"ttft p50 {st['ttft_p50_ms']:.0f} / p95 "
+              f"{st['ttft_p95_ms']:.0f} ms; itl mean "
+              f"{st['itl_mean_ms']:.1f} / p95 {st['itl_p95_ms']:.1f} ms; "
               f"slot occupancy {engine.occupancy:.0%} "
               f"(budgets={budgets or 'config-default'})")
+        if controller is not None:
+            cs = controller.summary()
+            served = sum(h.status == "done" for h in handles)
+            print(f"controller: admission {cs['admission_budget']:.2f}, "
+                  f"inflight {cs['inflight_budget']:.2f} after "
+                  f"{cs['evals']} evals; events {cs['events'] or '{}'}; "
+                  f"served {served}, shed {engine.n_rejected}, expired "
+                  f"{engine.n_expired} (slo p95 ttft "
+                  f"{controller.target_for('default').p95_ttft_ms:.0f} ms)")
         if engine.scheduler.n_replicas > 1 or mesh is not None:
             print(replica_report(engine, handles))
     else:

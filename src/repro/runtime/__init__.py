@@ -1,9 +1,11 @@
 from repro.runtime import sharding
+from repro.runtime.controller import SLOController, SLOTarget
 from repro.runtime.elastic import (make_mesh, rescale_serving_state,
                                    rescale_training_state, reshard,
                                    valid_mesh_shapes)
 from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
-                                           StragglerWatchdog, run_resilient,
+                                           StragglerWatchdog, maybe_escalate,
+                                           remesh_fallback, run_resilient,
                                            serve_resilient)
 from repro.runtime.pagedkv import PagePool
 from repro.runtime.scheduler import RequestHandle, SlotScheduler

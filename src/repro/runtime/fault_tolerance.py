@@ -54,8 +54,17 @@ class StragglerWatchdog:
             self.flagged.append((step, dt, self.ewma))
             log.warning("straggler: step %d took %.3fs (ewma %.3fs) — "
                         "flagging for re-dispatch", step, dt, self.ewma)
-        self.ewma = dt if self.ewma is None else \
-            self.decay * self.ewma + (1 - self.decay) * dt
+            # A flagged sample is EXCLUDED from the baseline (its dt is
+            # clamped out of the EWMA entirely): folding a straggler's dt
+            # in would inflate the baseline by up to
+            # `decay + (1-decay)*threshold` per flagged step, so a
+            # sustained slowdown would stop being flagged after a few
+            # steps — exactly the signal the watchdog exists to hold.
+            # The EWMA tracks what a HEALTHY step costs; stragglers are
+            # anomalies against it, not contributors to it.
+        else:
+            self.ewma = dt if self.ewma is None else \
+                self.decay * self.ewma + (1 - self.decay) * dt
         return slow
 
 
@@ -94,6 +103,54 @@ def run_resilient(
     return metrics, restarts
 
 
+def remesh_fallback(engine, shapes: list) -> object:
+    """Drain + re-mesh ``engine`` onto the first usable shape popped from
+    ``shapes`` (mutated in place). An unusable shape (fewer devices left
+    than it needs, batch not divisible by its data axis) is skipped rather
+    than allowed to kill the server — the exhausted list still ends at the
+    single-device fallback (``None`` mesh). Returns the mesh re-meshed to
+    (``None`` for single device). Raises only when even the single-device
+    fallback fails."""
+    from repro.runtime.elastic import make_mesh
+    while True:
+        shape = shapes.pop(0) if shapes else None
+        try:
+            mesh = (make_mesh(shape, ("data", "model"))
+                    if shape is not None else None)
+            engine.reshard(mesh)
+        except Exception as fe:
+            if shape is None:         # even 1 device failed: give up
+                raise
+            log.warning("fallback shape %s unusable (%s); trying "
+                        "the next", shape, fe)
+            continue
+        return mesh
+
+
+def maybe_escalate(engine, shapes: list) -> bool:
+    """SLO-controller saturation -> remesh escalation (degradation stage
+    4): when the engine's controller has been pinned at the floor budget
+    past its patience (``should_escalate``), drain + re-mesh onto the next
+    fallback shape so the replica axis itself grows/changes — the knob
+    beyond the budget knob. Consumes the escalation either way (a declined
+    escalation — no shapes left, or a paged engine that cannot reshard —
+    must not re-fire every step). Returns True if a remesh happened."""
+    ctrl = getattr(engine, "controller", None)
+    if ctrl is None or not getattr(ctrl, "should_escalate", False):
+        return False
+    if not shapes or getattr(engine, "kv_layout", "ring") != "ring":
+        log.warning("controller escalation declined: %s",
+                    "no fallback shapes left" if not shapes
+                    else "paged engine cannot reshard live")
+        ctrl.notify_remeshed()
+        return False
+    mesh = remesh_fallback(engine, shapes)
+    log.warning("controller saturated at floor budget; escalated to %s",
+                "1 device" if mesh is None else dict(mesh.shape))
+    ctrl.notify_remeshed()
+    return True
+
+
 def serve_resilient(
     engine, *,
     fallback_shapes=(), max_restarts: int = 3,
@@ -111,12 +168,16 @@ def serve_resilient(
     caches, which ``engine.reshard`` moves, so every running request resumes
     with identical (bitwise, greedy) tokens on the new mesh.
 
+    If the engine carries an ``SLOController`` that saturates at the floor
+    budget (``should_escalate``), the SAME fallback-shape path runs as a
+    proactive escalation (``maybe_escalate``) — degradation stage 4.
+
     Returns ``(n_steps, n_restarts)``."""
-    from repro.runtime.elastic import make_mesh
     shapes = list(fallback_shapes)
     steps = restarts = 0
     while engine.has_work:
         try:
+            maybe_escalate(engine, shapes)
             if injector is not None:
                 injector.maybe_fail(steps)
             t0 = time.perf_counter()
@@ -128,24 +189,8 @@ def serve_resilient(
             restarts += 1
             if restarts > max_restarts:
                 raise
-            # try the fallback shapes in order; an unusable one (fewer
-            # devices left than it needs, batch not divisible by its data
-            # axis) is skipped rather than allowed to kill the server —
-            # the exhausted list still ends at the single-device fallback
-            while True:
-                shape = shapes.pop(0) if shapes else None
-                try:
-                    mesh = (make_mesh(shape, ("data", "model"))
-                            if shape is not None else None)
-                    engine.reshard(mesh)
-                except Exception as fe:
-                    if shape is None:     # even 1 device failed: give up
-                        raise
-                    log.warning("fallback shape %s unusable (%s); trying "
-                                "the next", shape, fe)
-                    continue
-                log.warning("serving step %d failed (%s); drained + "
-                            "re-meshed to %s", steps, e,
-                            "1 device" if mesh is None else dict(mesh.shape))
-                break
+            mesh = remesh_fallback(engine, shapes)
+            log.warning("serving step %d failed (%s); drained + "
+                        "re-meshed to %s", steps, e,
+                        "1 device" if mesh is None else dict(mesh.shape))
     return steps, restarts

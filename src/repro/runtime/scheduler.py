@@ -5,21 +5,26 @@ step over all of them, finished/empty slots masked). This module owns the
 host-side bookkeeping around that array:
 
 * ``RequestHandle`` — the lifecycle object ``engine.submit`` returns:
-  QUEUED -> RUNNING -> DONE | CANCELLED, a streaming ``tokens()`` iterator,
-  and per-request latency timestamps.
+  QUEUED -> RUNNING -> DONE | CANCELLED | REJECTED, a streaming
+  ``tokens()`` iterator, and per-token latency timestamps (TTFT and
+  inter-token gaps feed the SLO controller, see ``runtime/controller.py``).
 
-* ``SlotScheduler`` — FIFO admission of queued requests into free slots,
-  packed against a per-replica, per-step FLOP budget: each request costs its
+* ``SlotScheduler`` — admission of queued requests into free slots, packed
+  against a per-replica, per-step FLOP budget: each request costs its
   compute budget (the roofline active-FLOP fraction its ``ElasticPolicy``
   was solved for; 1.0 = full teacher row), and a request is placed on the
-  least-loaded replica whose occupied cost sum stays within ``flop_budget``.
-  Low-budget requests therefore co-schedule more densely — elasticity is a
-  *scheduling* signal, not just a quality knob. Under an SPMD mesh the slot
-  array carries a data-parallel replica axis (flat slot i -> replica
-  i // slots_per_replica, exactly the mesh's batch-shard placement);
-  ``n_replicas=1`` (the default) is the old single-device behaviour.
-  ``flop_budget=None`` means "one full-budget row per slot" (admission
-  limited only by free slots).
+  least-loaded replica whose occupied cost sum stays within
+  ``flop_budget``. Low-budget requests therefore co-schedule more densely —
+  elasticity is a *scheduling* signal, not just a quality knob. Requests
+  queue per tenant class (FIFO within a class, earliest-arrival across
+  classes, so a single class reproduces the old global FIFO exactly), carry
+  optional queue deadlines (expired entries are dropped before they burn a
+  prefill, finish reason ``deadline_exceeded``), and can be shed under
+  overload (finish reason ``rejected`` + a Retry-After hint on the handle).
+  Under an SPMD mesh the slot array carries a data-parallel replica axis
+  (flat slot i -> replica i // slots_per_replica); ``n_replicas=1`` (the
+  default) is the old single-device behaviour. ``flop_budget=None`` means
+  "one full-budget row per slot" (admission limited only by free slots).
 
 The scheduler is deliberately model-free: it never touches jax. The engine
 calls ``admit()`` / ``free()`` / ``tick()`` around its compiled steps.
@@ -29,12 +34,19 @@ from __future__ import annotations
 import itertools
 import time
 from collections import deque
-from typing import Iterator, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple
 
 QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 CANCELLED = "cancelled"
+REJECTED = "rejected"
+
+# Terminal finish reasons that map to the REJECTED status: the server
+# declined to serve the request (shed under overload, or its queue deadline
+# passed before admission) — typed so clients can distinguish "retry later"
+# from a served completion.
+_REJECT_REASONS = ("rejected", "deadline_exceeded")
 
 # Admission-cost floor: a request whose roofline budget fraction rounds to
 # ~0 FLOPs still occupies a decode-slot lane of the compiled step (and, in
@@ -44,48 +56,81 @@ CANCELLED = "cancelled"
 # never cheaper than 1/1024 of a full-budget row.
 MIN_COST = 2.0 ** -10
 
+DEFAULT_TENANT = "default"
+
 
 class RequestHandle:
     """Lifecycle handle for one submitted request.
 
     ``tokens()`` is a pull-based stream: it yields tokens already produced
     and, while the request is live, drives ``engine.step()`` to produce
-    more. ``done`` is True once the request finished or was cancelled;
+    more. ``done`` is True once the request reached any terminal state;
     ``output`` is the generated tokens so far (a list of ints).
+
+    Timestamps come from the injected ``clock`` (default
+    ``time.perf_counter``) so tests and the SLO controller can drive a
+    fully deterministic clock: ``t_submit``, ``t_first``, per-token
+    ``t_tokens``, ``t_done``. ``deadline`` (absolute, same clock) expires
+    the request while queued; ``retry_after`` is the server's hint
+    (seconds) when the request was shed.
     """
 
     _ids = itertools.count()
 
-    def __init__(self, request, engine=None):
+    def __init__(self, request, engine=None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.id = next(self._ids)
         self.request = request
         self.status = QUEUED
         self.slot: Optional[int] = None
         self.output: List[int] = []
-        self.finish_reason: Optional[str] = None   # length | eos | cancelled
-        self.t_submit = time.perf_counter()
+        # length | eos | cancelled | rejected | deadline_exceeded
+        self.finish_reason: Optional[str] = None
+        self._clock = clock
+        self.t_submit = clock()
         self.t_first: Optional[float] = None
         self.t_done: Optional[float] = None
+        self.t_tokens: List[float] = []
+        self.tenant: str = DEFAULT_TENANT
+        self.deadline: Optional[float] = None
+        self.retry_after: Optional[float] = None
+        self.budget_served: float = 1.0
         self._engine = engine
 
     @property
     def done(self) -> bool:
-        return self.status in (DONE, CANCELLED)
+        return self.status in (DONE, CANCELLED, REJECTED)
 
     @property
     def latency(self) -> Optional[float]:
         """Submit -> finish wall time in seconds (None while live)."""
         return None if self.t_done is None else self.t_done - self.t_submit
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Submit -> first token in seconds (queue wait + prefill)."""
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+    def inter_token(self) -> List[float]:
+        """Gaps between consecutive token timestamps, seconds."""
+        return [b - a for a, b in zip(self.t_tokens, self.t_tokens[1:])]
+
     def append(self, tok: int):
+        t = self._clock()
         if self.t_first is None:
-            self.t_first = time.perf_counter()
+            self.t_first = t
+        self.t_tokens.append(t)
         self.output.append(tok)
 
     def finish(self, reason: str):
-        self.status = CANCELLED if reason == "cancelled" else DONE
+        if reason == "cancelled":
+            self.status = CANCELLED
+        elif reason in _REJECT_REASONS:
+            self.status = REJECTED
+        else:
+            self.status = DONE
         self.finish_reason = reason
-        self.t_done = time.perf_counter()
+        self.t_done = self._clock()
 
     def tokens(self) -> Iterator[int]:
         """Stream generated tokens; drives the engine while the request is
@@ -113,23 +158,42 @@ class RequestHandle:
                 f"slot={self.slot}, n_tokens={len(self.output)})")
 
 
+class _QEntry:
+    """One queued request. ``dropped`` tombstones the entry in place so
+    ``drop_queued`` is O(1) (keyed by handle id); tombstones are swept
+    lazily at queue heads and filtered from every view."""
+
+    __slots__ = ("handle", "cost", "seq", "dropped")
+
+    def __init__(self, handle: RequestHandle, cost: float, seq: int):
+        self.handle = handle
+        self.cost = cost
+        self.seq = seq
+        self.dropped = False
+
+
 class SlotScheduler:
-    """FIFO admission into a fixed slot array under a per-replica FLOP
-    budget.
+    """Admission into a fixed slot array under a per-replica FLOP budget.
 
     ``cost`` of a request = its compute-budget fraction (1.0 for
     budget-None / teacher rows). The slot array carries a data-parallel
     replica axis: flat slot ``i`` belongs to replica ``i // (n_slots //
     n_replicas)`` — exactly the batch rows a `(data, model)` mesh places on
     data shard ``i // spr``, so admission placement IS device placement.
-    Admission stays FIFO in arrival order; each head-of-queue request is
+
+    Admission order: requests queue FIFO **within** their tenant class and
+    the earliest-arrival live head **across** classes goes first, so with a
+    single class this is exactly the old global FIFO. A head request that
+    cannot be placed (FLOP budget, or the paged engine's ``page_check``)
+    blocks only its own class — another class's head may still fit — but
+    within a class nothing jumps the queue. Each admitted request is
     placed on the least-loaded replica that has a free slot and whose
     occupied cost sum stays within ``flop_budget`` (a PER-REPLICA budget:
     every replica decodes the same compiled step, so the slowest replica's
     active FLOPs set the step time). If nothing is running anywhere and the
-    head request alone exceeds the budget it is admitted anyway (progress
-    guarantee). ``n_replicas=1`` reproduces the old single-device packing
-    exactly.
+    globally-oldest head alone exceeds the budget it is admitted anyway
+    (progress guarantee). ``n_replicas=1`` reproduces the old
+    single-device packing exactly.
     """
 
     def __init__(self, n_slots: int, flop_budget: Optional[float] = None,
@@ -146,7 +210,11 @@ class SlotScheduler:
                             if flop_budget is None else float(flop_budget))
         self.slots: List[Optional[RequestHandle]] = [None] * n_slots
         self.costs: List[float] = [0.0] * n_slots
-        self.queue: deque = deque()
+        self._queues: Dict[str, Deque[_QEntry]] = {}
+        self._by_id: Dict[int, _QEntry] = {}
+        self._n_pending = 0
+        self._seq = itertools.count()
+        self._front_seq = -1            # requeue_front goes before seq 0
         # occupancy accounting (slot-steps used / slot-steps available)
         self.steps = 0
         self.active_slot_steps = 0
@@ -192,9 +260,35 @@ class SlotScheduler:
         self.replica_slot_steps = [0] * n_replicas
 
     # ---- queue ----
+    @property
+    def queue(self) -> List[Tuple[RequestHandle, float]]:
+        """Arrival-ordered view of live queued entries as (handle, cost)
+        pairs — the legacy single-deque shape, kept for callers/tests."""
+        live = [e for q in self._queues.values() for e in q if not e.dropped]
+        live.sort(key=lambda e: e.seq)
+        return [(e.handle, e.cost) for e in live]
+
+    def _tenant_queue(self, tenant: str) -> Deque[_QEntry]:
+        q = self._queues.get(tenant)
+        if q is None:
+            q = self._queues[tenant] = deque()
+        return q
+
+    def _push(self, entry: _QEntry, front: bool) -> None:
+        q = self._tenant_queue(entry.handle.tenant)
+        (q.appendleft if front else q.append)(entry)
+        self._by_id[entry.handle.id] = entry
+        self._n_pending += 1
+
+    def _remove(self, entry: _QEntry) -> None:
+        entry.dropped = True
+        self._by_id.pop(entry.handle.id, None)
+        self._n_pending -= 1
+
     def enqueue(self, handle: RequestHandle, cost: float = 1.0):
         handle.status = QUEUED
-        self.queue.append((handle, max(float(cost), MIN_COST)))
+        self._push(_QEntry(handle, max(float(cost), MIN_COST),
+                           next(self._seq)), front=False)
 
     def requeue_front(self, handle: RequestHandle, cost: float = 1.0):
         """Put a PREEMPTED request back at the head of the queue (it was
@@ -202,15 +296,51 @@ class SlotScheduler:
         its FIFO position)."""
         handle.status = QUEUED
         handle.slot = None
-        self.queue.appendleft((handle, max(float(cost), MIN_COST)))
+        entry = _QEntry(handle, max(float(cost), MIN_COST), self._front_seq)
+        self._front_seq -= 1
+        self._push(entry, front=True)
 
     def drop_queued(self, handle: RequestHandle) -> bool:
-        """Remove a still-queued handle; True if it was found."""
-        for item in self.queue:
-            if item[0] is handle:
-                self.queue.remove(item)
-                return True
-        return False
+        """Remove a still-queued handle; True if it was found. O(1): the
+        entry is tombstoned in place via the handle-id index and swept
+        lazily when it reaches a queue head."""
+        entry = self._by_id.get(handle.id)
+        if entry is None or entry.dropped:
+            return False
+        self._remove(entry)
+        return True
+
+    def expire_deadlines(self, now: float) -> List[RequestHandle]:
+        """Drop every queued handle whose deadline has passed — BEFORE it
+        is admitted and burns a prefill. Expired handles are finished with
+        reason ``deadline_exceeded`` and returned."""
+        out: List[RequestHandle] = []
+        for q in self._queues.values():
+            for entry in q:
+                if entry.dropped:
+                    continue
+                dl = entry.handle.deadline
+                if dl is not None and now >= dl:
+                    self._remove(entry)
+                    entry.handle.finish("deadline_exceeded")
+                    out.append(entry.handle)
+        return out
+
+    def shed(self, n: int, priority=None) -> List[RequestHandle]:
+        """Reject ``n`` queued requests (overload stage 3). Victims are
+        picked newest-first within the most-sheddable class first
+        (``priority(handle)`` — higher sheds first; default: arrival order
+        only), finished with reason ``rejected``, and returned so the
+        caller can attach Retry-After hints."""
+        live = [e for q in self._queues.values() for e in q if not e.dropped]
+        live.sort(key=lambda e: ((-priority(e.handle) if priority else 0),
+                                 -e.seq))
+        out: List[RequestHandle] = []
+        for entry in live[:max(0, int(n))]:
+            self._remove(entry)
+            entry.handle.finish("rejected")
+            out.append(entry.handle)
+        return out
 
     # ---- slots ----
     @property
@@ -219,7 +349,7 @@ class SlotScheduler:
 
     @property
     def pending(self) -> int:
-        return len(self.queue)
+        return self._n_pending
 
     @property
     def used_cost(self) -> float:
@@ -228,10 +358,24 @@ class SlotScheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def admit(self, page_check=None) -> List[Tuple[int, RequestHandle]]:
+    def _live_heads(self) -> List[_QEntry]:
+        """Sweep tombstones off every class head; return live heads in
+        arrival order (earliest seq first)."""
+        heads: List[_QEntry] = []
+        for q in self._queues.values():
+            while q and q[0].dropped:
+                q.popleft()
+            if q:
+                heads.append(q[0])
+        heads.sort(key=lambda e: e.seq)
+        return heads
+
+    def admit(self, page_check=None,
+              cost_cap: Optional[float] = None
+              ) -> List[Tuple[int, RequestHandle]]:
         """Pop queued requests into free slots under the per-replica FLOP
-        budget; returns [(slot, handle)] for the engine to prefill. The
-        head of the queue is placed on the least-loaded replica that can
+        budget; returns [(slot, handle)] for the engine to prefill. Each
+        admitted request is placed on the least-loaded replica that can
         take it (lowest occupied cost, ties to the lowest replica index),
         so admissions spread across the replica axis instead of filling
         replica 0 first — no replica starves while another queues.
@@ -240,34 +384,60 @@ class SlotScheduler:
         engine's joint-packing hook: a replica is only a candidate when it
         also has the free KV pages the request's prompt needs, so
         admission packs on free pages AND FLOP budget together. A head
-        request no replica can page never jumps the queue — admission
-        stays FIFO and waits for frees/preemption."""
+        request no replica can page never jumps its class's queue —
+        admission stays FIFO per class and waits for frees/preemption.
+
+        ``cost_cap`` (optional) is the SLO controller's degraded admission
+        budget: each admission is charged ``min(cost, cost_cap)``, the
+        price of the degraded policy row the engine will actually solve
+        for it (stage-1 graceful degradation packs denser)."""
         out: List[Tuple[int, RequestHandle]] = []
         used = [self.replica_used_cost(r) for r in range(self.n_replicas)]
-        while self.queue:
-            handle, cost = self.queue[0]
-            cands = [r for r in range(self.n_replicas)
-                     if self.free_slots_in(r)]
-            if not cands:
+        while True:
+            heads = self._live_heads()
+            if not heads:
+                break
+            if not any(self.free_slots_in(r)
+                       for r in range(self.n_replicas)):
                 break               # every replica is slot-full
-            if page_check is not None:
-                cands = [r for r in cands if page_check(handle, r)]
-                if not cands:
-                    break           # wait for page frees / preemption
-            fit = [r for r in cands
-                   if used[r] + cost <= self.flop_budget + 1e-9]
-            if not fit:
-                if self.active > 0 or out:
-                    break           # wait for running work to drain
-                fit = cands         # idle engine: progress guarantee
-            r = min(fit, key=lambda i: (used[i], i))
-            slot = self.free_slots_in(r)[0]
-            self.queue.popleft()
-            self.slots[slot], self.costs[slot] = handle, cost
-            handle.slot, handle.status = slot, RUNNING
-            used[r] += cost
-            out.append((slot, handle))
+            placed = None
+            for k, entry in enumerate(heads):
+                cost = entry.cost
+                if cost_cap is not None:
+                    cost = max(MIN_COST, min(cost, float(cost_cap)))
+                cands = [r for r in range(self.n_replicas)
+                         if self.free_slots_in(r)]
+                if page_check is not None:
+                    cands = [r for r in cands
+                             if page_check(entry.handle, r)]
+                    if not cands:
+                        continue    # this class waits for page frees
+                fit = [r for r in cands
+                       if used[r] + cost <= self.flop_budget + 1e-9]
+                if not fit:
+                    if k == 0 and self.active == 0 and not out:
+                        fit = cands  # idle engine: progress guarantee
+                    else:
+                        continue    # wait for running work to drain
+                r = min(fit, key=lambda i: (used[i], i))
+                slot = self.free_slots_in(r)[0]
+                self._remove(entry)
+                self.slots[slot], self.costs[slot] = entry.handle, cost
+                entry.handle.slot, entry.handle.status = slot, RUNNING
+                used[r] += cost
+                out.append((slot, entry.handle))
+                placed = entry
+                break
+            if placed is None:
+                break
         return out
+
+    def reprice(self, slot: int, cost: float) -> None:
+        """Re-price a RUNNING slot's FLOP cost (stage-2 in-flight budget
+        degradation: the engine spliced a cheaper policy row into the
+        slot, so the replica's admission headroom grows to match)."""
+        if self.slots[slot] is not None:
+            self.costs[slot] = max(float(cost), MIN_COST)
 
     def free(self, slot: int) -> None:
         self.slots[slot] = None

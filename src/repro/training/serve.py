@@ -77,6 +77,8 @@ class GenRequest:
     temperature: float = 0.0         # 0.0 = greedy (bit-matches legacy argmax)
     top_k: int = 0                   # sample from the top-k logits; 0 = all
     seed: int = 0                    # per-request PRNG seed (traced)
+    slo_class: str = "default"       # tenant SLO class (see runtime/controller.py)
+    deadline_ms: Optional[float] = None  # queue deadline; None = class default
 
 
 # ------------------------------ sampling -------------------------------------
@@ -216,7 +218,13 @@ class ServingEngine:
                  step_flop_budget: Optional[float] = None, mesh=None,
                  n_replicas: Optional[int] = None, kv_layout: str = "ring",
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 kv_dtype: str = "fp32", weight_dtype: str = "fp32"):
+                 kv_dtype: str = "fp32", weight_dtype: str = "fp32",
+                 controller=None, clock=None):
+        # SLO controller (runtime/controller.py) + injectable clock: every
+        # engine timestamp (handle t_submit/t_tokens, controller evals)
+        # reads this one clock, so tests drive a fully deterministic time.
+        self.controller = controller
+        self._clock = clock if clock is not None else time.perf_counter
         self.kv_dtype = check_kv_dtype(kv_dtype)
         self.weight_dtype = check_weight_dtype(weight_dtype)
         # quantize base weights ONCE, before any sharding/jit sees the tree
@@ -287,6 +295,13 @@ class ServingEngine:
         self._seeds = np.zeros((B,), np.uint32)
         self._ngen = np.zeros((B,), np.int64)
         self._extras: dict = {}                   # handle.id -> extra inputs
+        # per-slot budget bookkeeping for in-flight degradation: the budget
+        # the slot was ADMITTED at (None = engine default / base policy)
+        # and the budget currently APPLIED to its live policy row
+        self._slot_budget_key: list = [None] * B
+        self._slot_applied_key: list = [None] * B
+        self.n_rejected = 0                       # shed under overload
+        self.n_expired = 0                        # queue deadline passed
 
         # shard state + build the jitted entry points (compile_counts)
         self.mesh = None
@@ -329,7 +344,7 @@ class ServingEngine:
         requests may share a page only when every knob that shapes the
         written values agrees — mode, solved budget, theta, and the KV
         storage dtype (sampling knobs don't touch K/V)."""
-        b = req.budget if req.budget is not None else self.default_budget
+        b = self._effective_budget(req)
         return (self.mode, None if b is None else round(float(b), 6),
                 round(float(self.theta), 6), self.kv_dtype)
 
@@ -447,9 +462,22 @@ class ServingEngine:
         jax.block_until_ready(self._caches)       # drain the in-flight step
         self.scheduler.set_replicas(self._replicas_for(mesh, None))
         self._install_mesh(mesh)
-        self.remeshed_at = time.perf_counter()    # stats-window boundary
+        self.remeshed_at = self._clock()          # stats-window boundary
 
     # ---- budgets -> per-request policy rows ----
+    def _effective_budget(self, req: GenRequest) -> Optional[float]:
+        """Resolve a request's serving budget: its own (or the engine
+        default), capped by the controller's degraded admission budget
+        (stage-1 graceful degradation). A user-requested budget BELOW the
+        controller cap is honored as-is — the cap only degrades, never
+        upgrades."""
+        b = req.budget if req.budget is not None else self.default_budget
+        if self.controller is not None:
+            cap = self.controller.admission_cap()
+            if cap is not None:
+                b = cap if b is None else min(float(b), cap)
+        return b
+
     def _policy_for(self, budget: Optional[float]) -> Optional[ElasticPolicy]:
         if not self._use_policy:
             return None
@@ -548,7 +576,13 @@ class ServingEngine:
                 raise ValueError(
                     f"request needs {need} pages but a replica only has "
                     f"{self.pool.usable_per_replica} usable pages")
-        handle = RequestHandle(request, engine=self)
+        handle = RequestHandle(request, engine=self, clock=self._clock)
+        handle.tenant = getattr(request, "slo_class", None) or "default"
+        dl_ms = getattr(request, "deadline_ms", None)
+        if dl_ms is None and self.controller is not None:
+            dl_ms = self.controller.target_for(handle.tenant).deadline_ms
+        if dl_ms is not None:
+            handle.deadline = handle.t_submit + float(dl_ms) / 1e3
         if extra_inputs:
             self._extras[handle.id] = {
                 k: jnp.asarray(v) for k, v in extra_inputs.items()}
@@ -594,8 +628,8 @@ class ServingEngine:
         plen = prompt.size
         batch = {"tokens": jnp.asarray(prompt[None])}
         batch.update(self._extras.pop(handle.id, {}))
-        pol_row = self._policy_for(req.budget if req.budget is not None
-                                   else self.default_budget)
+        b_eff = self._effective_budget(req)
+        pol_row = self._policy_for(b_eff)
         # ragged capacity bucket: static, resolved per admission from the
         # (host-concrete) policy row. Only top-k routing (train mode) uses
         # it — threshold (infer) prefill stays dense, so infer engines keep
@@ -622,6 +656,20 @@ class ServingEngine:
         self._seeds[slot] = seed
         self._ngen[slot] = 0
         self._append(slot, handle, int(tok0))
+        self._note_admitted(slot, handle, b_eff)
+
+    def _note_admitted(self, slot: int, handle: RequestHandle,
+                       b_eff: Optional[float]) -> None:
+        """Record the admitted budget for in-flight degradation/restore,
+        the served-budget weight for goodput accounting, and the TTFT
+        sample for the controller."""
+        self._slot_budget_key[slot] = b_eff
+        self._slot_applied_key[slot] = b_eff
+        handle.budget_served = 1.0 if b_eff is None else float(b_eff)
+        if self.controller is not None and handle.ttft is not None:
+            self.controller.record_ttft(
+                handle.tenant, self.scheduler.replica_of(slot),
+                handle.ttft * 1e3, t=handle.t_first)
 
     # ----------------------- paged admission / decode ------------------------
 
@@ -676,8 +724,8 @@ class ServingEngine:
         for j, pg in enumerate(fresh):
             row[matched + j] = pg
         self._table[slot] = row
-        pol_row = self._policy_for(req.budget if req.budget is not None
-                                   else self.default_budget)
+        b_eff = self._effective_budget(req)
+        pol_row = self._policy_for(b_eff)
         seed = int(req.seed) & 0xFFFFFFFF
         trash = self.pool.trash_page(r)
         chunk_ids = list(range(matched, n_chunks)) or [n_chunks - 1]
@@ -704,6 +752,7 @@ class ServingEngine:
         self._ngen[slot] = 0
         self._admit_seq[slot] = next(self._admit_counter)
         self._append(slot, handle, int(tok0))
+        self._note_admitted(slot, handle, b_eff)
         return True
 
     def _pick_victim(self, replica: int) -> Optional[int]:
@@ -778,22 +827,96 @@ class ServingEngine:
         self.scheduler.free(slot)
         self._active[slot] = False
 
+    def _expire(self) -> int:
+        """Drop queued requests whose deadline has passed — BEFORE they
+        burn a prefill (scheduler sweep; reason ``deadline_exceeded``)."""
+        expired = self.scheduler.expire_deadlines(self._clock())
+        for h in expired:
+            self._extras.pop(h.id, None)
+        self.n_expired += len(expired)
+        return len(expired)
+
+    def _apply_inflight(self) -> None:
+        """Stage-2 degradation: splice the controller's in-flight budget
+        into every active slot's live policy row (``set_row`` at a traced
+        index — the SAME compiled graphs, zero recompiles, floored by the
+        controller's floor) and re-price the slot's scheduler cost so the
+        freed FLOP headroom admits more requests. Restores splice the
+        ADMITTED row back when the controller releases."""
+        c = self.controller
+        if c is None or self._live_policy is None:
+            return
+        tgt = c.inflight_budget
+        for s in np.nonzero(self._active)[0]:
+            s = int(s)
+            adm = self._slot_budget_key[s]
+            if tgt < 1.0:
+                want = tgt if adm is None else min(float(adm), tgt)
+            else:
+                want = adm
+            if want == self._slot_applied_key[s]:
+                continue
+            row = self._policy_for(want)
+            with self._mesh_ctx():
+                self._live_policy = self._live_policy.set_row(
+                    jnp.int32(s), row, floor=c.floor)
+            self._slot_applied_key[s] = want
+            self.scheduler.reprice(s, 1.0 if want is None else float(want))
+            handle = self.scheduler.slots[s]
+            if handle is not None:
+                handle.budget_served = min(
+                    handle.budget_served,
+                    1.0 if want is None else float(want))
+
+    def _control(self) -> int:
+        """One controller evaluation (rate-limited inside ``update``):
+        apply in-flight budget moves and shed queued requests with a
+        Retry-After hint. Returns the number of shed requests (they are
+        terminally resolved — progress events)."""
+        c = self.controller
+        if c is None:
+            return 0
+        dec = c.update(self._clock(), queue_depth=self.scheduler.pending,
+                       capacity=self.B)
+        if not dec["evaluated"]:
+            return 0
+        self._apply_inflight()
+        if not dec["shed"]:
+            return 0
+        victims = self.scheduler.shed(
+            dec["shed"],
+            priority=lambda h: c.target_for(h.tenant).shed_order)
+        for h in victims:
+            h.retry_after = c.retry_after(dec["ratio"])
+            self._extras.pop(h.id, None)
+        self.n_rejected += len(victims)
+        return len(victims)
+
     def step(self) -> int:
         """Admit queued requests into free slots, then run ONE compiled
         decode over the slot array. Returns the number of progress events
-        (admissions + slots that advanced) — admissions count, so a
-        request finishing on its very first (prefill) token is not
-        mistaken for an idle engine. 0 = the engine is truly idle.
+        (admissions + slots that advanced + expired/shed resolutions) —
+        admissions count, so a request finishing on its very first
+        (prefill) token is not mistaken for an idle engine. 0 = the
+        engine is truly idle.
 
         Paged mode: admission packs jointly on free pages AND the FLOP
         budget (``_page_check``); an admission that races out of pages
         inside the batch is re-queued at the front; decode pre-allocates
-        crossing-page slots, preempting by page pressure when dry."""
+        crossing-page slots, preempting by page pressure when dry.
+
+        With an ``SLOController``: expired queue deadlines are dropped
+        before admission, admissions are capped at the degraded budget
+        (cost AND policy row), and the control loop evaluates at the end
+        of the step — see ``runtime/controller.py``."""
         paged = self.kv_layout == "paged"
+        expired = self._expire()
+        cap = (self.controller.admission_cap()
+               if self.controller is not None else None)
         if paged:
             admitted = []
             for slot, handle in self.scheduler.admit(
-                    page_check=self._page_check):
+                    page_check=self._page_check, cost_cap=cap):
                 if self._admit_one_paged(slot, handle):
                     admitted.append((slot, handle))
                 else:
@@ -801,13 +924,13 @@ class ServingEngine:
                     self.scheduler.free(slot)
                     self.scheduler.requeue_front(handle, cost)
         else:
-            admitted = self.scheduler.admit()
+            admitted = self.scheduler.admit(cost_cap=cap)
             for slot, handle in admitted:
                 self._admit_one(slot, handle)
         if paged:
             self._ensure_decode_pages()       # may preempt: before `live`
         if not self._active.any():
-            return len(admitted)
+            return len(admitted) + expired + self._control()
         live = [(s, h) for s, h in enumerate(self.scheduler.slots)
                 if h is not None and self._active[s]]
         with self._mesh_ctx():
@@ -829,7 +952,14 @@ class ServingEngine:
         for slot, handle in live:
             self._t[slot] += 1
             self._append(slot, handle, int(toks[slot]))
-        return len(admitted) + len(live)
+        if self.controller is not None:
+            for slot, handle in live:
+                if len(handle.t_tokens) >= 2:
+                    self.controller.record_itl(
+                        handle.tenant, self.scheduler.replica_of(slot),
+                        (handle.t_tokens[-1] - handle.t_tokens[-2]) * 1e3,
+                        t=handle.t_tokens[-1])
+        return len(admitted) + len(live) + expired + self._control()
 
     # ------------------------------- fork ------------------------------------
 
@@ -883,7 +1013,8 @@ class ServingEngine:
         creq = dataclasses.replace(
             req, prompt=prompt, max_new_tokens=remaining,
             seed=req.seed if seed is None else seed)
-        child = RequestHandle(creq, engine=self)
+        child = RequestHandle(creq, engine=self, clock=self._clock)
+        child.tenant = handle.tenant
         child.slot, child.status = cs, "running"
         self.scheduler.slots[cs] = child
         self.scheduler.costs[cs] = self.scheduler.costs[s]

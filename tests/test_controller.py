@@ -1,0 +1,289 @@
+"""SLO controller: staged degradation, hysteretic restore, determinism.
+
+Three layers:
+
+* unit — the degrade/restore ladder, hysteresis band edges, shed sizing,
+  the saturation -> escalate edge, budget quantization.
+* determinism — a recorded metric trace replays to a BIT-identical budget
+  trajectory (including the hysteresis band and the saturation->remesh
+  edge), with the wall clock monkeypatched to raise: the controller may
+  only ever see injected time.
+* engine integration — a FakeClock-driven ServingEngine under synthetic
+  overload walks every degradation stage while ``compile_counts()`` stays
+  at ``{prefill: 1, decode: 1}`` (the one-compile contract survives the
+  controller), shed requests end ``rejected`` with a Retry-After hint,
+  and expired deadlines end ``deadline_exceeded`` without burning a
+  prefill.
+"""
+import math
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ElasticConfig, get_config
+from repro.models import model_init, router_init
+from repro.runtime.controller import (BUDGET_QUANTUM, SLOController,
+                                      SLOTarget, _quantize)
+from repro.training import GenRequest, ServingEngine
+from tests.conftest import f32
+
+
+def _ctrl(**kw):
+    base = dict(targets={"default": SLOTarget(p95_ttft_ms=100.0)},
+                floor=0.25, step_down=0.25, step_up=0.25,
+                window=16, min_samples=1, eval_interval_s=0.0,
+                hysteresis=0.7, patience=2, queue_factor=1.0,
+                escalate_after=2, sample_ttl_s=100.0)
+    base.update(kw)
+    return SLOController(**base)
+
+
+# --------------------------------- unit --------------------------------------
+
+def test_degrade_ladder_admission_then_inflight_then_shed_then_escalate():
+    c = _ctrl()
+    t = 0.0
+    # sustained violation: TTFT 5x over target
+    for _ in range(3):                      # 1.0 -> 0.75 -> 0.5 -> 0.25
+        c.record_ttft("default", 0, 500.0, t=t)
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    assert c.admission_budget == 0.25 and c.inflight_budget == 1.0
+    for _ in range(3):                      # then the in-flight stage
+        c.record_ttft("default", 0, 500.0, t=t)
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    assert c.inflight_budget == 0.25
+    # saturated at the floor: shed the backlog beyond queue_factor*capacity
+    out = c.update(t, queue_depth=10, capacity=4)
+    assert out["shed"] == 6 and not out["escalate"]
+    t += 1.0
+    out = c.update(t, queue_depth=10, capacity=4)   # escalate_after=2
+    assert out["escalate"] and c.should_escalate
+    assert [k for _t, k, _v in c.events] == [
+        "degrade_admission"] * 3 + ["degrade_inflight"] * 3 + [
+        "shed", "shed", "escalate"]
+    c.notify_remeshed()
+    assert not c.should_escalate
+
+
+def test_hysteresis_band_holds_then_restores_inflight_first():
+    c = _ctrl(patience=2)
+    c.admission_budget = c.inflight_budget = 0.5
+    t = 0.0
+    # inside the band (hysteresis <= ratio <= 1): hold, never restore
+    for _ in range(5):
+        c.record_ttft("default", 0, 80.0, t=t)      # ratio 0.8
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    assert (c.admission_budget, c.inflight_budget) == (0.5, 0.5)
+    # comfortably healthy: restore every `patience` evals, in-flight first
+    c._ttft.clear()
+    for _ in range(2):
+        c.record_ttft("default", 0, 10.0, t=t)      # ratio 0.1
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    assert (c.admission_budget, c.inflight_budget) == (0.5, 0.75)
+    for _ in range(6):
+        c.record_ttft("default", 0, 10.0, t=t)
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    assert (c.admission_budget, c.inflight_budget) == (1.0, 1.0)
+    # restored all the way: admission_cap clears
+    assert c.admission_cap() is None
+
+
+def test_queue_pressure_alone_degrades_and_samples_expire():
+    c = _ctrl(sample_ttl_s=5.0)
+    out = c.update(0.0, queue_depth=9, capacity=4)  # ratio 2.25, no samples
+    assert out["evaluated"] and out["ratio"] == pytest.approx(2.25)
+    assert c.admission_budget == 0.75
+    # a stale overload sample must not pin the ratio forever
+    c.record_ttft("default", 0, 1000.0, t=1.0)
+    assert c.pressure() == pytest.approx(10.0)
+    c.update(10.0, queue_depth=0, capacity=4)       # t - ttl expires it
+    assert c.pressure() == 0.0
+
+
+def test_budgets_stay_on_quantized_lattice():
+    c = _ctrl(step_down=0.37, floor=0.2)            # awkward steps
+    t = 0.0
+    for _ in range(6):
+        c.record_ttft("default", 0, 500.0, t=t)
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    for b in (c.admission_budget, c.inflight_budget, c.floor):
+        assert b == pytest.approx(round(b / BUDGET_QUANTUM) * BUDGET_QUANTUM)
+    assert _quantize(0.001) == BUDGET_QUANTUM       # never quantizes to 0
+
+
+def test_retry_after_scales_with_violation():
+    c = _ctrl(retry_after_s=2.0)
+    assert c.retry_after(0.5) == 2.0                # never below the base
+    assert c.retry_after(3.0) == 6.0
+
+
+def test_rate_limit_honors_eval_interval():
+    c = _ctrl(eval_interval_s=1.0)
+    assert c.update(0.0, queue_depth=9, capacity=4)["evaluated"]
+    assert not c.update(0.5, queue_depth=9, capacity=4)["evaluated"]
+    assert c.update(1.0, queue_depth=9, capacity=4)["evaluated"]
+    assert len(c.trajectory) == 2
+
+
+# ------------------------------ determinism -----------------------------------
+
+def _recorded_trace():
+    """A synthetic recorded trace: healthy -> overload (degrade to floor,
+    shed, escalate) -> remesh -> recovery (hysteresis crossing, full
+    restore). Timestamps and latencies are all injected."""
+    rng = np.random.default_rng(42)
+    events = []
+    t = 0.0
+    for phase, (n, ms_lo, ms_hi, depth) in enumerate(
+            [(20, 10, 40, 0), (30, 300, 900, 12), (40, 5, 30, 0)]):
+        for _ in range(n):
+            t += float(rng.uniform(0.05, 0.2))
+            cls = "default" if rng.uniform() < 0.8 else "batch"
+            events.append(("ttft", t, cls, int(rng.integers(0, 2)),
+                           float(rng.uniform(ms_lo, ms_hi))))
+            events.append(("itl", t, cls, int(rng.integers(0, 2)),
+                           float(rng.uniform(ms_lo / 10, ms_hi / 10))))
+            events.append(("update", t, depth))
+        if phase == 1:
+            events.append(("remesh", t))
+    return events
+
+
+def _replay_trace(events):
+    c = SLOController(
+        targets={"default": SLOTarget(p95_ttft_ms=100.0, p95_itl_ms=50.0),
+                 "batch": SLOTarget(p95_ttft_ms=400.0, shed_order=1)},
+        floor=0.25, step_up=0.25, eval_interval_s=0.1, min_samples=2,
+        patience=1, escalate_after=8, sample_ttl_s=0.5)
+    for ev in events:
+        if ev[0] == "ttft":
+            c.record_ttft(ev[2], ev[3], ev[4], t=ev[1])
+        elif ev[0] == "itl":
+            c.record_itl(ev[2], ev[3], ev[4], t=ev[1])
+        elif ev[0] == "update":
+            c.update(ev[1], queue_depth=ev[2], capacity=4)
+        elif ev[0] == "remesh":
+            c.notify_remeshed()
+    return c
+
+
+def test_recorded_trace_replays_bit_identical(monkeypatch):
+    events = _recorded_trace()
+
+    def boom(*a, **k):
+        raise AssertionError("controller read the wall clock")
+
+    monkeypatch.setattr(time, "perf_counter", boom)
+    monkeypatch.setattr(time, "time", boom)
+    monkeypatch.setattr(time, "monotonic", boom)
+    a, b = _replay_trace(events), _replay_trace(events)
+
+    # bit-identical trajectory: same floats, same shed counts, same edges
+    assert a.trajectory == b.trajectory
+    assert a.events == b.events
+    assert a.shed_total == b.shed_total
+    # the trace actually crossed every edge worth reproducing
+    kinds = {k for _t, k, _v in a.events}
+    assert {"degrade_admission", "degrade_inflight", "shed", "escalate",
+            "restore_inflight", "restore_admission"} <= kinds
+    # saturation -> remesh fired exactly once, then recovery rearmed it
+    assert sum(1 for _t, k, _v in a.events if k == "escalate") == 1
+    assert not a.should_escalate
+    assert (a.admission_budget, a.inflight_budget) == (1.0, 1.0)
+
+
+# --------------------------- engine integration -------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+DENSE_KW = dict(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+                mha_head_topk=2, lora_rank=1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    cfg = f32(get_config("toy-lm", "smoke"))
+    ecfg = ElasticConfig(**DENSE_KW)
+    params = model_init(key, cfg, ecfg)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+    return cfg, ecfg, params, rp
+
+
+def test_engine_walks_degradation_stages_with_flat_compiles(setup):
+    cfg, ecfg, params, rp = setup
+    clock = FakeClock()
+    ctrl = SLOController(
+        targets={"default": SLOTarget(p95_ttft_ms=1.0)},   # everything over
+        floor=0.25, step_down=0.25, window=8, min_samples=1,
+        eval_interval_s=0.0, queue_factor=1.0, escalate_after=2,
+        retry_after_s=1.0, sample_ttl_s=1e9)
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=2,
+                        max_seq=24, controller=ctrl, clock=clock)
+    rng = np.random.default_rng(0)
+    reqs = [GenRequest(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                       8, seed=i) for i in range(10)]
+    handles = [eng.submit(r) for r in reqs]
+    for _ in range(60):
+        clock.advance(0.1)
+        if eng.step() == 0 and not eng.has_work:
+            break
+    # every stage ran, in order
+    kinds = [k for _t, k, _v in ctrl.events]
+    assert kinds.index("degrade_admission") < kinds.index("degrade_inflight")
+    assert "shed" in kinds and "escalate" in kinds
+    assert ctrl.admission_budget == 0.25 and ctrl.inflight_budget == 0.25
+    # shed requests: typed terminal state + Retry-After hint
+    shed = [h for h in handles if h.status == "rejected"]
+    assert shed and all(h.finish_reason == "rejected" for h in shed)
+    assert all(h.retry_after is not None and h.retry_after >= 1.0
+               for h in shed)
+    assert eng.n_rejected == len(shed)
+    # served requests: degraded in-flight budgets show in budget_served
+    served = [h for h in handles if h.status == "done"]
+    assert served and all(h.budget_served <= 1.0 for h in served)
+    assert any(h.budget_served < 1.0 for h in served)
+    # the one-compile contract survives every stage (single prompt length)
+    assert eng.compile_counts() == {"prefill": 1, "decode": 1}
+
+
+def test_deadline_expires_queued_request_before_prefill(setup):
+    cfg, ecfg, params, rp = setup
+    clock = FakeClock()
+    ctrl = SLOController(
+        targets={"default": SLOTarget(deadline_ms=50.0)},
+        eval_interval_s=1e9)                 # control loop quiet: deadline
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=2,
+                        max_seq=24, controller=ctrl, clock=clock)
+    h = eng.submit(GenRequest(np.arange(8, dtype=np.int32), 4))
+    assert h.deadline == pytest.approx(0.05)
+    clock.advance(0.2)                       # expires while still queued
+    n = eng.step()
+    assert n >= 1 and h.status == "rejected"
+    assert h.finish_reason == "deadline_exceeded"
+    assert h.ttft is None                    # never burned a prefill
+    assert eng.n_expired == 1
+    # an explicit per-request deadline overrides the class default
+    h2 = eng.submit(GenRequest(np.arange(8, dtype=np.int32), 4,
+                               deadline_ms=10 ** 6))
+    clock.advance(0.2)
+    while not h2.done:
+        eng.step()
+    assert h2.status == "done"

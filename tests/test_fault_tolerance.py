@@ -11,25 +11,45 @@ import pytest
 
 from repro.configs import ElasticConfig, get_config
 from repro.models import model_init, router_init
+from repro.runtime.controller import SLOController
 from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
-                                           StragglerWatchdog, run_resilient,
-                                           serve_resilient)
+                                           StragglerWatchdog, maybe_escalate,
+                                           run_resilient, serve_resilient)
 from repro.training import GenRequest, ServingEngine
 from tests.conftest import f32
 
 
 # ------------------------------ watchdog -------------------------------------
 
-def test_watchdog_flags_slow_step_and_tracks_ewma():
+def test_watchdog_flags_slow_step_and_excludes_it_from_ewma():
     wd = StragglerWatchdog(threshold=2.0, decay=0.5)
     assert not wd.observe(0, 1.0)          # no EWMA yet: never flags
     assert not wd.observe(1, 1.5)          # 1.5 < 2.0 * 1.0
     assert wd.observe(2, 10.0)             # >> threshold * ewma: flagged
     assert [s for s, _, _ in wd.flagged] == [2]
-    # EWMA kept absorbing observations (including the slow one)
-    assert wd.ewma == pytest.approx(0.5 * 1.25 + 0.5 * 10.0)
-    # recovered steps stop flagging once the EWMA re-converges
-    assert not wd.observe(3, 10.0)
+    # the flagged sample is EXCLUDED from the baseline: ewma still tracks
+    # what a healthy step costs
+    assert wd.ewma == pytest.approx(0.5 * 1.0 + 0.5 * 1.5)
+    # a healthy follow-up folds in normally
+    assert not wd.observe(3, 1.25)
+    assert wd.ewma == pytest.approx(0.5 * 1.25 + 0.5 * 1.25)
+
+
+def test_watchdog_keeps_flagging_sustained_slowdown():
+    """Regression for the EWMA-inflation bug: when flagged samples fed the
+    EWMA, each flagged step multiplied the baseline by up to
+    decay + (1-decay)*threshold, so a PERSISTENT straggler re-based the
+    watchdog to the degraded speed and stopped being flagged after a
+    handful of steps. Flagged samples must not move the baseline: a
+    replica stuck at 10x cost is flagged on every single step."""
+    wd = StragglerWatchdog(threshold=2.5, decay=0.9)
+    for step in range(20):
+        assert not wd.observe(step, 1.0)
+    baseline = wd.ewma
+    for step in range(20, 40):             # sustained 10x slowdown
+        assert wd.observe(step, 10.0), f"stopped flagging at step {step}"
+    assert wd.ewma == pytest.approx(baseline)   # baseline never inflated
+    assert len(wd.flagged) == 20
 
 
 # ----------------------- deterministic failure injection ----------------------
@@ -147,3 +167,71 @@ def test_serve_resilient_exhausts_restarts(key):
     with pytest.raises(SimulatedFailure):
         serve_resilient(eng, max_restarts=1,
                         injector=FailureInjector(at_steps=(0, 1, 2)))
+
+
+# ------------------- controller saturation -> remesh escalation ---------------
+
+def _saturated_controller():
+    """A controller already degraded to its floor and one eval away from
+    asking for a remesh."""
+    c = SLOController(floor=0.25, escalate_after=1, eval_interval_s=0.0)
+    c.admission_budget = c.inflight_budget = 0.25
+    return c
+
+
+def test_maybe_escalate_remeshes_ring_engine(key):
+    cfg, ecfg, params, rp = _serving_setup(key)
+    ctrl = _saturated_controller()
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                        batch_size=2, max_seq=24, controller=ctrl)
+    out = ctrl.update(1.0, queue_depth=100, capacity=2)
+    assert out["escalate"] and ctrl.should_escalate
+    shapes = [(64, 64), (1, 1)]          # unusable shape must be skipped
+    assert maybe_escalate(eng, shapes)
+    assert dict(eng.mesh.shape) == {"data": 1, "model": 1}
+    assert not ctrl.should_escalate      # latch re-armed after handling
+    assert shapes == []                  # consumed (unusable one dropped)
+
+
+def test_maybe_escalate_declines_without_shapes_or_ring(key):
+    cfg, ecfg, params, rp = _serving_setup(key)
+    ctrl = _saturated_controller()
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                        batch_size=2, max_seq=24, controller=ctrl)
+    ctrl.update(1.0, queue_depth=100, capacity=2)
+    assert not maybe_escalate(eng, [])   # nothing to remesh onto
+    # declining still re-arms the latch: the ask must not re-fire forever
+    assert not ctrl.should_escalate
+
+
+# ---------------------- replica-failure drill mid-burst -----------------------
+
+def test_replica_failure_mid_burst_loses_no_inflight_requests(key):
+    """The acceptance drill: a replica failure in the middle of a burst
+    drains + re-meshes the live engine and EVERY submitted request still
+    finishes with its full token budget — zero lost in-flight requests,
+    tokens identical to a fault-free oracle."""
+    from benchmarks.workloads import replay
+
+    cfg, ecfg, params, rp = _serving_setup(key)
+    rng = np.random.default_rng(13)
+    # one prompt length: the ring engine compiles per plen, keep it to one
+    reqs = [GenRequest(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                       6, budget=(0.5, 1.0)[i % 2], seed=i)
+            for i in range(6)]
+    solo = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                         batch_size=2, max_seq=24)
+    oracle = [solo.generate([r])[0] for r in reqs]
+
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                        batch_size=2, max_seq=24)
+    arrive = np.arange(len(reqs)) * 1e-3          # burst: all near t=0
+    handles, _dt, info = replay(
+        eng, reqs, arrive, fallback_shapes=[(1, 1)],
+        injector=FailureInjector(at_steps=(3,)),
+        watchdog=StragglerWatchdog())
+    assert info["restarts"] == 1
+    assert all(h is not None and h.status == "done" for h in handles)
+    assert all(h.finish_reason == "length" for h in handles)
+    for h, o in zip(handles, oracle):
+        np.testing.assert_array_equal(np.asarray(h.output), o)

@@ -369,3 +369,99 @@ def test_budget_list_rejects_out_of_range():
     for bad in ("1.5", "0.5,2.0", "0", "-0.25", "abc"):
         with pytest.raises(argparse.ArgumentTypeError):
             _budget_list(bad)
+
+
+# ------------------- deadline hygiene / drop / shed / reprice ----------------
+
+def test_expire_deadlines_drops_before_prefill():
+    """A queued request whose deadline passed is finished
+    ``deadline_exceeded`` (status REJECTED) without ever taking a slot;
+    requests without a deadline, or with one still in the future, stay."""
+    sched = SlotScheduler(2)
+    hs = _dummy(3)
+    hs[0].deadline = 1.0            # already passed at now=2.0
+    hs[1].deadline = 5.0            # still in the future
+    hs[2].deadline = None
+    for h in hs:
+        sched.enqueue(h)
+    expired = sched.expire_deadlines(now=2.0)
+    assert expired == [hs[0]]
+    assert hs[0].status == "rejected"
+    assert hs[0].finish_reason == "deadline_exceeded"
+    assert hs[0].slot is None and hs[0].output == []
+    assert sched.pending == 2
+    # the survivors admit normally, in FIFO order
+    admitted = [h for _s, h in sched.admit()]
+    assert admitted == [hs[1], hs[2]]
+
+
+def test_drop_queued_is_tombstoned_and_skipped():
+    """``drop_queued`` is O(1): the entry is tombstoned in place, excluded
+    from every view, skipped by admission, and a double-drop is a no-op."""
+    sched = SlotScheduler(4)
+    hs = _dummy(4)
+    for h in hs:
+        sched.enqueue(h)
+    assert sched.drop_queued(hs[1])
+    assert not sched.drop_queued(hs[1])          # already gone
+    assert sched.pending == 3
+    assert [h for h, _c in sched.queue] == [hs[0], hs[2], hs[3]]
+    admitted = [h for _s, h in sched.admit()]
+    assert admitted == [hs[0], hs[2], hs[3]]
+    assert sched.drop_queued(hs[0]) is False     # running, not queued
+
+
+def test_admit_cost_cap_packs_denser():
+    """Stage-1 degradation: with ``cost_cap`` every admission is charged
+    the capped cost, so the same FLOP budget co-schedules more requests."""
+    full = SlotScheduler(4, flop_budget=1.0)
+    hs = _dummy(4)
+    for h in hs:
+        full.enqueue(h, cost=1.0)
+    assert len(full.admit()) == 1                # uncapped: budget-limited
+    capped = SlotScheduler(4, flop_budget=1.0)
+    hs = _dummy(4)
+    for h in hs:
+        capped.enqueue(h, cost=1.0)
+    out = capped.admit(cost_cap=0.25)
+    assert len(out) == 4                         # 4 x 0.25 fits the budget
+    assert all(capped.costs[s] == 0.25 for s, _h in out)
+
+
+def test_shed_prefers_high_shed_order_then_newest():
+    """Shed victims: most-sheddable class first (higher ``priority``),
+    newest arrival first within a class — interactive work submitted
+    earliest is the last to go."""
+    sched = SlotScheduler(2)
+    hs = _dummy(4)
+    for h, tenant in zip(hs, ("int", "batch", "int", "batch")):
+        h.tenant = tenant
+        sched.enqueue(h)
+    order = {"int": 0, "batch": 1}
+    victims = sched.shed(3, priority=lambda h: order[h.tenant])
+    assert victims == [hs[3], hs[1], hs[2]]      # batch newest-first, then int
+    assert all(v.status == "rejected" and v.finish_reason == "rejected"
+               for v in victims)
+    assert sched.pending == 1
+    assert [h for h, _c in sched.queue] == [hs[0]]
+
+
+def test_reprice_grows_admission_headroom():
+    """Stage-2 degradation: repricing a running slot's cost frees FLOP
+    headroom, so the next ``admit`` fits work that previously had to wait.
+    Repricing floors at MIN_COST and ignores freed slots."""
+    from repro.runtime.scheduler import MIN_COST
+
+    sched = SlotScheduler(2, flop_budget=1.0)
+    h0, h1 = _dummy(2)
+    sched.enqueue(h0, cost=1.0)
+    (slot, _h), = sched.admit()
+    sched.enqueue(h1, cost=0.5)
+    assert sched.admit() == []                   # 1.0 + 0.5 over budget
+    sched.reprice(slot, 0.25)
+    assert [h for _s, h in sched.admit()] == [h1]
+    sched.reprice(slot, 0.0)
+    assert sched.costs[slot] == MIN_COST         # never free, never zero
+    sched.free(h1.slot)
+    sched.reprice(h1.slot, 5.0)
+    assert sched.costs[h1.slot] == 0.0           # freed slots stay zero
