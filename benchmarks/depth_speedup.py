@@ -1,0 +1,203 @@
+"""Elastic depth (whole-layer skip) benchmark -> BENCH_depth.json.
+
+Grid over (depth budget x token budget): lowers the toy-config train-mode
+forward under the ragged capacity-bucket path with the DEPTH router live —
+selected tokens gather through the whole block, unselected tokens ride the
+residual untouched — and records per-step lowered FLOPs (XLA cost analysis),
+the compiled step's ``bytes_read`` (``hloprof.bytes_moved``), and wall-clock
+of the jitted forward. The dense baseline column is the rank-masked
+reference at budget 1.0 (budget-independent full compute — the pre-depth
+cost of every row).
+
+CI regression fences (ref backend, seq 512 — the ISSUE acceptance gate):
+
+  * FLOPs are monotone in the depth budget at fixed token budget, and the
+    depth x token composition is multiplicative (composed cells sit below
+    either single-knob cell);
+  * depth 0.5 (token 1.0) lowers <= 0.6x the dense FLOPs AND runs
+    < 0.85x the dense wall-clock — whole-layer savings must reach the
+    clock, not just the cost model;
+  * depth 1.0 (token 1.0) rides the IDENTITY graph: within 1.15x of the
+    dense teacher forward (budget 1.0 stays the bit-exact teacher).
+
+Timing methodology is ``ragged_speedup``'s: explicit warmup, every timed
+iteration bracketed by block_until_ready, all cells sampled ROUND-ROBIN
+(``common.timed_median_grid``) so machine noise hits each cell equally;
+min-of-N is the robust cost estimate on shared CI hosts, median documents
+typical latency; on a gate miss the grid re-times (compiles are cached)
+and keeps each cell's best min — contention only ever adds time.
+
+Usage:
+    python benchmarks/depth_speedup.py [--smoke] [--out BENCH_depth.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "benchmarks")
+from common import emit, timed_median_grid  # noqa: E402
+
+from repro.configs.elasti_toy import toy_lm  # noqa: E402
+from repro.core.policy import ElasticPolicy, ElasticSpec, ragged_bucket  # noqa: E402
+from repro.kernels.ops import resolve_backend  # noqa: E402
+from repro.launch.hloprof import bytes_moved, lowered_flops  # noqa: E402
+from repro.models import forward, model_init, router_init  # noqa: E402
+
+DEPTHS = (1.0, 0.75, 0.5)
+TOKENS = (1.0, 0.5)
+
+
+def build(seq: int, batch: int, vocab: int, d_model: int, n_layers: int):
+    cfg = dataclasses.replace(
+        toy_lm(n_layers=n_layers, d_model=d_model, vocab=vocab),
+        dtype="float32")
+    spec = ElasticSpec(mha_token_routed=True, mlp_token_routed=True,
+                       depth_routed=True)
+    key = jax.random.PRNGKey(0)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    rng = np.random.default_rng(0)
+    tokens = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq), dtype=np.int32))}
+    return cfg, spec, params, rp, tokens
+
+
+def _policy(depth: float, token: float) -> ElasticPolicy:
+    pol = ElasticPolicy.uniform(token)
+    return pol.replace(depth_capacity=depth)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timed iterations for CI (the seq-512 gates "
+                         "still run — they ARE the acceptance criterion)")
+    ap.add_argument("--out", default="BENCH_depth.json")
+    ap.add_argument("--seq", type=int, default=512,
+                    help="sequence length (the CI gates are specified at "
+                         "512; below ~384 per-op XLA-CPU overheads drown "
+                         "the layer compute and the clock gates get noisy)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timed iterations (default 5 smoke / 7 full)")
+    ap.add_argument("--attempts", type=int, default=4,
+                    help="re-time passes on a wall-clock gate miss "
+                         "(contention only inflates; best min kept)")
+    args = ap.parse_args()
+    iters = args.iters or (5 if args.smoke else 7)
+    seq = args.seq
+    cfg, spec, params, rp, batch = build(
+        seq, args.batch, vocab=256, d_model=128, n_layers=4)
+    dense = dataclasses.replace(spec, routing_impl="dense_mask")
+    backend = resolve_backend(spec.kernel_backend)
+
+    def make_fwd(sp):
+        def f(rp, batch, policy, bucket=None):
+            return forward(params, rp, batch, cfg, sp, mode="train",
+                           policy=policy, bucket=bucket)[0]
+        return f
+
+    f_ragged = make_fwd(spec)
+    f_dense = make_fwd(dense)
+    jit_ragged = jax.jit(f_ragged, static_argnames=("bucket",))
+    jit_dense = jax.jit(f_dense, static_argnames=("bucket",))
+
+    # dense baseline: budget-independent full compute (one cell, sampled in
+    # the same round-robin grid as every depth cell it gates against)
+    pol_full = jax.tree.map(jnp.asarray, _policy(1.0, 1.0))
+    fl_dense = lowered_flops(f_dense, rp, batch, pol_full,
+                             static_argnames=("bucket",))
+
+    cells = {"dense": lambda: jit_dense(rp, batch, pol_full)}
+    meta = {}
+    for d in DEPTHS:
+        for tk in TOKENS:
+            pol = jax.tree.map(jnp.asarray, _policy(d, tk))
+            bkt = ragged_bucket(pol, seq, spec=spec)
+            meta[(d, tk)] = (
+                bkt,
+                lowered_flops(f_ragged, rp, batch, pol, bucket=bkt,
+                              static_argnames=("bucket",)),
+                bytes_moved(jit_ragged.lower(
+                    rp, batch, pol, bucket=bkt).compile().as_text()))
+            cells[(d, tk)] = (
+                lambda pol=pol, bkt=bkt: jit_ragged(rp, batch, pol,
+                                                    bucket=bkt))
+
+    def gates_pass(us):
+        d_us = us["dense"][0]
+        return (us[(1.0, 1.0)][0] <= 1.15 * d_us
+                and us[(0.5, 1.0)][0] < 0.85 * d_us)
+
+    us = timed_median_grid(cells, iters=iters)
+    for _ in range(args.attempts - 1):
+        # the retries only serve the ref-backend CI gates asserted below
+        if backend != "ref" or gates_pass(us):
+            break
+        again = timed_median_grid(cells, iters=iters, warmup=1)
+        us = {k: (min(us[k][0], again[k][0]), min(us[k][1], again[k][1]))
+              for k in us}
+
+    rows = []
+    for d in DEPTHS:
+        for tk in TOKENS:
+            bkt, fl, br = meta[(d, tk)]
+            rows.append({"depth_budget": d, "token_budget": tk,
+                         "bucket": bkt, "seq": seq, "backend": backend,
+                         "flops": fl, "flops_dense": fl_dense,
+                         "bytes_read": br,
+                         "us": us[(d, tk)][0],
+                         "us_dense": us["dense"][0],
+                         "us_med": us[(d, tk)][1],
+                         "us_dense_med": us["dense"][1]})
+            emit(f"depth_fwd_d{d:g}_t{tk:g}", us[(d, tk)][0],
+                 f"{fl / 1e6:.1f}MF_vs_{fl_dense / 1e6:.1f}MF_dense")
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+
+    cell = {(r["depth_budget"], r["token_budget"]): r for r in rows}
+    # ---- FLOP gates: monotone in depth, multiplicative composition ----
+    for tk in TOKENS:
+        fl = [cell[(d, tk)]["flops"] for d in DEPTHS]
+        assert fl == sorted(fl, reverse=True), \
+            f"depth FLOPs must decrease with the depth budget (token {tk}): {fl}"
+    # composed cells drop strictly once the depth x token product crosses a
+    # bucket boundary (FLOPs are proportional to the rounded-up bucket, so
+    # same-bucket cells tie; 0.5 x 0.5 = 0.25 always lands a bucket lower)
+    for d in DEPTHS[1:]:
+        assert cell[(d, 0.5)]["flops"] < cell[(d, 1.0)]["flops"], \
+            f"depth x token must compose: {d}"
+    assert cell[(0.5, 0.5)]["flops"] < cell[(1.0, 0.5)]["flops"]
+    half = cell[(0.5, 1.0)]
+    ratio = half["flops"] / max(fl_dense, 1.0)
+    assert ratio <= 0.6, \
+        f"depth-0.5 FLOP ratio {ratio:.3f} > 0.6x dense (acceptance gate)"
+    # ---- wall-clock gates (the FLOPs -> latency fence, ref backend) ----
+    if backend == "ref":
+        ident = cell[(1.0, 1.0)]
+        assert ident["us"] <= 1.15 * ident["us_dense"], (
+            f"identity path regressed: depth(1.0) {ident['us']:.0f}us > "
+            f"1.15x dense {ident['us_dense']:.0f}us")
+        assert half["us"] < 0.85 * half["us_dense"], (
+            f"depth savings not reaching the clock: depth(0.5) "
+            f"{half['us']:.0f}us >= 0.85x dense {half['us_dense']:.0f}us")
+        detail = ", ".join(
+            f"d{d:g}/t{tk:g}: {cell[(d, tk)]['us']:.0f}"
+            for d in DEPTHS for tk in TOKENS)
+        print("wall-clock by (depth, token) (us): " + detail)
+    print(f"\nwrote {args.out}: depth-0.5 lowers {ratio:.2f}x the dense "
+          f"FLOPs; depth(0.5) {half['us']:.0f}us vs dense "
+          f"{half['us_dense']:.0f}us "
+          f"({half['us'] / max(half['us_dense'], 1e-9):.2f}x) [{backend}]")
+
+
+if __name__ == "__main__":
+    main()

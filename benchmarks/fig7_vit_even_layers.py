@@ -1,10 +1,20 @@
 """Paper Fig. 7 / §5.2: Elasti-ViT — routing on ALL layers vs EVEN layers
-only, compared at matched compute saving.
+only vs the LEARNED depth router, compared at matched compute saving.
 
 Even-layer routing at capacity c' saves (1-c')/2 of block compute; all-layer
 at capacity c saves (1-c). Matched pairs: all@c vs even@(2c-1).
-Metric: cosine similarity between student and teacher encoder outputs on
-held-out procedural images (paper threshold: > 0.95)."""
+
+The paper's even-layer variant is a FIXED structural skip: every token runs
+odd layers densely and routes the even ones. The elastic depth router
+(docs/elastic_policy.md) generalizes it — a per-(token, layer) learned skip
+of the WHOLE block. At depth capacity d a token runs d of the layers, saving
+(1-d) of block compute, so the matched third arm is depth@(1+c')/2: same
+saving as even@c', but the router learns WHICH layers each token skips
+instead of hard-coding the even ones.
+
+Metric (same eval protocol for all three arms): cosine similarity between
+student and teacher encoder outputs on held-out procedural images (paper
+threshold: > 0.95)."""
 from __future__ import annotations
 
 import dataclasses
@@ -65,16 +75,32 @@ def _ecfg(cap, layers):
         lora_rank=0, layers=layers, distill_loss="cosine")
 
 
+def _ecfg_depth(cap):
+    """Learned whole-layer skip at depth capacity ``cap`` — the elastic
+    generalization of the fixed even-layer variant."""
+    return ElasticConfig(
+        mlp_token_capacity=None, mha_token_capacity=None,
+        depth_capacity=cap, mha_head_topk=None, mlp_n_experts=None,
+        mlp_expert_topk=None, lora_rank=0, layers="all",
+        distill_loss="cosine")
+
+
 def main(steps: int = 40):
     cfg, params = _vit()
     for c_all, c_even in ((0.75, 0.5), (0.9, 0.8)):
+        # matched saving: all@c saves 1-c; even@c' saves (1-c')/2;
+        # depth@d saves 1-d  =>  d = (1+c')/2 matches even@c'
+        c_depth = (1.0 + c_even) / 2.0
         t0 = time.perf_counter()
         sim_all, _ = train_and_eval(cfg, params, _ecfg(c_all, "all"), steps)
         sim_even, _ = train_and_eval(cfg, params, _ecfg(c_even, "even"), steps)
-        dt = (time.perf_counter() - t0) / (2 * steps) * 1e6
+        sim_depth, _ = train_and_eval(cfg, params, _ecfg_depth(c_depth), steps)
+        dt = (time.perf_counter() - t0) / (3 * steps) * 1e6
         emit(f"fig7_matched_saving_{1 - c_all:.2f}", dt,
              f"all@{c_all}={sim_all:.4f};even@{c_even}={sim_even:.4f};"
-             f"even_better={sim_even > sim_all}")
+             f"depth@{c_depth:g}={sim_depth:.4f};"
+             f"even_better={sim_even > sim_all};"
+             f"depth_beats_even={sim_depth > sim_even}")
 
 
 if __name__ == "__main__":

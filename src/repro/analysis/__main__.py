@@ -29,6 +29,10 @@ def main(argv=None) -> int:
                     choices=["fp32", "bf16", "int8"],
                     help="base weight storage dtype for the serving "
                          "engines")
+    ap.add_argument("--no-depth", action="store_true",
+                    help="lint without the elastic depth router (default: "
+                         "depth enabled, so the per-layer KV-validity mask "
+                         "writes are in the audited graphs)")
     ap.add_argument("--pass", dest="only", action="append", metavar="NAME",
                     help="run only this pass (repeatable)")
     ap.add_argument("--waive", action="append", default=[],
@@ -55,7 +59,8 @@ def main(argv=None) -> int:
 
     bundle = build_bundle(mesh_shape=mesh_shape, arch=args.arch,
                           kv_dtype=args.kv_dtype,
-                          weight_dtype=args.weight_dtype)
+                          weight_dtype=args.weight_dtype,
+                          depth=not args.no_depth)
     report = run_all(bundle, waivers=waivers, only=args.only)
 
     if args.json == "-":

@@ -90,7 +90,7 @@ class GraphBundle:
             0, max(2, self.cfg.vocab_size),
             size=(self.train_batch, self.seq_len)), jnp.int32)}
         pol = solve_budget(self.cfg, spec, 0.5)
-        bucket = (ragged_bucket(pol, self.seq_len)
+        bucket = (ragged_bucket(pol, self.seq_len, spec=spec)
                   if spec.routing_impl == "ragged" else None)
         return EntryPoint(step_fn, (state, self.params, batch, pol),
                           {"bucket": bucket}, donated=(0,))
@@ -125,15 +125,21 @@ class GraphBundle:
 def build_bundle(mesh_shape=None, arch: str = "toy-lm", mode: str = "infer",
                  max_seq: int = 48, seq_len: int = 32,
                  kv_dtype: str = "fp32",
-                 weight_dtype: str = "fp32") -> GraphBundle:
+                 weight_dtype: str = "fp32",
+                 depth: bool = True) -> GraphBundle:
     """Stand up the toy-config serving + training graphs (optionally on a
     `(data, model)` mesh — works on one device with shape (1, 1), and on
     the CI 8-fake-device job with (2, 4)). ``kv_dtype``/``weight_dtype``
     build the SERVING engines quantized (docs/quantization.md) so the
     dtype pass can audit the int8 graphs; the train step always runs the
-    fp32 master weights."""
+    fp32 master weights. ``depth`` enables the elastic depth router
+    (docs/elastic_policy.md) so the linted serve graphs carry the
+    per-layer KV-validity mask writes the depth router drives."""
     cfg = _f32(get_config(arch, "smoke"))
     ecfg = get_elastic(arch, cfg)
+    if depth and ecfg is not None \
+            and getattr(ecfg, "depth_capacity", None) is None:
+        ecfg = dataclasses.replace(ecfg, depth_capacity=1.0)
     key = jax.random.PRNGKey(0)
     params = model_init(key, cfg, ecfg)
     rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)

@@ -1,15 +1,19 @@
 """SHARD — mesh-placement invariants of the serving/training graphs.
 
 * ``SHARD-CACHE-WRITE``: a batch-indexed ``dynamic_update_slice`` /
-  ``scatter`` into a long-lived rank>=3 *floating-point* buffer (one
-  threaded in through the jaxpr's invars — the KV caches, policy state)
-  whose result is NOT pinned by a ``with_sharding_constraint`` within a
-  few transparent ops. Unpinned, GSPMD is free to all-gather the cache
-  around the write — the exact regression
-  runtime/sharding.constrain_kv_cache exists to prevent. Rank-2 writes
-  (valid/pos rings) and integer bookkeeping scatters (the MoE dispatch-
-  index inversion) are deliberately below the radar: replicating those is
-  cheap and pinning them would add collectives.
+  ``scatter`` into a long-lived buffer (one threaded in through the
+  jaxpr's invars) whose result is NOT pinned by a
+  ``with_sharding_constraint`` within a few transparent ops. Unpinned,
+  GSPMD is free to all-gather the cache around the write — the exact
+  regression runtime/sharding.constrain_kv_cache exists to prevent.
+  Covered buffers: rank>=3 *floating-point* tensors (the KV caches,
+  policy state) and rank-2 *boolean* bitmaps (the per-layer KV-validity
+  masks the depth router scatters every decode step — ring ``valid``,
+  paged ``pvalid``; pinned by runtime/sharding.constrain_kv_mask and the
+  rank-2 branch of constrain_page_pool). Integer bookkeeping scatters
+  (pos rings, page tables, the MoE dispatch-index inversion) are
+  deliberately below the radar: replicating those is cheap and pinning
+  them would add collectives.
 * ``SHARD-OUT-PIN``: a donated input that enters the graph sharded but
   whose aliased output compiles to a different sharding — the entry point
   is missing its ``out_shardings`` pin, so every call inserts a reshard
@@ -40,10 +44,14 @@ def _cache_writes(bundle, name: str) -> List[Finding]:
             continue
         operand = eqn.invars[0]
         aval = operand.aval
-        if aval.ndim < 3:
-            continue                     # valid/pos rings: replication is fine
-        if not np.issubdtype(aval.dtype, np.floating):
-            continue                     # int bookkeeping scatter, not a cache
+        is_cache = aval.ndim >= 3 and np.issubdtype(aval.dtype, np.floating)
+        # rank-2 bool = KV-validity bitmap (ring valid / paged pvalid): the
+        # depth router rewrites it per step, so an unpinned scatter
+        # replicates the whole leaf per step. Integer bookkeeping (pos
+        # rings, page tables, dispatch-index inversion) stays exempt.
+        is_mask = aval.ndim == 2 and aval.dtype == np.bool_
+        if not (is_cache or is_mask):
+            continue
         if not derives_from_invar(operand, owner):
             continue                     # scratch value, not a live buffer
         idx = eqn.invars[1:] if eqn.primitive.name.startswith("scatter") \

@@ -168,6 +168,7 @@ class ElasticConfig:
     """
     mlp_token_capacity: Optional[float] = 0.8    # input subset sel. around MLP
     mha_token_capacity: Optional[float] = None   # input subset sel. around MHA/mixer
+    depth_capacity: Optional[float] = None       # whole-layer (depth) token sel.
     mha_head_topk: Optional[int] = None          # param subset sel.: active heads
     mlp_n_experts: Optional[int] = None          # moefy dense MLP into M experts
     mlp_expert_topk: Optional[int] = None        # active experts (<= mlp_n_experts)

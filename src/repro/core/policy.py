@@ -54,6 +54,12 @@ class ElasticSpec:
     mlp_token_routed: bool = True      # token router around the MLP
     mha_token_routed: bool = False     # token router around MHA/mixer
     mha_head_routed: bool = False      # head router over attention heads
+    # Depth router: per-token whole-layer skip (docs/elastic_policy.md).
+    # Selected tokens run the block (attention AND MLP/MoE, one shared
+    # RoutingPlan); unselected tokens ride the residual untouched and
+    # write no KV at that layer. Composes multiplicatively with the
+    # token/head/expert knobs in the roofline solver.
+    depth_routed: bool = False
     mlp_n_experts: Optional[int] = None  # moefy dense MLP into M experts
     expert_routed: bool = False        # elastic expert router (moefied/native)
     vlm_routed: bool = False           # image/context token selection
@@ -105,6 +111,7 @@ class ElasticPolicy:
     """
     mlp_token_capacity: Scalar = 1.0
     mha_token_capacity: Scalar = 1.0
+    depth_capacity: Scalar = 1.0
     mha_head_topk: Scalar = FULL_TOPK
     mlp_expert_topk: Scalar = FULL_TOPK
     vlm_token_capacity: Scalar = 1.0
@@ -123,6 +130,7 @@ class ElasticPolicy:
         return cls(
             mlp_token_capacity=_leaf(budget, static),
             mha_token_capacity=_leaf(budget, static),
+            depth_capacity=_leaf(budget, static),
             mha_head_topk=_leaf(topk(n_heads), static),
             mlp_expert_topk=_leaf(topk(n_experts), static),
             vlm_token_capacity=_leaf(budget, static),
@@ -162,6 +170,7 @@ class ElasticPolicy:
         return self.replace(
             mlp_token_capacity=clamp(self.mlp_token_capacity),
             mha_token_capacity=clamp(self.mha_token_capacity),
+            depth_capacity=clamp(self.depth_capacity),
             vlm_token_capacity=clamp(self.vlm_token_capacity))
 
     def set_row(self, i, row: "ElasticPolicy", *,
@@ -205,6 +214,8 @@ def spec_from_config(ecfg) -> ElasticSpec:
         mlp_token_routed=ecfg.mlp_token_capacity is not None,
         mha_token_routed=ecfg.mha_token_capacity is not None,
         mha_head_routed=ecfg.mha_head_topk is not None,
+        depth_routed=(getattr(ecfg, "depth_routed", False)
+                      or getattr(ecfg, "depth_capacity", None) is not None),
         mlp_n_experts=ecfg.mlp_n_experts,
         expert_routed=bool(ecfg.mlp_expert_topk),
         vlm_routed=ecfg.vlm_token_capacity is not None,
@@ -234,6 +245,8 @@ def policy_from_config(ecfg) -> ElasticPolicy:
                             else float(ecfg.mlp_token_capacity)),
         mha_token_capacity=(1.0 if ecfg.mha_token_capacity is None
                             else float(ecfg.mha_token_capacity)),
+        depth_capacity=(1.0 if getattr(ecfg, "depth_capacity", None) is None
+                        else float(ecfg.depth_capacity)),
         mha_head_topk=(FULL_TOPK if ecfg.mha_head_topk is None
                        else int(ecfg.mha_head_topk)),
         mlp_expert_topk=(FULL_TOPK if not ecfg.mlp_expert_topk
@@ -264,7 +277,8 @@ def as_spec_policy(elastic, policy: Optional[ElasticPolicy] = None):
 
 def ragged_bucket(policy: Optional[ElasticPolicy], s: int,
                   *, n_buckets: Optional[int] = None,
-                  align: Optional[int] = None) -> Optional[int]:
+                  align: Optional[int] = None,
+                  spec: Optional[ElasticSpec] = None) -> Optional[int]:
     """Host-side bucket solver (sits next to the roofline budget solver):
     the smallest static capacity bucket covering the policy's token
     capacities at sequence length ``s``. This is the value to thread — as a
@@ -285,19 +299,35 @@ def ragged_bucket(policy: Optional[ElasticPolicy], s: int,
       * ``None`` — no static plan possible: the policy is abstract (tracers
         — the budget is genuinely unknown at trace time), rows MIX full and
         partial budgets, or the covering bucket would be the full sequence
-        without every row being full. Dense rank-masked fallback."""
+        without every row being full. Dense rank-masked fallback.
+
+    ``spec`` (optional) refines the capacity model: without it the solver
+    conservatively assumes both token knobs are live and ignores depth
+    (the pre-depth behaviour, still correct for solver-produced policies
+    whose leaves are all equal). With a spec, non-routed token knobs are
+    dropped and ``depth_capacity`` composes multiplicatively — the block
+    plan's capacity is ``depth * max(token caps)``, so depth 0.5 at token
+    1.0 still lands on a half-size bucket instead of the identity graph."""
     from repro.core import routing as R
     if policy is None:
         return None
     caps = [policy.mha_token_capacity, policy.mlp_token_capacity,
-            policy.student]
+            policy.student, policy.depth_capacity]
     vals = []
     for c in caps:
         if isinstance(c, jax.core.Tracer):
             return None
         vals.append(jnp.asarray(c, jnp.float32))
     # effective per-row capacity: teacher rows (student <= 0) force 1.0
-    cap_rows = jnp.maximum(vals[0], vals[1])
+    if spec is not None:
+        one = jnp.float32(1.0)
+        cap_rows = jnp.maximum(
+            vals[0] if spec.mha_token_routed else one,
+            vals[1] if spec.mlp_token_routed else one)
+        if spec.depth_routed:
+            cap_rows = cap_rows * jnp.minimum(vals[3], 1.0)
+    else:
+        cap_rows = jnp.maximum(vals[0], vals[1])
     eff = jnp.where(vals[2] <= 0.0, 1.0, cap_rows)
     if float(jnp.min(eff)) >= 1.0:
         return R.IDENTITY_BUCKET                # identity: all rows full
@@ -377,8 +407,12 @@ def _active_fraction(cfg, spec: ElasticSpec, s: float, *, ctx: int) -> float:
     """FLOP fraction of the full model when every enabled knob is set to
     fraction ``s`` (top-k values rounded to real integer counts)."""
     fixed, routed = stack_flops_per_token(cfg, spec, ctx=ctx)
-    cap_tok_mha = s if spec.mha_token_routed else 1.0
-    cap_tok_mlp = s if spec.mlp_token_routed else 1.0
+    # Depth skip removes the WHOLE layer for unselected tokens, so its
+    # fraction multiplies every routed term (attention, KV writes, mixer,
+    # MLP) — depth 0.75 x token 0.75 composes to ~0.56 of routed FLOPs.
+    frac_depth = s if spec.depth_routed else 1.0
+    cap_tok_mha = (s if spec.mha_token_routed else 1.0) * frac_depth
+    cap_tok_mlp = (s if spec.mlp_token_routed else 1.0) * frac_depth
     frac_head = 1.0
     if spec.mha_head_routed:
         frac_head = max(1, math.ceil(s * cfg.n_heads - 1e-9)) / cfg.n_heads

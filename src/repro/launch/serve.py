@@ -192,6 +192,11 @@ def main():
                          ".py): 'bursty' = 4x burst in the middle 40%% of "
                          "requests, 'diurnal' = sinusoidal rate around "
                          "--arrival-rate")
+    ap.add_argument("--depth-routed", action="store_true",
+                    help="enable the elastic depth router (per-token whole-"
+                         "layer skip; docs/elastic_policy.md): budgets below "
+                         "1.0 skip full blocks per token, decode skips write "
+                         "no KV at that layer (per-layer validity masks)")
     ap.add_argument("--controller", action="store_true",
                     help="enable the SLO feedback controller (graceful "
                          "degradation: admission budgets -> in-flight "
@@ -257,6 +262,10 @@ def main():
         print(f"[serve] --kv-layout paged: dropping mlp_n_experts="
               f"{ecfg.mlp_n_experts} (dense MLP required; see docs/paged_kv.md)")
         ecfg = dataclasses.replace(ecfg, mlp_n_experts=0, mlp_expert_topk=0)
+    if args.depth_routed and ecfg is not None:
+        # depth_capacity=1.0 enables the router (spec.depth_routed) while the
+        # default policy stays teacher-exact; budgets/controller lower it live
+        ecfg = dataclasses.replace(ecfg, depth_capacity=1.0)
     controller = None
     if args.controller or args.slo_p95_ms is not None:
         from repro.runtime.controller import SLOController, SLOTarget
@@ -322,6 +331,7 @@ def main():
             cs = controller.summary()
             served = sum(h.status == "done" for h in handles)
             print(f"controller: admission {cs['admission_budget']:.2f}, "
+                  f"depth {cs['depth_budget']:.2f}, "
                   f"inflight {cs['inflight_budget']:.2f} after "
                   f"{cs['evals']} evals; events {cs['events'] or '{}'}; "
                   f"served {served}, shed {engine.n_rejected}, expired "

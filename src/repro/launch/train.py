@@ -107,7 +107,7 @@ def train(arch: str, *, variant: str = "smoke", total_steps: int = 100,
                 # so the anneal's teacher-speed steps skip routing work
                 # while the routers keep their BCE/load gradients
                 pol = solve_budget(cfg, spec, b)
-                bkt = (ragged_bucket(pol, seq_len)
+                bkt = (ragged_bucket(pol, seq_len, spec=spec)
                        if spec.routing_impl == "ragged" else None)
                 cache[b] = (pol, bkt)
             return cache[b]

@@ -363,9 +363,13 @@ def attn_decode(
                 return SH.constrain_kv_scale(c.at[bi, slots].set(new), cfg)
             cks = upds(cache["kscale"], ks_new)
             cvs = upds(cache["vscale"], vs_new)
-        # the slot is consumed by position t either way (stale entry evicted)
-        valid = cache["valid"].at[bi, slots].set(wr)
-        cpos = cache["pos"].at[bi, slots].set(t)
+        # the slot is consumed by position t either way (stale entry
+        # evicted). The mask leaves get the same write-site pin as k/v:
+        # this scatter is batch-indexed too, and an unpinned mask write
+        # replicates (B, L) to every device each step.
+        valid = SH.constrain_kv_mask(cache["valid"].at[bi, slots].set(wr),
+                                     cfg)
+        cpos = SH.constrain_kv_mask(cache["pos"].at[bi, slots].set(t), cfg)
     else:
         slot = jax.lax.rem(t, jnp.int32(L))
         old = lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
@@ -381,10 +385,10 @@ def attn_decode(
             cks = upds(cache["kscale"], ks_new)
             cvs = upds(cache["vscale"], vs_new)
         # the slot is consumed by position t either way (stale entry evicted)
-        valid = jax.lax.dynamic_update_slice_in_dim(
-            cache["valid"], wr[:, None], slot, axis=1)
-        cpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
+        valid = SH.constrain_kv_mask(jax.lax.dynamic_update_slice_in_dim(
+            cache["valid"], wr[:, None], slot, axis=1), cfg)
+        cpos = SH.constrain_kv_mask(jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1), cfg)
     new_cache = {"k": ck, "v": cv, "valid": valid, "pos": cpos}
     if quantized:
         new_cache["kscale"], new_cache["vscale"] = cks, cvs
@@ -527,7 +531,10 @@ def attn_decode_paged(
         return SH.constrain_page_pool(c.at[pages, offs].set(new), cfg)
     kp = upd(cache["kp"], k_new)
     vp = upd(cache["vp"], v_new)
-    pvalid = cache["pvalid"].at[pages, offs].set(wr)
+    # the occupancy bitmap is page-indexed like k/v: pin it too, or the
+    # depth router's skip writes replicate the (N, ps) mask pool per step
+    pvalid = SH.constrain_page_pool(
+        cache["pvalid"].at[pages, offs].set(wr), cfg)
     new_cache = {"kp": kp, "vp": vp, "pvalid": pvalid}
     if quantized:
         def upds(c, n):   # scale pools: same scatter, minus Dh
@@ -594,8 +601,9 @@ def attn_chunk(
         return SH.constrain_page_pool(out, cfg)
     kp = upd(cache["kp"], k_new)                           # (1,C,K,Dh) page
     vp = upd(cache["vp"], v_new)
-    pvalid = jax.lax.dynamic_update_slice(cache["pvalid"], wr,
-                                          (write_page, 0))
+    pvalid = SH.constrain_page_pool(
+        jax.lax.dynamic_update_slice(cache["pvalid"], wr, (write_page, 0)),
+        cfg)
     new_cache = {"kp": kp, "vp": vp, "pvalid": pvalid}
     if "kscale" in cache:
         def upds(c, n):

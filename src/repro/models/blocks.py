@@ -101,6 +101,13 @@ def block_router_init(key, kind: str, cfg, spec):
     D = cfg.d_model
     ks = jax.random.split(key, 6)
     rp = {}
+    if spec.depth_routed:
+        # per-token whole-layer skip: same scalar-logit router as the
+        # token routers, gating the ENTIRE block (mixer + MLP + KV write).
+        # fold_in (not a wider split): the 6-way split above must stay
+        # byte-identical for specs without depth, or enabling the feature
+        # flag would shift EVERY router's init
+        rp["depth"] = R.token_router_init(jax.random.fold_in(key, 6), D)
     if spec.mha_token_routed:
         rp["tok_mixer"] = R.token_router_init(ks[0], D)
     if is_attn(kind):
@@ -250,6 +257,23 @@ def _combine_caps(cap_a, cap_b):
                        jnp.asarray(cap_b, jnp.float32))
 
 
+def _mul_caps(cap_a, cap_b):
+    """Multiplicative capacity composition (the depth axis): the depth
+    router skips the WHOLE layer for unselected tokens, so a component's
+    effective token fraction is its own capacity x the depth capacity —
+    depth 0.75 x token 0.75 runs ~0.56 of the component's tokens, the
+    same product the roofline solver's ``_active_fraction`` models. Each
+    factor is clamped at 1 first (capacity >= 1 means "full", not "more")."""
+    if cap_a is None:
+        return cap_b
+    if cap_b is None:
+        return cap_a
+    if R.is_static(cap_a) and R.is_static(cap_b):
+        return min(1.0, cap_a) * min(1.0, cap_b)
+    return (jnp.minimum(jnp.asarray(cap_a, jnp.float32), 1.0)
+            * jnp.minimum(jnp.asarray(cap_b, jnp.float32), 1.0))
+
+
 def block_apply(
     kind: str, p, rp, x, *, cfg, spec, pol=None, mode: str, elastic_on: bool,
     window: int = 0, positions=None, causal: bool = True,
@@ -292,13 +316,17 @@ def block_apply(
     cache = {}
 
     # ---- block-level routing plan resolution ----
-    cap_mha = cap_mlp = None
+    cap_mha = cap_mlp = cap_depth = None
     if routed and spec is not None and rp:
+        if spec.depth_routed and "depth" in rp:
+            cap_depth = R.gate_capacity(pol.depth_capacity, pol.student)
         if spec.mha_token_routed and "tok_mixer" in rp:
             cap_mha = R.gate_capacity(pol.mha_token_capacity, pol.student)
         if has_mlp(kind) and spec.mlp_token_routed and "tok_mlp" in rp:
             cap_mlp = R.gate_capacity(pol.mlp_token_capacity, pol.student)
-    cap_plan = _combine_caps(cap_mha, cap_mlp)
+    # depth composes multiplicatively (it skips the whole layer), so the
+    # block plan's capacity is depth x the max of the per-component caps
+    cap_plan = _mul_caps(_combine_caps(cap_mha, cap_mlp), cap_depth)
     impl = spec.routing_impl if spec is not None else "gather"
     kb = None
     if mode == "train" and cap_plan is not None and (
@@ -309,13 +337,25 @@ def block_apply(
     k_plan = None if (kb is None or identity) else \
         R.capacity_k(cap_plan, Seq, mxu=True)
     plan = None                     # built lazily by the first consumer
-    plan_on_mixer = cap_mha is not None
+    # mixer-stage routers, OUTERMOST first: the depth router (whole-layer
+    # skip) is the block's primary plan router when present, then the
+    # mixer token router. The first entry builds the plan; the rest weight
+    # the shared token set and BCE-train toward its membership.
+    mixer_routers = []
+    if cap_depth is not None:
+        mixer_routers.append(("depth", cap_depth))
+    if cap_mha is not None:
+        mixer_routers.append(("tok_mixer", cap_mha))
+    plan_on_mixer = bool(mixer_routers)
+    depth_scores = None       # depth sigmoid over the full sequence
+    depth_w_sel = None        # depth weight on the plan's selected set
+    depth_gate = None         # infer-mode depth threshold gate (keep, w)
 
     def build_plan(h_src):
         """The block's ONE RoutingPlan sort, from the primary router.
         Under a mesh the plan arrays stay replicated over `model` (batch
         over data), so one plan drives every TP shard of the block."""
-        name = "tok_mixer" if plan_on_mixer else "tok_mlp"
+        name = mixer_routers[0][0] if mixer_routers else "tok_mlp"
         logits = R.token_logits(rp[name], h_src)
         scores = jax.nn.sigmoid(logits)
         plan = R.make_plan(scores, k_plan, kb)
@@ -330,15 +370,71 @@ def block_apply(
         else:
             auxes.append(R.RouteAux.of(keep=keep))
 
+    def plan_weights(plan, logits, scores, h_src):
+        """Mixer-stage weight on the plan's selected set: the primary
+        router's scores times every secondary mixer router's, each
+        BCE-trained toward the shared membership (straight-through)."""
+        nonlocal depth_scores, depth_w_sel
+        w_sel = jnp.take_along_axis(scores, plan.idx, 1)
+        bce_aux(logits, plan.keep, train=True)
+        if mixer_routers and mixer_routers[0][0] == "depth":
+            depth_scores = scores
+            depth_w_sel = w_sel * plan.valid
+        for name, _c in mixer_routers[1:]:
+            lg = R.token_logits(rp[name], h_src)
+            w_sel = w_sel * jnp.take_along_axis(jax.nn.sigmoid(lg),
+                                                plan.idx, 1)
+            bce_aux(lg, plan.keep, train=True)
+        return w_sel * plan.valid
+
+    def mixer_gate(h_src):
+        """Dense/threshold gate over every mixer-stage router. Train: the
+        PRIMARY router rank-masks at the shared plan capacity (secondary
+        routers contribute weight only — the plan path's semantics).
+        Infer: each router thresholds at theta independently; keeps AND
+        and weights multiply (matching the decode gate)."""
+        nonlocal depth_scores, depth_gate
+        name0, _c0 = mixer_routers[0]
+        logits = R.token_logits(rp[name0], h_src)
+        scores = jax.nn.sigmoid(logits)
+        if name0 == "depth":
+            depth_scores = scores
+        if mode == "train":
+            keep, wtok = R.token_gate(logits, scores, cap_plan, mode,
+                                      theta=pol.theta, mxu=True)
+            bce_aux(logits, keep, train=True)
+            full = R.is_full(cap_plan)
+            for name, _c in mixer_routers[1:]:
+                lg = R.token_logits(rp[name], h_src)
+                sc = jax.nn.sigmoid(lg)
+                if R.is_static(full):
+                    wtok = wtok if full else wtok * sc
+                else:
+                    wtok = wtok * jnp.where(R.bcast_to(full, keep.ndim),
+                                            1.0, sc)
+                bce_aux(lg, keep, train=True)
+            return keep, wtok
+        keep, wtok = None, None
+        for name, c in mixer_routers:
+            lg = logits if name == name0 else R.token_logits(rp[name], h_src)
+            sc = scores if name == name0 else jax.nn.sigmoid(lg)
+            kp, w = R.token_gate(lg, sc, c, mode, theta=pol.theta, mxu=True)
+            bce_aux(lg, kp, train=False)
+            if name == "depth":
+                depth_gate = (kp, w)
+            keep = kp if keep is None else keep & kp
+            wtok = w if wtok is None else wtok * w
+        return keep, wtok
+
     # ---- temporal mixer ----
     h = norm_apply(p["norm1"], x, cfg.norm)
     dense_keep = None               # shared keep of the dense fallback
 
     if is_attn(kind):
         lora = rp.get("lora") if (routed and rp) else None
-        lora = _lora_gate(lora, cap_mha,
+        lora = _lora_gate(lora, _mul_caps(cap_mha, cap_depth),
                           pol.student if (routed and pol is not None) else None)
-        if cap_mha is None:
+        if not mixer_routers:
             hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
                                auxes) if routed else None
             y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
@@ -348,11 +444,12 @@ def block_apply(
             delta, keep = y, jnp.ones((B, Seq), bool)
         elif identity:
             # full budget on every row: bit-exact teacher attention, no
-            # partition/sort/masking — the router still trains (BCE toward
-            # keep-everything, exactly what the dense path emits at 1.0)
-            logits = R.token_logits(rp["tok_mixer"], h)
+            # partition/sort/masking — every mixer-stage router (depth
+            # included) still trains (BCE toward keep-everything, exactly
+            # what the dense path emits at 1.0)
             keep = jnp.ones((B, Seq), bool)
-            bce_aux(logits, keep, train=True)
+            for name, _c in mixer_routers:
+                bce_aux(R.token_logits(rp[name], h), keep, train=True)
             hw = _head_weights(rp, h, spec, pol, cfg, auxes)
             y, k, v = A.attn_apply(p["attn"], h, cfg=cfg, positions=positions,
                                    causal=causal, window=window,
@@ -364,7 +461,9 @@ def block_apply(
             # selected tokens gathered valid-first (position-ascending
             # prefix), tail filled + masked. Static caps derive the bucket
             # here (budgets sharing a bucket share the compile); traced
-            # caps ride the caller's static bucket hint.
+            # caps ride the caller's static bucket hint. With depth routed
+            # the plan is the depth router's (outermost) selection —
+            # unselected tokens ride the residual through the WHOLE block.
             plan, logits, scores = build_plan(h)
             h_sel = R.plan_gather(h, plan)
             pos_sel = jnp.take_along_axis(
@@ -377,23 +476,15 @@ def block_apply(
                                        kv_count=plan.count, head_weights=hw,
                                        lora=lora, backend=backend,
                                        gathered=True)
-            w_sel = jnp.take_along_axis(scores, plan.idx, 1) * plan.valid
+            w_sel = plan_weights(plan, logits, scores, h)
             delta = R.plan_scatter(
                 plan, x, y_sel * w_sel[..., None].astype(y_sel.dtype))
             keep = plan.keep
-            bce_aux(logits, keep, train=True)
             if collect_cache:  # scatter valid k/v back to full positions
                 k = _scatter_kv(k, plan.idx, B, Seq)
                 v = _scatter_kv(v, plan.idx, B, Seq)
         else:  # threshold (infer/prefill), dense_mask, or traced capacity
-            logits = R.token_logits(rp["tok_mixer"], h)
-            scores = jax.nn.sigmoid(logits)
-            # train-mode selection stays block-shared: rank-mask with the
-            # plan capacity so dense == plan == gather token sets
-            sel_cap = cap_plan if mode == "train" else cap_mha
-            keep, wtok = R.token_gate(logits, scores, sel_cap, mode,
-                                      theta=pol.theta, mxu=True)
-            bce_aux(logits, keep, train=mode == "train")
+            keep, wtok = mixer_gate(h)
             if mode == "train":
                 dense_keep = keep
             # head-router stats over the SELECTED tokens only, matching
@@ -412,25 +503,29 @@ def block_apply(
                 kv_dtype=spec.kv_dtype if spec is not None else "fp32")
     else:  # ssm / rglru — dense masked routing (state pass-through semantics)
         keep = None
-        if cap_mha is not None:
+        if mixer_routers:
             if identity:
                 keep, wtok = None, None
-                bce_aux(R.token_logits(rp["tok_mixer"], h),
-                        jnp.ones((B, Seq), bool), train=True)
+                ones = jnp.ones((B, Seq), bool)
+                for name, _c in mixer_routers:
+                    bce_aux(R.token_logits(rp[name], h), ones, train=True)
             elif kb is not None:
                 # recurrent mixers cannot gather (state pass-through): they
                 # consume the shared plan's MEMBERSHIP as a dense mask
                 plan, logits, scores = build_plan(h)
                 keep = plan.keep
+                if mixer_routers[0][0] == "depth":
+                    depth_scores = scores
+                    depth_w_sel = jnp.take_along_axis(
+                        scores, plan.idx, 1) * plan.valid
                 wtok = keep * scores
                 bce_aux(logits, keep, train=True)
+                for name, _c in mixer_routers[1:]:
+                    lg = R.token_logits(rp[name], h)
+                    wtok = wtok * jax.nn.sigmoid(lg)
+                    bce_aux(lg, keep, train=True)
             else:
-                logits = R.token_logits(rp["tok_mixer"], h)
-                scores = jax.nn.sigmoid(logits)
-                sel_cap = cap_plan if mode == "train" else cap_mha
-                keep, wtok = R.token_gate(logits, scores, sel_cap, mode,
-                                          theta=pol.theta, mxu=True)
-                bce_aux(logits, keep, train=mode == "train")
+                keep, wtok = mixer_gate(h)
                 if mode == "train":
                     dense_keep = keep
         if kind == "ssm":
@@ -466,21 +561,33 @@ def block_apply(
         h = norm_apply(p["norm2"], x, cfg.norm)
         f = _mlp_fn(p, rp, cfg, spec, pol, elastic_on, mode, auxes,
                     backend=backend)
-        if cap_mlp is None:
+        if cap_mlp is None and cap_depth is None:
             delta = f(h, positions)
         elif identity:
-            logits = R.token_logits(rp["tok_mlp"], h)
-            bce_aux(logits, jnp.ones((B, Seq), bool), train=True)
+            if cap_mlp is not None:
+                bce_aux(R.token_logits(rp["tok_mlp"], h),
+                        jnp.ones((B, Seq), bool), train=True)
             delta = f(h, positions)
         elif kb is not None:
             # reuse the block plan (built by the mixer when it is routed;
-            # otherwise this IS the block's one sort, on the MLP router)
+            # otherwise this IS the block's one sort, on the MLP router).
+            # The depth weight (outermost selection) multiplies the MLP's
+            # own router weight — the whole-block delta is depth-gated.
             if plan is None:
                 plan, logits, scores = build_plan(h)
+                w_sel = jnp.take_along_axis(scores, plan.idx, 1) * plan.valid
+                bce_aux(logits, plan.keep, train=True)
             else:
-                logits = R.token_logits(rp["tok_mlp"], h)
-                scores = jax.nn.sigmoid(logits)
-            w_sel = jnp.take_along_axis(scores, plan.idx, 1) * plan.valid
+                if cap_mlp is not None:
+                    logits = R.token_logits(rp["tok_mlp"], h)
+                    scores = jax.nn.sigmoid(logits)
+                    w_sel = jnp.take_along_axis(
+                        scores, plan.idx, 1) * plan.valid
+                    bce_aux(logits, plan.keep, train=True)
+                else:
+                    w_sel = plan.valid.astype(jnp.float32)
+                if depth_w_sel is not None:
+                    w_sel = w_sel * depth_w_sel
             # the gather/scatter-fused kernel keeps one (S, D) output slab
             # resident in VMEM — only profitable (and compilable) while
             # that slab fits; bigger shapes gather in XLA and run the
@@ -511,35 +618,49 @@ def block_apply(
                           token_count=plan.count)
                 delta = R.plan_scatter(
                     plan, x, y_sel * w_sel[..., None].astype(y_sel.dtype))
-            bce_aux(logits, plan.keep, train=True)
         elif mode == "train":
             # dense fallback (traced capacity without a covering bucket, or
             # dense_mask impl): selection shared with the mixer stage when
             # it ran; expert dispatch is barred from skipped tokens so the
             # one-graph result matches the per-budget plan compile
-            logits = R.token_logits(rp["tok_mlp"], h)
-            scores = jax.nn.sigmoid(logits)
+            logits = scores = None
+            if cap_mlp is not None:
+                logits = R.token_logits(rp["tok_mlp"], h)
+                scores = jax.nn.sigmoid(logits)
             if dense_keep is not None:
                 keep = dense_keep
+                w = keep.astype(jnp.float32)
+                if scores is not None:
+                    w = w * scores
+                if depth_scores is not None:
+                    w = w * depth_scores
                 full = R.is_full(cap_plan)
                 if R.is_static(full):
-                    wtok = jnp.ones_like(scores) if full else keep * scores
+                    wtok = jnp.ones_like(w) if full else w
                 else:
-                    wtok = jnp.where(R.bcast_to(full, keep.ndim), 1.0,
-                                     keep * scores)
+                    wtok = jnp.where(R.bcast_to(full, keep.ndim), 1.0, w)
             else:
                 keep, wtok = R.token_gate(logits, scores, cap_plan, mode,
                                           theta=pol.theta, mxu=True)
             y = f(h, positions, token_valid=keep, dispatch_frac=cap_plan)
             delta = y * wtok[..., None].astype(y.dtype)
-            bce_aux(logits, keep, train=True)
+            if logits is not None:
+                bce_aux(logits, keep, train=True)
         else:
-            # inference thresholding (§B.1): per-token, per-router gate
-            delta, a = R.route_tokens(
-                rp["tok_mlp"], h, f, cap_mlp, mode, positions=positions,
-                impl=impl, theta=pol.theta if pol is not None else 0.5,
-                bucket=bucket)
-            auxes.append(a)
+            # inference thresholding (§B.1): per-token, per-router gate;
+            # the depth router's threshold gate (already emitted in the
+            # mixer stage) multiplies the whole delta
+            if cap_mlp is None:
+                delta = f(h, positions)
+            else:
+                delta, a = R.route_tokens(
+                    rp["tok_mlp"], h, f, cap_mlp, mode, positions=positions,
+                    impl=impl, theta=pol.theta if pol is not None else 0.5,
+                    bucket=bucket)
+                auxes.append(a)
+            if depth_gate is not None:
+                _dk, dw = depth_gate
+                delta = delta * dw[..., None].astype(delta.dtype)
         x = x + delta
 
     aux = auxes[0]
@@ -634,10 +755,21 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
     new_cache = dict(cache)
 
     h = norm_apply(p["norm1"], x, cfg.norm)
+    keepd, wd = None, None
+    if routed and spec.depth_routed and "depth" in rp:
+        # per-(slot, layer) whole-layer skip: the token writes NO KV at
+        # this layer (write gate below), the mask leaf records it, and
+        # the block delta is depth-weighted — unselected slots ride the
+        # residual untouched
+        keepd, wd = _decode_token_gate(rp, "depth", h, pol.depth_capacity,
+                                       pol)
     keep, w1 = None, None
     if routed and spec.mha_token_routed and "tok_mixer" in rp:
         keep, w1 = _decode_token_gate(rp, "tok_mixer", h,
                                       pol.mha_token_capacity, pol)
+    if keepd is not None:
+        keep = keepd if keep is None else keep & keepd
+        w1 = wd if w1 is None else w1 * wd
 
     auxes = []
     if is_attn(kind):
@@ -645,6 +777,9 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
         if lora is not None:
             dcap = R.gate_capacity(pol.mha_token_capacity, pol.student) \
                 if spec.mha_token_routed else None
+            dcap = _mul_caps(
+                dcap, R.gate_capacity(pol.depth_capacity, pol.student)
+                if spec.depth_routed else None)
             lora = _lora_gate(lora, dcap, pol.student)
         hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
                            auxes) if routed else None
@@ -684,6 +819,9 @@ def block_decode(kind: str, p, rp, x, cache, t, *, cfg, spec, pol=None,
         if routed and spec.mlp_token_routed and "tok_mlp" in rp:
             keep2, w2 = _decode_token_gate(rp, "tok_mlp", h,
                                            pol.mlp_token_capacity, pol)
+        if keepd is not None:   # depth gates the MLP delta too
+            keep2 = keepd if keep2 is None else keep2 & keepd
+            w2 = wd if w2 is None else w2 * wd
         if cfg.moe is not None:
             if routed and "expert" in rp:
                 y, _ = moe_decode(p["mlp"], h, act=cfg.act,
@@ -736,8 +874,10 @@ def block_chunk(kind: str, p, rp, x, cache, write_page, table_row, pos0,
                  + jnp.arange(x.shape[1], dtype=jnp.int32))   # (C,)
     auxes = []                                   # serving: aux discarded
 
-    cap_mha = cap_mlp = None
+    cap_mha = cap_mlp = cap_depth = None
     if routed and spec is not None and rp:
+        if spec.depth_routed and "depth" in rp:
+            cap_depth = R.gate_capacity(pol.depth_capacity, pol.student)
         if spec.mha_token_routed and "tok_mixer" in rp:
             cap_mha = R.gate_capacity(pol.mha_token_capacity, pol.student)
         if spec.mlp_token_routed and "tok_mlp" in rp:
@@ -746,16 +886,27 @@ def block_chunk(kind: str, p, rp, x, cache, write_page, table_row, pos0,
     # ---- attention (paged page write + table attend) ----
     h = norm_apply(p["norm1"], x, cfg.norm)
     lora = rp.get("lora") if routed else None
-    lora = _lora_gate(lora, cap_mha,
+    lora = _lora_gate(lora, _mul_caps(cap_mha, cap_depth),
                       pol.student if (routed and pol is not None) else None)
     hw = _head_weights(rp if routed else None, h, spec, pol, cfg,
                        auxes) if routed else None
+    keep_d, w_d = None, None
+    if cap_depth is not None:
+        # per-token whole-layer skip, threshold semantics (same decision
+        # decode would make): skipped tokens write no KV into the page —
+        # the page's occupancy bitmap (pvalid) records the hole
+        lg = R.token_logits(rp["depth"], h)
+        keep_d, w_d = R.token_gate(lg, jax.nn.sigmoid(lg), cap_depth, mode,
+                                   theta=pol.theta, mxu=True)
     keep, wtok = None, None
     if cap_mha is not None:
         logits = R.token_logits(rp["tok_mixer"], h)
         scores = jax.nn.sigmoid(logits)
         keep, wtok = R.token_gate(logits, scores, cap_mha, mode,
                                   theta=pol.theta, mxu=True)
+    if keep_d is not None:
+        keep = keep_d if keep is None else keep & keep_d
+        wtok = w_d if wtok is None else wtok * w_d
     y, new_cache["attn"] = A.attn_chunk(
         p["attn"], h, cache["attn"], write_page, table_row, pos0, plen,
         cfg=cfg, keep=keep, head_weights=hw, lora=lora)
@@ -774,6 +925,8 @@ def block_chunk(kind: str, p, rp, x, cache, write_page, table_row, pos0,
             delta, _ = R.route_tokens(
                 rp["tok_mlp"], h, f, cap_mlp, mode, positions=positions,
                 impl=impl, theta=pol.theta if pol is not None else 0.5)
+        if w_d is not None:     # depth gates the MLP delta too
+            delta = delta * w_d[..., None].astype(delta.dtype)
         x = x + delta
     return x, new_cache
 

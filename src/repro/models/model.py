@@ -97,6 +97,25 @@ def _split_policy(pol, n_layers: int, period_len: int, P: int):
     return _split_layers(per, period_len, P)
 
 
+def _tail_plan(params, rparams, period, pol_tail, *, has_rp: bool,
+               static_pol: bool, pol):
+    """Hoisted per-tail-layer (params, entry, router-params, policy) tuples.
+
+    The tail loops used to re-derive ``period[i % len(period)]`` and the
+    per-layer policy selection inside every iteration of every trace; with
+    layered (L, B) policy leaves (per-layer depth schedules) that costs an
+    extra ``for_layer`` gather per layer per trace. Resolve once, zip in
+    the caller — the same hoist ``_split_policy`` does for the scan body.
+    ``pol_tail`` is the layered split (None when the policy has no layer
+    dim)."""
+    n = len(params["tail"])
+    ents = [period[i % len(period)] for i in range(n)]
+    rps = rparams["tail"] if has_rp else [None] * n
+    pols = list(pol_tail) if pol_tail is not None else \
+        [None if static_pol else pol] * n
+    return list(zip(params["tail"], ents, rps, pols))
+
+
 # ------------------------------- init ---------------------------------------
 
 def model_init(key, cfg, elastic=None):
@@ -202,10 +221,9 @@ def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
     static_pol = _pol_static(pol)
     layered = (not static_pol) and pol.has_layer_dim
     n_period, P_ = len(period), (cfg.n_layers // len(period))
+    pol_scan = pol_tail = None
     if layered:
         pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, n_period, P_)
-    else:
-        pol_scan = pol_tail = None
 
     def apply_block(ent, lp, lrp, lpol, x, enc_kv, enc_valid):
         return block_apply(
@@ -295,10 +313,9 @@ def _run_stack(params, rparams, x, *, cfg, spec, pol, mode, period, causal,
                                     unroll=flags.unroll())
     else:
         aux = aux0
-    for i, lp in enumerate(params["tail"]):
-        ent = period[i % len(period)]
-        lrp = rparams["tail"][i] if has_rp else None
-        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+    for i, (lp, _ent, lrp, lpol) in enumerate(_tail_plan(
+            params, rparams, period, pol_tail, has_rp=has_rp,
+            static_pol=static_pol, pol=pol)):
         x, a = fns[i % len(period)](lp, lrp, lpol, x, enc_kv, enc_valid)
         aux = aux + a
     return x, aux
@@ -410,6 +427,7 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
     has_rp = rparams is not None and mode != "base"
     static_pol = _pol_static(pol)
     layered = (not static_pol) and pol.has_layer_dim
+    pol_scan = pol_tail = None
     if layered:
         pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, len(period), P)
 
@@ -443,10 +461,9 @@ def prefill(params, rparams, batch, cfg, ecfg=None, mode: str = "infer",
     else:
         scan_caches = []
     tail_caches = []
-    for i, lp in enumerate(params["tail"]):
-        ent = period[i % len(period)]
-        lrp = rparams["tail"][i] if has_rp else None
-        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+    for lp, ent, lrp, lpol in _tail_plan(
+            params, rparams, period, pol_tail, has_rp=has_rp,
+            static_pol=static_pol, pol=pol):
         x, _, nc = apply_block(ent, lp, lrp, lpol, x)
         tail_caches.append(nc)
     x = norm_apply(params["final_norm"], x, cfg.norm)
@@ -514,6 +531,7 @@ def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
     has_rp = rparams is not None and mode != "base"
     static_pol = _pol_static(pol)
     layered = (not static_pol) and pol.has_layer_dim
+    pol_scan = pol_tail = None
     if layered:
         pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, len(period), P)
 
@@ -543,10 +561,9 @@ def decode_step(params, rparams, token, caches, t, cfg, ecfg=None,
     else:
         new_scan = []
     new_tail = []
-    for i, lp in enumerate(params["tail"]):
-        ent = period[i % len(period)]
-        lrp = rparams["tail"][i] if has_rp else None
-        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+    for i, (lp, ent, lrp, lpol) in enumerate(_tail_plan(
+            params, rparams, period, pol_tail, has_rp=has_rp,
+            static_pol=static_pol, pol=pol)):
         x, nc = block_decode(ent.kind, lp, lrp, x, caches["tail"][i], t,
                              cfg=cfg, spec=spec,
                              pol=(pol if static_pol else lpol), mode=mode,
@@ -592,6 +609,7 @@ def prefill_chunk_step(params, rparams, tokens, caches, write_page, table_row,
     has_rp = rparams is not None and mode != "base"
     static_pol = _pol_static(pol)
     layered = (not static_pol) and pol.has_layer_dim
+    pol_scan = pol_tail = None
     if layered:
         pol_scan, pol_tail = _split_policy(pol, cfg.n_layers, len(period), P_)
 
@@ -621,10 +639,9 @@ def prefill_chunk_step(params, rparams, tokens, caches, write_page, table_row,
     else:
         new_scan = []
     new_tail = []
-    for i, lp in enumerate(params["tail"]):
-        ent = period[i % len(period)]
-        lrp = rparams["tail"][i] if has_rp else None
-        lpol = pol_tail[i] if layered else (None if static_pol else pol)
+    for i, (lp, ent, lrp, lpol) in enumerate(_tail_plan(
+            params, rparams, period, pol_tail, has_rp=has_rp,
+            static_pol=static_pol, pol=pol)):
         x, nc = block_chunk(ent.kind, lp, lrp, x, caches["tail"][i],
                             write_page, table_row, pos0, plen, cfg=cfg,
                             spec=spec, pol=(pol if static_pol else lpol),

@@ -12,22 +12,28 @@ stages — each stage strictly cheaper than the next:
    ``min(requested, admission_budget)``; the roofline solver turns that
    into a sparser policy row AND a smaller scheduler cost, so the same
    FLOP budget co-schedules more requests.
-2. **Degrade in-flight budgets** — the engine splices degraded rows into
+2. **Degrade the depth budget** — when the spec routes depth, the engine
+   caps ``ElasticPolicy.depth_capacity`` at ``depth_budget`` for new AND
+   in-flight rows (a traced leaf: same compiled graphs, zero recompiles);
+   whole-layer skips are the steepest FLOPs-per-quality knob after
+   admission, and they compose multiplicatively with the token budget.
+3. **Degrade in-flight budgets** — the engine splices degraded rows into
    the live ``(B,)`` policy via ``ElasticPolicy.set_row`` (a traced-index
    dynamic update: same ``{prefill: 1, decode: 1}`` graphs, zero
    recompiles) and re-prices the slots' scheduler costs.
-3. **Shed load** — queued requests beyond what a floor-budget engine can
+4. **Shed load** — queued requests beyond what a floor-budget engine can
    drain are finished with a typed ``rejected`` terminal state and a
    ``Retry-After`` hint; expired deadlines become ``deadline_exceeded``.
-4. **Escalate** — if the controller saturates at the floor budget for
+5. **Escalate** — if the controller saturates at the floor budget for
    ``escalate_after`` consecutive evaluations and load is still over,
    ``should_escalate`` goes high and the serving loop may
    ``engine.reshard()`` onto a bigger mesh shape.
 
 Restoration is **hysteretic**: budgets step back up only after the worst
 violation ratio stays below ``hysteresis`` (< 1) for ``patience``
-consecutive evaluations, in-flight first, so the controller cannot
-oscillate across the SLO boundary.
+consecutive evaluations, in reverse stage order (in-flight, then depth,
+then admission), so the controller cannot oscillate across the SLO
+boundary.
 
 Determinism contract: the controller NEVER reads a wall clock. Every
 timestamp is injected — ``record_ttft`` / ``record_itl`` take measured
@@ -88,8 +94,8 @@ class SLOController:
 
     All tunables are constructor fields; all state is explicit so tests
     can snapshot it. ``trajectory`` accumulates one row per evaluation —
-    ``(t, ratio, admission, inflight, shed, escalate)`` — and is the
-    bit-reproducibility surface for the determinism test.
+    ``(t, ratio, admission, depth, inflight, shed, escalate)`` — and is
+    the bit-reproducibility surface for the determinism test.
     """
     targets: Dict[str, SLOTarget] = field(
         default_factory=lambda: {DEFAULT_CLASS: SLOTarget()})
@@ -108,9 +114,10 @@ class SLOController:
 
     # ---- state (all deterministic; no wall-clock reads anywhere) ----
     admission_budget: float = 1.0
+    depth_budget: float = 1.0
     inflight_budget: float = 1.0
-    trajectory: List[Tuple[float, float, float, float, int, bool]] = field(
-        default_factory=list)
+    trajectory: List[Tuple[float, float, float, float, float, int,
+                           bool]] = field(default_factory=list)
     events: List[Tuple[float, str, float]] = field(default_factory=list)
     shed_total: int = 0
 
@@ -199,6 +206,13 @@ class SLOController:
         """Budget cap for NEW admissions; None when not degraded."""
         return None if self.admission_budget >= 1.0 else self.admission_budget
 
+    def depth_cap(self) -> Optional[float]:
+        """Cap on ``ElasticPolicy.depth_capacity`` for all rows (new and
+        in-flight); None when not degraded. Engines whose spec does not
+        route depth ignore it — the ladder then behaves as if the stage
+        were absent except for the extra evaluations it absorbs."""
+        return None if self.depth_budget >= 1.0 else self.depth_budget
+
     # ---- the control step ----
     def update(self, t: float, *, queue_depth: int,
                capacity: int) -> Dict[str, object]:
@@ -228,6 +242,10 @@ class SLOController:
                     max(self.floor, self.admission_budget - self.step_down))
                 self.events.append((t, "degrade_admission",
                                     self.admission_budget))
+            elif self.depth_budget > self.floor + eps:
+                self.depth_budget = _quantize(
+                    max(self.floor, self.depth_budget - self.step_down))
+                self.events.append((t, "degrade_depth", self.depth_budget))
             elif self.inflight_budget > self.floor + eps:
                 self.inflight_budget = _quantize(
                     max(self.floor, self.inflight_budget - self.step_down))
@@ -253,13 +271,20 @@ class SLOController:
                 self._healthy += 1
                 if (self._healthy >= self.patience
                         and (self.admission_budget < 1.0 - eps
+                             or self.depth_budget < 1.0 - eps
                              or self.inflight_budget < 1.0 - eps)):
-                    # restore in reverse stage order: in-flight first
+                    # restore in reverse stage order: in-flight, depth,
+                    # then admission
                     if self.inflight_budget < 1.0 - eps:
                         self.inflight_budget = _quantize(min(
                             1.0, self.inflight_budget + self.step_up))
                         self.events.append((t, "restore_inflight",
                                             self.inflight_budget))
+                    elif self.depth_budget < 1.0 - eps:
+                        self.depth_budget = _quantize(min(
+                            1.0, self.depth_budget + self.step_up))
+                        self.events.append((t, "restore_depth",
+                                            self.depth_budget))
                     else:
                         self.admission_budget = _quantize(min(
                             1.0, self.admission_budget + self.step_up))
@@ -271,7 +296,8 @@ class SLOController:
         out["shed"] = shed
         out["escalate"] = escalate
         self.trajectory.append((t, ratio, self.admission_budget,
-                                self.inflight_budget, shed, escalate))
+                                self.depth_budget, self.inflight_budget,
+                                shed, escalate))
         return out
 
     def summary(self) -> Dict[str, object]:
@@ -280,6 +306,7 @@ class SLOController:
         for _t, kind, _v in self.events:
             kinds[kind] = kinds.get(kind, 0) + 1
         return {"admission_budget": self.admission_budget,
+                "depth_budget": self.depth_budget,
                 "inflight_budget": self.inflight_budget,
                 "shed_total": self.shed_total,
                 "evals": len(self.trajectory),

@@ -371,7 +371,8 @@ class SlotScheduler:
         return heads
 
     def admit(self, page_check=None,
-              cost_cap: Optional[float] = None
+              cost_cap: Optional[float] = None,
+              cost_scale: Optional[float] = None
               ) -> List[Tuple[int, RequestHandle]]:
         """Pop queued requests into free slots under the per-replica FLOP
         budget; returns [(slot, handle)] for the engine to prefill. Each
@@ -390,7 +391,13 @@ class SlotScheduler:
         ``cost_cap`` (optional) is the SLO controller's degraded admission
         budget: each admission is charged ``min(cost, cost_cap)``, the
         price of the degraded policy row the engine will actually solve
-        for it (stage-1 graceful degradation packs denser)."""
+        for it (stage-1 graceful degradation packs denser).
+
+        ``cost_scale`` (optional) is the controller's depth cap: depth
+        routing skips whole layers, so a request's FLOP cost is its
+        budget fraction TIMES the depth fraction — admission packs on
+        that composed cost, exactly what the engine reprices the slot to
+        after the prefill."""
         out: List[Tuple[int, RequestHandle]] = []
         used = [self.replica_used_cost(r) for r in range(self.n_replicas)]
         while True:
@@ -405,6 +412,8 @@ class SlotScheduler:
                 cost = entry.cost
                 if cost_cap is not None:
                     cost = max(MIN_COST, min(cost, float(cost_cap)))
+                if cost_scale is not None:
+                    cost = max(MIN_COST, cost * float(cost_scale))
                 cands = [r for r in range(self.n_replicas)
                          if self.free_slots_in(r)]
                 if page_check is not None:

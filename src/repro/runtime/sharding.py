@@ -328,6 +328,23 @@ def constrain_kv_cache(x, cfg):
         x, _fit_spec(attn_kv_spec(cfg, m), x.shape, m, relocate=True))
 
 
+def constrain_kv_mask(x, cfg):
+    """Pin a (B, L) ring-cache mask leaf (``valid`` / ``pos``) at its
+    decode WRITE sites — the per-layer KV-validity mask the elastic depth
+    router drives: a (slot, layer) the router skips writes no KV there, so
+    ``valid`` stays False and attention masks the lane branch-free. The
+    write is the same batch-indexed scatter as the K/V one, so GSPMD would
+    otherwise replicate the mask to the full global batch every decode
+    step. Shares ``cache_specs_tree``'s P(batch_axes, None) placement.
+    No-op outside a mesh context."""
+    m = active_mesh()
+    if m is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, _fit_spec(P(batch_axes(m), *([None] * (x.ndim - 1))),
+                     x.shape, m))
+
+
 def constrain_cache_tree(caches, cfg):
     """with_sharding_constraint every leaf of a serving cache pytree to its
     `cache_specs_tree` spec under the active mesh (no-op outside one) — the

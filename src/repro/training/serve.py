@@ -296,10 +296,12 @@ class ServingEngine:
         self._ngen = np.zeros((B,), np.int64)
         self._extras: dict = {}                   # handle.id -> extra inputs
         # per-slot budget bookkeeping for in-flight degradation: the budget
-        # the slot was ADMITTED at (None = engine default / base policy)
-        # and the budget currently APPLIED to its live policy row
+        # the slot was ADMITTED at (None = engine default / base policy),
+        # the budget currently APPLIED to its live policy row, and the
+        # controller depth cap applied to it (None = undegraded)
         self._slot_budget_key: list = [None] * B
         self._slot_applied_key: list = [None] * B
+        self._slot_applied_depth: list = [None] * B
         self.n_rejected = 0                       # shed under overload
         self.n_expired = 0                        # queue deadline passed
 
@@ -345,8 +347,10 @@ class ServingEngine:
         written values agrees — mode, solved budget, theta, and the KV
         storage dtype (sampling knobs don't touch K/V)."""
         b = self._effective_budget(req)
+        d = self._depth_cap()
         return (self.mode, None if b is None else round(float(b), 6),
-                round(float(self.theta), 6), self.kv_dtype)
+                round(float(self.theta), 6), self.kv_dtype,
+                None if d is None else round(float(d), 6))
 
     def paged_stats(self) -> dict:
         """Pool stats plus live-token page efficiency (host-side only)."""
@@ -478,19 +482,53 @@ class ServingEngine:
                 b = cap if b is None else min(float(b), cap)
         return b
 
-    def _policy_for(self, budget: Optional[float]) -> Optional[ElasticPolicy]:
+    def _depth_cap(self) -> Optional[float]:
+        """The controller's depth-stage cap (stage-2 graceful degradation:
+        whole-layer skips), honored only when the spec routes depth —
+        otherwise the knob has nothing to act on and is ignored."""
+        if (self.controller is None or self.spec is None
+                or not self.spec.depth_routed):
+            return None
+        return self.controller.depth_cap()
+
+    def _policy_for(self, budget: Optional[float],
+                    depth: Optional[float] = None) -> Optional[ElasticPolicy]:
+        """Solved policy row for (budget, depth-cap). ``depth`` further
+        caps ``depth_capacity`` below what the roofline solver chose for
+        the budget (the controller's depth degrade stage); rows are cached
+        per (budget, depth) key so repeat admissions never re-solve."""
         if not self._use_policy:
             return None
-        if budget is None:
+        if budget is None and depth is None:
             pol = self._base_policy
         else:
-            key = round(float(budget), 6)
+            key = (None if budget is None else round(float(budget), 6),
+                   None if depth is None else round(float(depth), 6))
             if key not in self._policy_cache:
-                self._policy_cache[key] = solve_budget(
-                    self.cfg, self.spec, key, theta=self.theta, static=True)
+                pol = (self._base_policy if budget is None else solve_budget(
+                    self.cfg, self.spec, key[0], theta=self.theta,
+                    static=True))
+                if depth is not None:
+                    cur = pol.depth_capacity
+                    dc = (min(float(cur), float(depth))
+                          if isinstance(cur, (int, float))
+                          else jnp.minimum(jnp.asarray(cur, jnp.float32),
+                                           jnp.float32(depth)))
+                    pol = pol.replace(depth_capacity=dc)
+                self._policy_cache[key] = pol
             pol = self._policy_cache[key]
         # f32 leaves: stable jit avals (no weak-type retraces)
         return jax.tree.map(lambda v: jnp.asarray(v, jnp.float32), pol)
+
+    @staticmethod
+    def _composed_cost(budget: Optional[float],
+                       depth: Optional[float]) -> float:
+        """Scheduler cost of a (budget, depth-cap) pair: the budget
+        fraction times the depth fraction — depth skips whole layers, so
+        the two compose multiplicatively, exactly like the roofline
+        solver's active-FLOP model."""
+        return min(1.0, (1.0 if budget is None else float(budget))
+                   * (1.0 if depth is None else float(depth)))
 
     def compile_counts(self) -> dict:
         """Jit-cache sizes — admissions at any mix of budgets, slots,
@@ -502,7 +540,8 @@ class ServingEngine:
                 "decode": self._step_fn._cache_size()}
 
     def entry_points(self, plen: int = 8,
-                     budget: Optional[float] = 0.5) -> dict:
+                     budget: Optional[float] = 0.5,
+                     depth: Optional[float] = None) -> dict:
         """The two jitted serving graphs with example args shaped exactly
         like a live admission/decode call — the contract surface
         ``repro.analysis`` lints (a pass that lowers these sees the same
@@ -511,7 +550,8 @@ class ServingEngine:
         drift from the real call signature."""
         prompt = np.arange(1, plen + 1, dtype=np.int32) \
             % max(2, self.cfg.vocab_size)
-        pol_row = self._policy_for(budget if self._use_policy else None)
+        pol_row = self._policy_for(budget if self._use_policy else None,
+                                   depth=depth)
         if self.kv_layout == "paged":
             ck = np.zeros((self.page_size,), np.int32)
             ck[:min(plen, self.page_size)] = prompt[:self.page_size]
@@ -536,7 +576,7 @@ class ServingEngine:
         bucket = None
         if (self._use_policy and self.mode == "train"
                 and self.spec.routing_impl == "ragged"):
-            bucket = ragged_bucket(pol_row, plen)
+            bucket = ragged_bucket(pol_row, plen, spec=self.spec)
         admit = EntryPoint(
             self._admit_fn,
             (self.params, self.rp, batch, self._caches, jnp.int32(0),
@@ -629,7 +669,8 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(prompt[None])}
         batch.update(self._extras.pop(handle.id, {}))
         b_eff = self._effective_budget(req)
-        pol_row = self._policy_for(b_eff)
+        d_eff = self._depth_cap()
+        pol_row = self._policy_for(b_eff, depth=d_eff)
         # ragged capacity bucket: static, resolved per admission from the
         # (host-concrete) policy row. Only top-k routing (train mode) uses
         # it — threshold (infer) prefill stays dense, so infer engines keep
@@ -640,7 +681,7 @@ class ServingEngine:
         bucket = None
         if (self._use_policy and self.mode == "train"
                 and self.spec.routing_impl == "ragged"):
-            bucket = ragged_bucket(pol_row, plen)
+            bucket = ragged_bucket(pol_row, plen, spec=self.spec)
         seed = int(req.seed) & 0xFFFFFFFF        # any python int -> uint32
         with self._mesh_ctx():
             tok0, self._caches, self._live_policy = self._admit_fn(
@@ -656,16 +697,24 @@ class ServingEngine:
         self._seeds[slot] = seed
         self._ngen[slot] = 0
         self._append(slot, handle, int(tok0))
-        self._note_admitted(slot, handle, b_eff)
+        self._note_admitted(slot, handle, b_eff, d_eff)
 
     def _note_admitted(self, slot: int, handle: RequestHandle,
-                       b_eff: Optional[float]) -> None:
-        """Record the admitted budget for in-flight degradation/restore,
-        the served-budget weight for goodput accounting, and the TTFT
-        sample for the controller."""
+                       b_eff: Optional[float],
+                       d_eff: Optional[float] = None) -> None:
+        """Record the admitted budget (and depth cap) for in-flight
+        degradation/restore, the served-budget weight for goodput
+        accounting, and the TTFT sample for the controller. The slot's
+        scheduler cost is re-priced to the COMPOSED budget x depth
+        fraction, so a depth-degraded replica's admission headroom grows
+        to match the FLOPs it actually spends."""
         self._slot_budget_key[slot] = b_eff
         self._slot_applied_key[slot] = b_eff
-        handle.budget_served = 1.0 if b_eff is None else float(b_eff)
+        self._slot_applied_depth[slot] = d_eff
+        cost = self._composed_cost(b_eff, d_eff)
+        handle.budget_served = cost
+        if d_eff is not None:
+            self.scheduler.reprice(slot, cost)
         if self.controller is not None and handle.ttft is not None:
             self.controller.record_ttft(
                 handle.tenant, self.scheduler.replica_of(slot),
@@ -725,7 +774,8 @@ class ServingEngine:
             row[matched + j] = pg
         self._table[slot] = row
         b_eff = self._effective_budget(req)
-        pol_row = self._policy_for(b_eff)
+        d_eff = self._depth_cap()
+        pol_row = self._policy_for(b_eff, depth=d_eff)
         seed = int(req.seed) & 0xFFFFFFFF
         trash = self.pool.trash_page(r)
         chunk_ids = list(range(matched, n_chunks)) or [n_chunks - 1]
@@ -752,7 +802,7 @@ class ServingEngine:
         self._ngen[slot] = 0
         self._admit_seq[slot] = next(self._admit_counter)
         self._append(slot, handle, int(tok0))
-        self._note_admitted(slot, handle, b_eff)
+        self._note_admitted(slot, handle, b_eff, d_eff)
         return True
 
     def _pick_victim(self, replica: int) -> Optional[int]:
@@ -837,16 +887,18 @@ class ServingEngine:
         return len(expired)
 
     def _apply_inflight(self) -> None:
-        """Stage-2 degradation: splice the controller's in-flight budget
-        into every active slot's live policy row (``set_row`` at a traced
-        index — the SAME compiled graphs, zero recompiles, floored by the
-        controller's floor) and re-price the slot's scheduler cost so the
-        freed FLOP headroom admits more requests. Restores splice the
+        """Stage-2/3 degradation: splice the controller's depth cap and
+        in-flight budget into every active slot's live policy row
+        (``set_row`` at a traced index — the SAME compiled graphs, zero
+        recompiles, floored by the controller's floor) and re-price the
+        slot's scheduler cost to the composed budget x depth fraction so
+        the freed FLOP headroom admits more requests. Restores splice the
         ADMITTED row back when the controller releases."""
         c = self.controller
         if c is None or self._live_policy is None:
             return
         tgt = c.inflight_budget
+        dcap = self._depth_cap()
         for s in np.nonzero(self._active)[0]:
             s = int(s)
             adm = self._slot_budget_key[s]
@@ -854,19 +906,20 @@ class ServingEngine:
                 want = tgt if adm is None else min(float(adm), tgt)
             else:
                 want = adm
-            if want == self._slot_applied_key[s]:
+            if (want == self._slot_applied_key[s]
+                    and dcap == self._slot_applied_depth[s]):
                 continue
-            row = self._policy_for(want)
+            row = self._policy_for(want, depth=dcap)
             with self._mesh_ctx():
                 self._live_policy = self._live_policy.set_row(
                     jnp.int32(s), row, floor=c.floor)
             self._slot_applied_key[s] = want
-            self.scheduler.reprice(s, 1.0 if want is None else float(want))
+            self._slot_applied_depth[s] = dcap
+            cost = self._composed_cost(want, dcap)
+            self.scheduler.reprice(s, cost)
             handle = self.scheduler.slots[s]
             if handle is not None:
-                handle.budget_served = min(
-                    handle.budget_served,
-                    1.0 if want is None else float(want))
+                handle.budget_served = min(handle.budget_served, cost)
 
     def _control(self) -> int:
         """One controller evaluation (rate-limited inside ``update``):
@@ -913,10 +966,12 @@ class ServingEngine:
         expired = self._expire()
         cap = (self.controller.admission_cap()
                if self.controller is not None else None)
+        dcap = self._depth_cap()
         if paged:
             admitted = []
             for slot, handle in self.scheduler.admit(
-                    page_check=self._page_check, cost_cap=cap):
+                    page_check=self._page_check, cost_cap=cap,
+                    cost_scale=dcap):
                 if self._admit_one_paged(slot, handle):
                     admitted.append((slot, handle))
                 else:
@@ -924,7 +979,7 @@ class ServingEngine:
                     self.scheduler.free(slot)
                     self.scheduler.requeue_front(handle, cost)
         else:
-            admitted = self.scheduler.admit(cost_cap=cap)
+            admitted = self.scheduler.admit(cost_cap=cap, cost_scale=dcap)
             for slot, handle in admitted:
                 self._admit_one(slot, handle)
         if paged:

@@ -75,17 +75,21 @@ def test_sharding_flags_unpinned_cache_scatter():
 def _paged_write_fixture(pin: bool):
     """A paged-pool append: per-slot scatter of one (K, Dh) row into the
     (n_pages, page_size, K, Dh) float pool at a dynamic (page, offset).
-    The int32 page-TABLE update and the bool pvalid write ride along — both
-    deliberately below SHARD-CACHE-WRITE's radar (integer/rank-2
-    bookkeeping; replication is cheap, pinning would add collectives)."""
+    The bool pvalid occupancy write rides along and — since the depth
+    router made it a per-step scatter target — needs its own pin (the
+    rank-2 branch of constrain_page_pool). Only the int32 page-TABLE
+    update stays below SHARD-CACHE-WRITE's radar (integer bookkeeping;
+    replication is cheap, pinning would add collectives)."""
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
 
     def append(pool, pvalid, table, pages, offs, new, ent):
         out = pool.at[pages, offs].set(new)
+        pv = pvalid.at[pages, offs].set(True)
         if pin:
             out = jax.lax.with_sharding_constraint(
                 out, NamedSharding(mesh, P(("data",), None, "model", None)))
-        pv = pvalid.at[pages, offs].set(True)      # bool rank-2: exempt
+            pv = jax.lax.with_sharding_constraint(
+                pv, NamedSharding(mesh, P(("data",), None)))
         tb = table.at[jnp.arange(2), 1].set(ent)   # int32 table: exempt
         return out, pv, tb
 
@@ -99,15 +103,50 @@ def _paged_write_fixture(pin: bool):
 
 
 def test_sharding_flags_unpinned_page_pool_write():
-    """The paged-KV append pattern: the FLOAT pool scatter must be pinned
-    (one finding when it is not); the page-table / pvalid bookkeeping
-    scatters never fire regardless."""
+    """The paged-KV append pattern: the FLOAT pool scatter and the bool
+    pvalid occupancy scatter must both be pinned (two findings when they
+    are not); the int32 page-table scatter never fires regardless."""
     finds = sharding_lint._cache_writes(
         _mini({"w": _paged_write_fixture(pin=False)}), "w")
     assert _rules(finds) == {"SHARD-CACHE-WRITE"}
-    assert len(finds) == 1               # table + pvalid stay silent
+    assert len(finds) == 2               # pool + pvalid; table stays silent
     assert sharding_lint._cache_writes(
         _mini({"w": _paged_write_fixture(pin=True)}), "w") == []
+
+
+def _mask_scatter_fixture(pin: bool):
+    """The ring KV-validity mask write the depth router performs each
+    decode step: a batch-indexed scatter of per-slot bits into the
+    long-lived (B, S) bool `valid` ring. Unpinned, GSPMD replicates the
+    whole bitmap per step — constrain_kv_mask exists to prevent exactly
+    this. The int32 `pos` ring update rides along (rank-1: exempt)."""
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+    def write(valid, pos, bits):
+        bi = jnp.arange(2)
+        out = valid.at[bi, pos].set(bits)
+        if pin:
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, P(("data",), None)))
+        np_ = pos.at[bi].set(pos + 1)              # int32 rank-1: exempt
+        return out, np_
+
+    return EntryPoint(write, (jnp.zeros((2, 16), bool),
+                              jnp.zeros((2,), jnp.int32),
+                              jnp.ones((2,), bool)), {})
+
+
+def test_sharding_flags_unpinned_mask_scatter():
+    """Golden fixture for the depth router's mask-leaf write sites: an
+    unpinned batch-indexed scatter into the (B, S) bool validity ring is
+    flagged; the constrain_kv_mask-style pinned twin is silent, and the
+    pos bookkeeping write never fires."""
+    finds = sharding_lint._cache_writes(
+        _mini({"w": _mask_scatter_fixture(pin=False)}), "w")
+    assert _rules(finds) == {"SHARD-CACHE-WRITE"}
+    assert len(finds) == 1               # pos stays silent
+    assert sharding_lint._cache_writes(
+        _mini({"w": _mask_scatter_fixture(pin=True)}), "w") == []
 
 
 # ------------------------------ host sync ------------------------------------

@@ -42,7 +42,7 @@ def _ctrl(**kw):
 
 # --------------------------------- unit --------------------------------------
 
-def test_degrade_ladder_admission_then_inflight_then_shed_then_escalate():
+def test_degrade_ladder_admission_depth_inflight_then_shed_then_escalate():
     c = _ctrl()
     t = 0.0
     # sustained violation: TTFT 5x over target
@@ -50,7 +50,13 @@ def test_degrade_ladder_admission_then_inflight_then_shed_then_escalate():
         c.record_ttft("default", 0, 500.0, t=t)
         c.update(t, queue_depth=0, capacity=4)
         t += 1.0
-    assert c.admission_budget == 0.25 and c.inflight_budget == 1.0
+    assert c.admission_budget == 0.25 and c.depth_budget == 1.0
+    for _ in range(3):                      # then the depth stage
+        c.record_ttft("default", 0, 500.0, t=t)
+        c.update(t, queue_depth=0, capacity=4)
+        t += 1.0
+    assert c.depth_budget == 0.25 and c.inflight_budget == 1.0
+    assert c.depth_cap() == 0.25
     for _ in range(3):                      # then the in-flight stage
         c.record_ttft("default", 0, 500.0, t=t)
         c.update(t, queue_depth=0, capacity=4)
@@ -63,8 +69,8 @@ def test_degrade_ladder_admission_then_inflight_then_shed_then_escalate():
     out = c.update(t, queue_depth=10, capacity=4)   # escalate_after=2
     assert out["escalate"] and c.should_escalate
     assert [k for _t, k, _v in c.events] == [
-        "degrade_admission"] * 3 + ["degrade_inflight"] * 3 + [
-        "shed", "shed", "escalate"]
+        "degrade_admission"] * 3 + ["degrade_depth"] * 3 + [
+        "degrade_inflight"] * 3 + ["shed", "shed", "escalate"]
     c.notify_remeshed()
     assert not c.should_escalate
 
@@ -72,6 +78,7 @@ def test_degrade_ladder_admission_then_inflight_then_shed_then_escalate():
 def test_hysteresis_band_holds_then_restores_inflight_first():
     c = _ctrl(patience=2)
     c.admission_budget = c.inflight_budget = 0.5
+    c.depth_budget = 0.75
     t = 0.0
     # inside the band (hysteresis <= ratio <= 1): hold, never restore
     for _ in range(5):
@@ -86,13 +93,15 @@ def test_hysteresis_band_holds_then_restores_inflight_first():
         c.update(t, queue_depth=0, capacity=4)
         t += 1.0
     assert (c.admission_budget, c.inflight_budget) == (0.5, 0.75)
-    for _ in range(6):
+    # 4 restores left (inflight x1, depth x1, admission x2), patience=2
+    for _ in range(8):
         c.record_ttft("default", 0, 10.0, t=t)
         c.update(t, queue_depth=0, capacity=4)
         t += 1.0
-    assert (c.admission_budget, c.inflight_budget) == (1.0, 1.0)
-    # restored all the way: admission_cap clears
-    assert c.admission_cap() is None
+    assert (c.admission_budget, c.depth_budget,
+            c.inflight_budget) == (1.0, 1.0, 1.0)
+    # restored all the way: both caps clear
+    assert c.admission_cap() is None and c.depth_cap() is None
 
 
 def test_queue_pressure_alone_degrades_and_samples_expire():
@@ -192,12 +201,14 @@ def test_recorded_trace_replays_bit_identical(monkeypatch):
     assert a.shed_total == b.shed_total
     # the trace actually crossed every edge worth reproducing
     kinds = {k for _t, k, _v in a.events}
-    assert {"degrade_admission", "degrade_inflight", "shed", "escalate",
-            "restore_inflight", "restore_admission"} <= kinds
+    assert {"degrade_admission", "degrade_depth", "degrade_inflight",
+            "shed", "escalate", "restore_inflight", "restore_depth",
+            "restore_admission"} <= kinds
     # saturation -> remesh fired exactly once, then recovery rearmed it
     assert sum(1 for _t, k, _v in a.events if k == "escalate") == 1
     assert not a.should_escalate
-    assert (a.admission_budget, a.inflight_budget) == (1.0, 1.0)
+    assert (a.admission_budget, a.depth_budget,
+            a.inflight_budget) == (1.0, 1.0, 1.0)
 
 
 # --------------------------- engine integration -------------------------------

@@ -1,0 +1,233 @@
+"""Elastic depth: per-token whole-layer skip routing (ISSUE 10).
+
+Covers the acceptance properties:
+  * depth budget 1.0 is the bit-exact teacher in train AND decode (the
+    IDENTITY fast path holds with the depth router live);
+  * composed depth x token budgets lower lowered FLOPs monotonically and
+    multiplicatively (hloprof — the cost the CI bench gate asserts on);
+  * the ragged depth execution path matches the dense rank-masked
+    reference, including mixed per-request (B,) depth budgets;
+  * staggered-slot decode == solo decode with per-layer KV-validity masks
+    (a slot that skipped a layer wrote NO KV there; the masks keep other
+    slots' attention exact) on BOTH cache layouts;
+  * compile_counts() stays {prefill: 1, decode: 1} while the SLO
+    controller degrades the depth budget live.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ElasticConfig
+from repro.configs.elasti_toy import toy_lm
+from repro.core.policy import (ElasticPolicy, ElasticSpec, ragged_bucket,
+                               spec_from_config)
+from repro.core.routing import IDENTITY_BUCKET
+from repro.launch.hloprof import lowered_flops
+from repro.models import forward, model_init, router_init
+from repro.training import GenRequest, ServingEngine
+from tests.conftest import f32
+
+DEPTH_KW = dict(mlp_token_capacity=0.5, mha_token_capacity=0.5,
+                depth_capacity=0.75, lora_rank=1)
+
+
+def _setup(key, s=24, **ecfg_kw):
+    cfg = f32(toy_lm())
+    ecfg = ElasticConfig(**ecfg_kw)
+    params = model_init(key, cfg, ecfg)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, ecfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, s), dtype=np.int32))}
+    return cfg, ecfg, params, rp, batch
+
+
+# --------------------------- bit-exact teacher -------------------------------
+
+def test_depth_budget_one_is_bit_exact_teacher_train(key):
+    cfg, ecfg, params, rp, batch = _setup(key, **DEPTH_KW)
+    spec = spec_from_config(ecfg)
+    assert spec.depth_routed
+    teacher, _ = forward(params, None, batch, cfg, None, mode="base")
+    for pol in (ElasticPolicy.uniform(1.0), ElasticPolicy.teacher()):
+        out, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                         policy=pol)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(teacher),
+                                   atol=1e-5)
+    # full budget still resolves the IDENTITY sentinel with depth routed...
+    assert ragged_bucket(ElasticPolicy.uniform(1.0), 24,
+                         spec=spec) == IDENTITY_BUCKET
+    out, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                     policy=jax.tree.map(jnp.asarray,
+                                         ElasticPolicy.uniform(1.0)),
+                     bucket=IDENTITY_BUCKET)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(teacher),
+                               atol=1e-5)
+    # ...but a partial DEPTH budget at full token budget must NOT: the
+    # block plan capacity composes multiplicatively (depth * token), so
+    # depth 0.5 lands on a half-size bucket, not the identity graph
+    part = ElasticPolicy.uniform(1.0).replace(depth_capacity=0.5)
+    assert ragged_bucket(part, 24, spec=spec) not in (IDENTITY_BUCKET, None)
+
+
+def test_depth_budget_one_is_bit_exact_teacher_decode(key):
+    cfg, ecfg, params, rp, _ = _setup(key, **DEPTH_KW)
+    rng = np.random.default_rng(2)
+    reqs = [GenRequest(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                       6, budget=1.0) for _ in range(2)]
+    base = ServingEngine(params, rp, cfg, ecfg, mode="base",
+                         batch_size=2, max_seq=24)
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer",
+                        batch_size=2, max_seq=24)
+    for got, want in zip(eng.generate(reqs), base.generate(reqs)):
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------ FLOP composition (hloprof) -------------------------
+
+def test_depth_composed_flops_monotone(key):
+    """Lowered FLOPs must track the depth budget, compose multiplicatively
+    with the token budget, and leave the dense reference flat."""
+    cfg = f32(toy_lm(vocab=256))
+    spec = ElasticSpec(mha_token_routed=True, mlp_token_routed=True,
+                       depth_routed=True)
+    params = model_init(key, cfg, spec)
+    rp = router_init(jax.random.fold_in(key, 1), cfg, spec)
+    batch = {"tokens": jnp.zeros((2, 256), jnp.int32)}
+
+    def flops_at(sp, depth, token):
+        pol = ElasticPolicy.uniform(token, static=True).replace(
+            depth_capacity=depth)
+        return lowered_flops(
+            lambda rp, b: forward(params, rp, b, cfg, sp, mode="train",
+                                  policy=pol)[0], rp, batch)
+
+    fl = {d: flops_at(spec, d, 1.0) for d in (1.0, 0.75, 0.5, 0.25)}
+    assert fl[1.0] > fl[0.75] > fl[0.5] > fl[0.25], fl
+    assert fl[0.5] <= 0.6 * fl[1.0], fl
+    # composition: depth x token multiplies into the plan capacity, so the
+    # composed cell sits strictly below either single knob once the product
+    # crosses a bucket boundary (0.5 x 0.5 = 0.25 -> the quarter bucket)
+    both = flops_at(spec, 0.5, 0.5)
+    assert both < fl[0.5]
+    assert both < flops_at(spec, 1.0, 0.5)
+    # the dense reference path stays flat — the gap depth exists to close
+    dense = dataclasses.replace(spec, routing_impl="dense_mask")
+    fd = {d: flops_at(dense, d, 1.0) for d in (1.0, 0.5)}
+    assert fd[0.5] > 0.95 * fd[1.0], fd
+
+
+# ------------------------- execution-path parity -----------------------------
+
+@pytest.mark.parametrize("depth", [0.4, 0.6, 0.75])
+def test_depth_ragged_matches_dense(key, depth):
+    cfg, ecfg, params, rp, batch = _setup(key, **DEPTH_KW)
+    spec = spec_from_config(ecfg)
+    dense = dataclasses.replace(spec, routing_impl="dense_mask")
+    pol = jax.tree.map(jnp.asarray,
+                       ElasticPolicy.uniform(0.8).replace(
+                           depth_capacity=depth))
+    s = batch["tokens"].shape[1]
+    l_r, _ = forward(params, rp, batch, cfg, spec, mode="train", policy=pol,
+                     bucket=ragged_bucket(pol, s, spec=spec))
+    l_d, _ = forward(params, rp, batch, cfg, dense, mode="train", policy=pol)
+    np.testing.assert_allclose(np.asarray(l_r), np.asarray(l_d), atol=1e-4)
+
+
+def test_depth_mixed_per_request_budgets_match_solo_rows(key):
+    """One (B,)-policy ragged batch with per-row DEPTH budgets reproduces
+    each row's own smaller-bucket compile exactly."""
+    cfg, ecfg, params, rp, batch = _setup(key, **DEPTH_KW)
+    spec = spec_from_config(ecfg)
+    s = batch["tokens"].shape[1]
+    pols = [ElasticPolicy.uniform(0.75).replace(depth_capacity=d)
+            for d in (0.5, 1.0)]
+    mixed = ElasticPolicy.stack(pols)
+    l_m, _ = forward(params, rp, batch, cfg, spec, mode="train",
+                     policy=mixed, bucket=ragged_bucket(mixed, s, spec=spec))
+    for i, pol in enumerate(pols):
+        row = jax.tree.map(jnp.asarray, pol)
+        l_i, _ = forward(params, rp, {"tokens": batch["tokens"][i:i + 1]},
+                         cfg, spec, mode="train", policy=row,
+                         bucket=ragged_bucket(row, s, spec=spec))
+        np.testing.assert_allclose(np.asarray(l_m[i:i + 1]),
+                                   np.asarray(l_i), atol=1e-4)
+
+
+# ------------------------------- serving -------------------------------------
+
+def _staggered_vs_solo(key, kv_layout, plen, **engine_kw):
+    cfg, ecfg, params, rp, _ = _setup(key, **DEPTH_KW)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+               for _ in range(4)]
+    reqs = [GenRequest(p, 6, budget=b)
+            for p, b in zip(prompts, (0.4, 0.7, 1.0, None))]
+    solo = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=2,
+                         max_seq=24, kv_layout=kv_layout, **engine_kw)
+    oracle = [solo.generate([r])[0] for r in reqs]
+    # staggered admissions: slots sit at different t AND different
+    # per-layer skip histories — each slot's per-layer KV-validity mask
+    # must keep its neighbors' attention exact
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=4,
+                        max_seq=24, kv_layout=kv_layout, **engine_kw)
+    h0 = eng.submit(reqs[0])
+    eng.step(); eng.step()            # r0 is 2 tokens in when r1 lands
+    h1 = eng.submit(reqs[1])
+    eng.step()
+    h2, h3 = eng.submit(reqs[2]), eng.submit(reqs[3])
+    handles = [h0, h1, h2, h3]
+    while not all(h.done for h in handles):
+        eng.step()
+    for h, o in zip(handles, oracle):
+        np.testing.assert_array_equal(np.asarray(h.output), o)
+    assert eng.compile_counts() == {"prefill": 1, "decode": 1}, \
+        eng.compile_counts()
+
+
+def test_depth_staggered_decode_matches_solo_ring(key):
+    _staggered_vs_solo(key, "ring", plen=8)
+
+
+def test_depth_staggered_decode_matches_solo_paged(key):
+    _staggered_vs_solo(key, "paged", plen=12, page_size=8)
+
+
+def test_depth_controller_degrades_live_with_flat_compiles(key):
+    """The degrade ladder's depth stage moves the live depth budget; new
+    admissions AND in-flight rows pick it up with zero recompiles, and
+    budget_served reflects the composed (budget x depth) cost."""
+    from repro.runtime.controller import SLOController, SLOTarget
+    cfg, ecfg, params, rp, _ = _setup(key, **DEPTH_KW)
+    ctrl = SLOController(targets={"default": SLOTarget(p95_ttft_ms=500.0)},
+                         floor=0.25)
+    eng = ServingEngine(params, rp, cfg, ecfg, mode="infer", batch_size=4,
+                        max_seq=24, controller=ctrl)
+    rng = np.random.default_rng(4)
+    reqs = [GenRequest(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                       8, budget=0.8) for _ in range(4)]
+    h0, h1 = eng.submit(reqs[0]), eng.submit(reqs[1])
+    eng.step(); eng.step()
+    # controller degrades depth mid-flight (what the ladder's depth stage
+    # does on a breach): in-flight rows splice, new admissions compose
+    ctrl.depth_budget = 0.5
+    eng.step()
+    h2, h3 = eng.submit(reqs[2]), eng.submit(reqs[3])
+    handles = [h0, h1, h2, h3]
+    while not all(h.done for h in handles):
+        eng.step()
+    assert eng.compile_counts() == {"prefill": 1, "decode": 1}, \
+        eng.compile_counts()
+    assert all(len(h.output) == 8 for h in handles)
+    # admissions after the degrade serve the composed cost
+    assert h2.budget_served == pytest.approx(0.8 * 0.5)
+    # restore: later admissions return to the full-depth cost
+    ctrl.depth_budget = 1.0
+    h4 = eng.submit(reqs[0])
+    while not h4.done:
+        eng.step()
+    assert h4.budget_served == pytest.approx(0.8)
+    assert eng.compile_counts() == {"prefill": 1, "decode": 1}

@@ -175,7 +175,7 @@ def _saturated_controller():
     """A controller already degraded to its floor and one eval away from
     asking for a remesh."""
     c = SLOController(floor=0.25, escalate_after=1, eval_interval_s=0.0)
-    c.admission_budget = c.inflight_budget = 0.25
+    c.admission_budget = c.depth_budget = c.inflight_budget = 0.25
     return c
 
 
